@@ -1,0 +1,17 @@
+"""Paper Fig 9: same as Fig 8 but every string unique (no repetition).
+
+Paper's punchline: for the baseline, dictionary encoding now *inflates*
+outputs (codes + no redundancy to remove), but SIPC reshares the
+dictionaries themselves and produces negligible output extremely fast —
+a brand-new reason to dictionary-encode."""
+
+from .common import Csv
+from .fig8_dict_repeats import bench
+
+
+def main():
+    bench(repeats=1, tag="fig9")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Roofline table: summarize every dry-run cell's three terms.
+
+Reads runs/dryrun/<arch>--<shape>--<mesh>/meta.json produced by
+``python -m repro.launch.dryrun --all --mesh both``.
+"""
+
+import json
+from pathlib import Path
+
+from .common import Csv
+
+RUNS = Path(__file__).resolve().parents[1] / "runs" / "dryrun"
+
+
+def main():
+    if not RUNS.is_dir():
+        Csv.add("roofline_table", 0.0, "no dry-run artifacts (run dryrun)")
+        return
+    for d in sorted(RUNS.iterdir()):
+        meta = d / "meta.json"
+        if not meta.exists():
+            continue
+        info = json.loads(meta.read_text())
+        r = info.get("roofline", {})
+        Csv.add(
+            f"roofline_{info['arch']}_{info['shape']}_{info['mesh']}",
+            r.get("step_time_bound_s", 0.0),
+            f"dom={r.get('dominant','?')};frac={r.get('roofline_fraction',0):.3f};"
+            f"c={r.get('compute_s',0)*1e3:.0f}ms;m={r.get('memory_s',0)*1e3:.0f}ms;"
+            f"x={r.get('collective_s',0)*1e3:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark harness: one function per paper figure/table.
+
+    PYTHONPATH=src python -m benchmarks.run [figure ...]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+import sys
+
+
+def main() -> None:
+    from . import (fig2_copy_latency, fig4_copy_avoidance, fig5_decache,
+                   fig6_resharing, fig7_depth, fig8_dict_repeats,
+                   fig9_dict_norepeats, fig10_eviction, roofline_table)
+    figures = {
+        "fig2": fig2_copy_latency.main,       # copy-avoidance latency
+        "fig4": fig4_copy_avoidance.main,     # KernelZero vs memory limit
+        "fig5": fig5_decache.main,            # shared deserialization
+        "fig6": fig6_resharing.main,          # resharing across 9 ops
+        "fig7": fig7_depth.main,              # deep add-column chains
+        "fig8": fig8_dict_repeats.main,       # dictionaries, repeats
+        "fig9": fig9_dict_norepeats.main,     # dictionaries, no repeats
+        "fig10": fig10_eviction.main,         # eviction mechanisms
+        "roofline": roofline_table.main,      # dry-run roofline summary
+    }
+    selected = sys.argv[1:] or list(figures)
+    print("name,us_per_call,derived")
+    for name in selected:
+        if name not in figures:
+            print(f"{name},0.0,UNKNOWN (choose from {sorted(figures)})")
+            continue
+        try:
+            figures[name]()
+        except Exception as e:  # keep the harness going
+            print(f"{name},0.0,ERROR:{e!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""The Zerrow training-input pipeline feeding many consumers.
+
+Two 'jobs' (train + eval) iterate the same shards concurrently: the
+DeCache deduplicates the deserialization (paper Fig 5), each batch is a
+zero-copy slice of the packed token column (paper Fig 6 'slice'), and the
+RM evicts under a memory cap without breaking either consumer.
+
+    PYTHONPATH=src python examples/zero_copy_pipeline.py
+"""
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import BufferStore, RMConfig, ResourceManager
+from repro.data.pipeline import (PipelineConfig, ZerrowDataPipeline,
+                                 make_text_shards)
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="zerrow-pipe-")
+    shards = make_text_shards(os.path.join(tmp, "corpus"), n_shards=3,
+                              rows_per_shard=3000)
+    store = BufferStore(swap_dir=os.path.join(tmp, "swap"))
+    rm = ResourceManager(store, RMConfig(memory_limit=64 << 20,
+                                         policy="adaptive"))
+    cfg = PipelineConfig(batch=4, seq_len=128)
+    train_pipe = ZerrowDataPipeline(shards, cfg, store=store, rm=rm)
+    eval_pipe = ZerrowDataPipeline(shards, cfg, store=store, rm=rm)
+
+    n_train = sum(b["tokens"].shape[0] * b["tokens"].shape[1]
+                  for b in train_pipe.batches(epochs=2))
+    n_eval = sum(b["tokens"].shape[0] * b["tokens"].shape[1]
+                 for b in eval_pipe.batches(epochs=1))
+
+    s = store.stats
+    print(f"train consumed {n_train} tokens, eval {n_eval} tokens")
+    print(f"shard loads (deserializations): {train_pipe.ex.load_runs} + "
+          f"{eval_pipe.ex.load_runs} for 3 shards x 3 passes")
+    print(f"DeCache hits: {rm.decache.hits}")
+    print(f"zero-copy transfers: {s.bytes_deanon >> 20} MB | "
+          f"reshared: {s.bytes_reshared >> 20} MB | "
+          f"copied: {s.bytes_copied >> 10} KB")
+    assert train_pipe.ex.load_runs + eval_pipe.ex.load_runs <= 3, \
+        "DeCache should deduplicate every re-load"
+    store.close()
+    print("shared deserialization across jobs: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""deepseek-67b — DeepSeek LLM 67B [arXiv:2401.02954; hf].
+
+Dense llama-arch: 95L, d_model 8192, 64 heads (GQA kv=8), d_ff 22016,
+vocab 102400.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-67b", family="dense",
+    n_layers=95, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=22016, vocab=102400, mlp="swiglu", rope_theta=10000.0,
+)

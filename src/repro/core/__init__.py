@@ -1,0 +1,35 @@
+"""Zerrow core: true zero-copy Arrow pipelines (the paper's contribution).
+
+Subsystems (paper §4.2):
+  arrow    — Arrow computational format (columns, batches, chunked tables)
+  buffers  — BufferStore: tmpfs analogue, cgroup charging, swap
+  deanon   — KernelZero: de-anonymization (ownership transfer, direct swap)
+  sipc     — Shared IPC: reference-passing streams, IPC inspection,
+             resharing, dictionary sharing
+  zarquet  — on-disk compressed columnar source format (Parquet stand-in)
+  decache  — shared deserialization cache
+  dag      — DAGs, node sandboxes, share wrapper
+  rm       — Resource Manager: admission, uncache/rollback/limitdrop/adaptive
+"""
+
+from .arrow import (ArrowType, Column, Field, RecordBatch, Schema, Table,
+                    BOOL, FLOAT32, FLOAT64, INT8, INT16, INT32, INT64,
+                    UINT8, UTF8, dict_of, pack_validity, unpack_validity)
+from .buffers import (PAGE, AnonRegion, BufferStore, Cgroup, OOMError,
+                      StoreFile, StoreStats, alloc_aligned)
+from .dag import DAG, NodeSpec, Sandbox
+from .deanon import KernelZero
+from .decache import DeCache
+from .rm import Executor, POLICIES, RMConfig, ResourceManager
+from .sipc import (AddressMap, BufRef, SipcMessage, SipcReader, SipcWriter)
+
+__all__ = [
+    "ArrowType", "Column", "Field", "RecordBatch", "Schema", "Table",
+    "BOOL", "FLOAT32", "FLOAT64", "INT8", "INT16", "INT32", "INT64",
+    "UINT8", "UTF8", "dict_of", "pack_validity", "unpack_validity",
+    "PAGE", "AnonRegion", "BufferStore", "Cgroup", "OOMError", "StoreFile",
+    "StoreStats", "alloc_aligned", "DAG", "NodeSpec", "Sandbox",
+    "KernelZero", "DeCache", "Executor", "POLICIES", "RMConfig",
+    "ResourceManager", "AddressMap", "BufRef", "SipcMessage", "SipcReader",
+    "SipcWriter",
+]

@@ -1,0 +1,219 @@
+"""Table transformations — the 'user code' run inside DAG nodes.
+
+Each op is written the way an Arrow-ecosystem library would write it:
+it computes over input buffers and returns a Table whose buffers are,
+wherever the semantics allow, *views* of the input buffers.  Whether those
+views are reshared (references) or copied is decided downstream by SIPC's
+IPC inspection — the op itself is unmodified, ordinary code (Goal G5).
+
+Op classes, matching paper Fig 6:
+  subtractive: drop_columns / select_columns, slice_rows  -> pure views
+  additive:    add_column, concat_tables                  -> new data only
+  fine-grained: filter_rows, sort_by                      -> copies, except
+               dictionaries (dictionary sharing) and reshare-friendly cases
+  rewriting:   upper (UTF-8 changes byte lengths; ASCII fast path can
+               reshare offsets — the paper's UTF-16 observation, applied)
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence, Union
+
+import numpy as np
+
+from .arrow import (Column, Field, RecordBatch, Schema, Table, UTF8,
+                    pack_validity, type_for_np)
+
+# --------------------------------------------------------------------------
+# subtractive ops (pure views)
+# --------------------------------------------------------------------------
+
+def select_columns(table: Table, names: Sequence[str]) -> Table:
+    idx = [table.schema.index(n) for n in names]
+    schema = Schema([table.schema.fields[i] for i in idx])
+    return Table([RecordBatch(schema, [b.columns[i] for i in idx])
+                  for b in table.batches])
+
+
+def drop_columns(table: Table, names: Sequence[str]) -> Table:
+    keep = [n for n in table.schema.names() if n not in set(names)]
+    return Table(select_columns(table, keep).batches)
+
+
+def slice_rows(table: Table, start: int, stop: int) -> Table:
+    """Row-slice across batches: every buffer is a view."""
+    out = []
+    pos = 0
+    for b in table.batches:
+        lo = max(start - pos, 0)
+        hi = min(stop - pos, b.num_rows)
+        if lo < hi:
+            out.append(RecordBatch(b.schema,
+                                   [c.slice(lo, hi) for c in b.columns]))
+        pos += b.num_rows
+    if not out:
+        out = [RecordBatch(table.schema,
+                           [c.slice(0, 0) for c in table.batches[0].columns])]
+    return Table(out)
+
+
+# --------------------------------------------------------------------------
+# additive ops (new data only)
+# --------------------------------------------------------------------------
+
+def add_column(table: Table, name: str, column: Union[Column, np.ndarray]
+               ) -> Table:
+    """Append a column; existing columns pass through by reference."""
+    if isinstance(column, np.ndarray):
+        column = Column.primitive(column)
+    assert column.length == table.num_rows
+    schema = Schema(list(table.schema.fields) + [Field(name, column.type)])
+    out, pos = [], 0
+    for b in table.batches:
+        piece = column.slice(pos, pos + b.num_rows)
+        out.append(RecordBatch(schema, list(b.columns) + [piece]))
+        pos += b.num_rows
+    return Table(out)
+
+
+def concat_tables(tables: Sequence[Table]) -> Table:
+    """Row-concatenation = batch concatenation: zero new data."""
+    schema = tables[0].schema
+    batches: List[RecordBatch] = []
+    for t in tables:
+        assert t.schema.equals(schema)
+        batches.extend(t.batches)
+    return Table(batches)
+
+
+# --------------------------------------------------------------------------
+# fine-grained-overlap ops (row granularity)
+# --------------------------------------------------------------------------
+
+def take(table: Table, indices: np.ndarray) -> Table:
+    """Global row gather; materializes (except dictionaries)."""
+    t = table.combine()
+    b = t.batches[0]
+    return Table.from_batch(t.schema, [c.take(indices) for c in b.columns])
+
+
+def filter_rows(table: Table, mask: Union[np.ndarray, Callable[[RecordBatch], np.ndarray]]
+                ) -> Table:
+    """Keep rows where mask is True.  Per-batch: codes/values copied,
+    dictionaries ride through by reference (dictionary sharing)."""
+    out, pos = [], 0
+    for b in table.batches:
+        m = mask(b) if callable(mask) else np.asarray(mask[pos:pos + b.num_rows])
+        idx = np.nonzero(m)[0]
+        out.append(RecordBatch(b.schema, [c.take(idx) for c in b.columns]))
+        pos += b.num_rows
+    return Table(out)
+
+
+def sort_by(table: Table, name: str, descending: bool = False) -> Table:
+    t = table.combine()
+    col = t.batches[0].column(name)
+    if col.type.is_utf8:
+        keys = np.array([col.get_bytes(i) for i in range(col.length)])
+        order = np.argsort(keys, kind="stable")
+    elif col.type.is_dict and col.dictionary.type.is_utf8:
+        d = col.dictionary
+        dk = np.array([d.get_bytes(i) for i in range(d.length)])
+        rank = np.empty(d.length, np.int64)
+        rank[np.argsort(dk, kind="stable")] = np.arange(d.length)
+        order = np.argsort(rank[col.values], kind="stable")
+    else:
+        order = np.argsort(col._logical(), kind="stable")
+    if descending:
+        order = order[::-1].copy()
+    return take(t, order)
+
+
+# --------------------------------------------------------------------------
+# rewriting op: upper-case (paper §5.3's counter-example)
+# --------------------------------------------------------------------------
+
+def upper(table: Table, name: str, assume_ascii: Optional[bool] = None) -> Table:
+    """Upper-case a utf8 column.
+
+    General UTF-8 path: byte lengths may change ('ß' -> 'SS'), so both the
+    values *and offsets* buffers are new — no resharing possible (paper).
+    ASCII fast path (beyond-paper): if all bytes < 0x80, lengths are
+    preserved; the offsets buffer passes through as a view and becomes
+    reshareable — the paper's UTF-16 observation realized for ASCII UTF-8.
+    """
+    j = table.schema.index(name)
+    out = []
+    for b in table.batches:
+        col = b.column(name)
+        assert col.type.is_utf8
+        lo, hi = int(col.offsets[0]), int(col.offsets[-1])
+        window = col.values[lo:hi]
+        ascii_ok = assume_ascii if assume_ascii is not None \
+            else (window.size == 0 or int(window.max()) < 0x80)
+        if ascii_ok:
+            vals = window.copy()
+            lower = (vals >= 0x61) & (vals <= 0x7A)
+            vals[lower] -= 0x20
+            if lo == 0 and hi == col.values.nbytes:
+                new = Column(UTF8, col.length, vals, offsets=col.offsets,
+                             validity=col.validity)   # offsets reshared!
+            else:
+                new = Column(UTF8, col.length, vals,
+                             offsets=col.offsets - lo, validity=col.validity)
+        else:
+            bs = [col.get_bytes(i).decode("utf-8").upper().encode("utf-8")
+                  for i in range(col.length)]
+            new = Column.from_strings(bs, validity=col.validity)
+        cols = list(b.columns)
+        cols[j] = new
+        out.append(RecordBatch(b.schema, cols))
+    return Table(out)
+
+
+# --------------------------------------------------------------------------
+# compute helpers used by the paper's workloads
+# --------------------------------------------------------------------------
+
+def sum_all_ints(table: Table) -> int:
+    """Reader-node workload of paper Fig 2."""
+    total = 0
+    for b in table.batches:
+        for c in b.columns:
+            if c.type.is_primitive and np.issubdtype(np.dtype(c.type.np_dtype),
+                                                     np.integer):
+                total += int(c.values.sum())
+    return total
+
+
+def add_columns_compute(table: Table, a: str, b: str, out_name: str,
+                        repeat: int = 1) -> Table:
+    """The Fig 7/10 'column-adding function': out = f(col_a, col_b) with a
+    tunable amount of compute (``repeat`` additions)."""
+    t0 = table
+    ca = t0.combine().batches[0].column(a).to_numpy()
+    cb = t0.combine().batches[0].column(b).to_numpy()
+    acc = ca + cb
+    for _ in range(repeat - 1):
+        acc = acc + cb
+    return add_column(table, out_name, Column.primitive(acc))
+
+
+def dict_encode(table: Table, names: Sequence[str]) -> Table:
+    """Dictionary-encode utf8 columns (what read_dictionary does at load)."""
+    name_set = set(names)
+    out = []
+    for b in table.batches:
+        cols = []
+        for f, c in zip(b.schema.fields, b.columns):
+            if f.name in name_set and c.type.is_utf8:
+                arr = np.array([c.get_bytes(i) for i in range(c.length)])
+                uniq, codes = np.unique(arr, return_inverse=True)
+                dic = Column.from_strings(list(uniq))
+                c = Column.dictionary_encoded(codes.astype(np.int32), dic,
+                                              validity=c.validity)
+            cols.append(c)
+        schema = Schema([Field(f.name, c.type)
+                         for f, c in zip(b.schema.fields, cols)])
+        out.append(RecordBatch(schema, cols))
+    return Table(out)

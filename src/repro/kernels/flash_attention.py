@@ -1,0 +1,128 @@
+"""Flash attention Pallas TPU kernel (causal / local-window, GQA).
+
+Tiling: grid (B, H, S/bq, T/bk) with the KV dimension innermost —
+sequential on TPU, so the online-softmax accumulators (m, l, acc) live in
+VMEM scratch and persist across KV steps.  Out-of-range blocks for
+causal/local masks are skipped with ``pl.when`` (the compute-roofline win
+over the XLA chunked path, which multiplies every block).
+
+GQA is handled in the index map: query head h reads KV head h // G — the
+KV tensors are never materialized per-query-head in HBM.
+
+Block shapes default to (128, 128): MXU-aligned, and the working set
+(q: bq×hd, k/v: bk×hd, scores: bq×bk, acc: bq×hd in f32) stays well under
+VMEM for hd ≤ 256.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  causal: bool, window: int, bq: int, bk: int, nk: int,
+                  scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_sc[...] = acc_sc[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    # block-level skip: tiles that the causal/local mask fully excludes do
+    # no compute at all (the roofline win over XLA chunked attention)
+    if causal or window:
+        run = jnp.asarray(True)
+        if causal:
+            run &= k_start <= q_start + bq - 1
+        if window:
+            run &= k_start + bk - 1 > q_start - window
+        pl.when(run)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_sc[...] /
+                       jnp.maximum(l_sc[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = True):
+    """q: (B, S, H, hd); k, v: (B, T, KV, hd) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    nq, nk = S // bq, T // bk
+    scale = hd ** -0.5
+
+    # layout: (B, H, S, hd) blocks
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+
+    kernel = functools.partial(_flash_kernel, causal=causal, window=window,
+                               bq=bq, bk=bk, nk=nk, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),      # running max
+            pltpu.VMEM((bq, 1), jnp.float32),      # running denom
+            pltpu.VMEM((bq, hd), jnp.float32),     # running accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.swapaxes(1, 2)

@@ -1,0 +1,57 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernel body runs in Python for
+validation) and False on TPU.  Every wrapper has a pure-jnp oracle in
+ref.py; tests sweep shapes/dtypes and assert allclose against it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention as _flash
+from .rglru_scan import rglru_pallas as _rglru
+from .take_gather import dict_decode as _dict_decode
+from .take_gather import take_rows as _take_rows
+from .wkv6 import wkv6_pallas as _wkv6
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    return not on_tpu()
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128):
+    return _flash(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+                  interpret=default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bw"))
+def rglru_scan(a, b, h0=None, *, chunk: int = 256, bw: int = 512):
+    return _rglru(a, b, h0, chunk=chunk, bw=bw,
+                  interpret=default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r, k, v, w, u, state=None, *, chunk: int = 16):
+    return _wkv6(r, k, v, w, u, state, chunk=chunk,
+                 interpret=default_interpret())
+
+
+@jax.jit
+def take_rows(values, indices):
+    return _take_rows(values, indices, interpret=default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def dict_decode(codes, dictionary, *, bm: int = 256):
+    return _dict_decode(codes, dictionary, bm=bm,
+                        interpret=default_interpret())

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Naive full-matrix attention.  q: (B,S,H,hd); k,v: (B,T,KV,hd)."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bskgh,btkh->bskgt", qg, k.astype(jnp.float32))
+    s = s * (hd ** -0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bskgt,btkh->bskgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def rglru_ref(a, b, h0=None):
+    """Sequential linear recurrence h_t = a_t*h_{t-1} + b_t.
+    a, b: (B,S,W) float32.  Returns (h (B,S,W), h_last (B,W))."""
+    B, S, W = a.shape
+    h = jnp.zeros((B, W), jnp.float32) if h0 is None else h0
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    h_last, hs = jax.lax.scan(step, h, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1), h_last
+
+
+def wkv6_ref(r, k, v, w, u, state=None):
+    """Sequential WKV6: o_t = r·(diag(u) k v^T + S);  S' = diag(w) S + k v^T.
+    r,k,v,w: (B,S,H,N); u: (H,N); state: (B,H,N,N)."""
+    B, S, H, N = r.shape
+    f32 = jnp.float32
+    if state is None:
+        state = jnp.zeros((B, H, N, N), f32)
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp                       # (B,H,N)
+        kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        o = jnp.einsum("bhn,bhnm->bhm", rt, st + u[None, :, :, None] * kv)
+        st = st * wt[..., None] + kv
+        return st, o
+    seq = tuple(a.astype(f32).swapaxes(0, 1) for a in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state, seq)
+    return outs.swapaxes(0, 1).astype(r.dtype), state
+
+
+def take_rows_ref(values, indices):
+    """Row gather: out[i] = values[indices[i]].  values: (R, W)."""
+    return jnp.take(values, indices, axis=0)
+
+
+def dict_decode_ref(codes, dictionary):
+    """Dictionary decode: out[i] = dictionary[codes[i]]."""
+    return jnp.take(dictionary, codes, axis=0)

@@ -1,0 +1,106 @@
+"""WKV-6 (RWKV 'Finch') chunked Pallas TPU kernel.
+
+State S ∈ R^{N×N} per (batch, head); grid (B, H, S/chunk) with chunks
+innermost so the state lives in VMEM scratch across sequential steps.
+Within a chunk the three contributions are MXU matmuls:
+
+    out = (r ⊙ d_in) @ S              carried state
+        + tril((r ⊙ d_in) @ (k ⊙ d_k⁻¹)ᵀ, -1) @ v      intra-chunk
+        + diag(rᵀ(u ⊙ k)) @ v                          bonus term
+    S'  = d_total ⊙ S + (k ⊙ d_tail)ᵀ @ v
+
+d_* are cumulative-decay factors; the decay floor (log w ≥ -4, enforced in
+the model) bounds every exponent by 4·chunk so chunk ≤ 16 stays in f32
+range — same scheme as the jnp chunked path in models/rwkv6.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                 o_ref, sout_ref, state, *, chunk: int, nchunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)     # (C, N)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)        # (1, N) -> broadcast
+    C, N = r.shape
+
+    logw = jnp.log(jnp.maximum(w, 1e-8))
+    cum = jnp.cumsum(logw, axis=0)
+    cum_excl = cum - logw
+    d_in = jnp.exp(cum_excl)                                 # (C, N)
+    st = state[...]
+
+    dot = functools.partial(jax.lax.dot_general,
+                            preferred_element_type=jnp.float32)
+    out_state = dot(r * d_in, st, (((1,), (0,)), ((), ())))
+    k_scaled = k * jnp.exp(-cum)
+    A = dot(r * d_in, k_scaled, (((1,), (1,)), ((), ())))    # (C, C)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    A = jnp.where(tri, A, 0.0)
+    out_intra = dot(A, v, (((1,), (0,)), ((), ())))
+    diag = jnp.sum(r * (u * k), axis=1, keepdims=True)       # (C, 1)
+    o_ref[0, 0] = (out_state + out_intra + diag * v).astype(o_ref.dtype)
+
+    d_total = jnp.exp(cum[-1])                               # (N,)
+    k_tail = k * jnp.exp(cum[-1][None, :] - cum)
+    state[...] = st * d_total[:, None] + \
+        dot(k_tail, v, (((0,), (0,)), ((), ())))
+
+    @pl.when(ci == nchunks - 1)
+    def _fin():
+        sout_ref[0, 0] = state[...]
+
+
+def wkv6_pallas(r, k, v, w, u, state=None, *, chunk: int = 16,
+                interpret: bool = True):
+    """r,k,v,w: (B,S,H,N); u: (H,N); state: (B,H,N,N) f32.
+    Returns (out (B,S,H,N), final_state (B,H,N,N))."""
+    B, S, H, N = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nchunks = S // chunk
+
+    # layout: (B, H, S, N)
+    rt, kt, vt, wt = (x.swapaxes(1, 2) for x in (r, k, v, w))
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk, nchunks=nchunks)
+    out, s_out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, N), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, N, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, N, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, N), r.dtype),
+            jax.ShapeDtypeStruct((B, H, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, wt, u, state)
+    return out.swapaxes(1, 2), s_out

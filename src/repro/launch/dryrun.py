@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# 512 host devices let jax.make_mesh build the production meshes (16x16
+# single-pod, 2x16x16 multi-pod) on this CPU-only container.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell and record memory/cost/collective artifacts for the roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+A cell SUCCEEDS when ``.lower().compile()`` completes; its
+``memory_analysis()`` (bytes/device) and ``cost_analysis()`` are printed
+and saved under runs/dryrun/<arch>--<shape>--<mesh>/ together with the
+optimized HLO (gzipped) that launch/roofline.py consumes.
+"""
+
+import argparse
+import gzip
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, SHAPES_BY_NAME, get_arch, shape_applicable
+from ..models.api import ModelAPI
+from ..sharding.partition import (DEFAULT_RULES, ShardingRules,
+                                  logical_to_spec, shardings_for_tree,
+                                  use_mesh)
+from ..train.trainstep import init_state, make_train_step, state_axes
+from .mesh import make_named_mesh
+from . import roofline as rl
+
+RUNS = Path(os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    Path(__file__).resolve().parents[3] / "runs" / "dryrun"))
+
+
+def count_params(api) -> int:
+    import math
+    shapes = jax.eval_shape(lambda: api.model.init(jax.random.key(0)))
+    return sum(math.prod(s.shape) for s in jax.tree.leaves(shapes))
+
+
+def active_params(api, total: int) -> int:
+    cfg = api.cfg
+    if not cfg.n_experts:
+        return total
+    per_expert = 3 * cfg.d_model * cfg.d_ff
+    inactive = cfg.n_layers * (cfg.n_experts - cfg.top_k) * per_expert
+    return total - inactive
+
+
+def auto_plan(arch, shape, mesh):
+    """Pick grad-accumulation count + activation sharding so the saved
+    remat working set (~6 B/elem: bf16 stack + the f32 backward copy)
+    stays under ~4 GB/chip.  Serving shapes use SERVE_RULES (weights
+    replicated over 'data', KV cache length-sharded over 'model')."""
+    if shape.kind != "train":
+        from ..sharding.partition import SERVE_BIG_RULES, SERVE_RULES
+        mp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+        if arch.param_count() * 2 / mp > 8e9:     # bf16 weights vs 16G HBM
+            return 1, SERVE_BIG_RULES
+        return 1, SERVE_RULES
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    mp = sizes.get("model", 1)
+    budget = 4e9
+    L = arch.n_layers + arch.encoder_layers
+    max_accum = max(shape.global_batch // dp, 1)
+    accum = 1
+    def carry(acc, sp):
+        tokens_dev = shape.global_batch * shape.seq_len / dp / acc
+        return L * tokens_dev * arch.d_model * 6 / (mp if sp else 1)
+    while carry(accum, False) > budget and accum < max_accum:
+        accum *= 2
+    if carry(accum, False) <= budget:
+        return accum, DEFAULT_RULES
+    from ..sharding.partition import ACT_SP_RULES
+    return accum, ACT_SP_RULES
+
+
+def lower_cell(arch_name: str, shape_name: str, mesh_name: str,
+               *, rules: ShardingRules = None,
+               compress_grads: bool = False, save: bool = True,
+               attention_impl: str = None, accum: int = None,
+               cast_bf16: bool = False, kv_int8: bool = False):
+    """Returns (ok, info-dict)."""
+    import dataclasses
+    arch = get_arch(arch_name)
+    if attention_impl:
+        arch = dataclasses.replace(arch, attention_impl=attention_impl)
+    if kv_int8:
+        arch = dataclasses.replace(arch, kv_cache_dtype="int8")
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = shape_applicable(arch, shape)
+    if not ok:
+        return True, {"skipped": why}
+    mesh = make_named_mesh(mesh_name)
+    auto_acc, auto_rules = auto_plan(arch, shape, mesh)
+    if accum is None:
+        accum = auto_acc
+    if rules is None:
+        rules = auto_rules
+    api = ModelAPI(arch)
+    t0 = time.time()
+    with use_mesh(mesh, rules):
+        if shape.kind == "train":
+            lowered = _lower_train(api, shape, mesh, rules, compress_grads,
+                                   accum, cast_bf16)
+        elif shape.kind == "prefill":
+            lowered = _lower_prefill(api, shape, mesh, rules)
+        else:
+            lowered = _lower_decode(api, shape, mesh, rules)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    print(f"[{arch_name} × {shape_name} × {mesh_name}] "
+          f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    print(" ", mem)
+    print("  cost:", {k: cost[k] for k in ("flops", "bytes accessed")
+                      if k in cost})
+
+    total = count_params(api)
+    info = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "chips": mesh.devices.size, "accum": accum,
+        "bf16_params": cast_bf16,
+        "act_sp": dict(rules.rules).get("act_seq") is not None,
+        "lower_s": t_lower, "compile_s": t_compile,
+        "params": total, "active_params": active_params(api, total),
+        "arg_bytes_per_device": mem.argument_size_in_bytes,
+        "temp_bytes_per_device": mem.temp_size_in_bytes,
+        "output_bytes_per_device": mem.output_size_in_bytes,
+        "alias_bytes_per_device": mem.alias_size_in_bytes,
+        "cost_flops": cost.get("flops", 0.0),
+        "cost_bytes": cost.get("bytes accessed", 0.0),
+    }
+    hlo = compiled.as_text()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    roof = rl.roofline_report(
+        hlo, chips=mesh.devices.size, arch=arch, shape=shape,
+        n_params=total, n_active=info["active_params"],
+        cost_analysis=cost, mp=sizes.get("model", 1),
+        dp=sizes.get("data", 1) * sizes.get("pod", 1), accum=accum)
+    info["roofline"] = roof
+    print(f"  roofline: compute {roof['compute_s']*1e3:.2f}ms "
+          f"memory {roof['memory_s']*1e3:.2f}ms "
+          f"collective {roof['collective_s']*1e3:.2f}ms "
+          f"-> {roof['dominant']}-bound "
+          f"(useful-FLOP {roof['useful_flop_fraction']:.2f}, "
+          f"roofline-frac {roof['roofline_fraction']:.3f})")
+
+    if save:
+        d = RUNS / f"{arch_name}--{shape_name}--{mesh_name}"
+        d.mkdir(parents=True, exist_ok=True)
+        with gzip.open(d / "hlo.txt.gz", "wt") as f:
+            f.write(hlo)
+        (d / "meta.json").write_text(json.dumps(info, indent=1,
+                                                default=float))
+        (d / "memory.txt").write_text(str(mem))
+        (d / "cost.json").write_text(json.dumps(dict(cost), default=float))
+    return True, info
+
+
+def _lower_train(api, shape, mesh, rules, compress_grads, accum=1,
+                 cast_bf16=False):
+    step = make_train_step(api, mesh=mesh, grad_compression=compress_grads,
+                           accum=accum, cast_bf16=cast_bf16)
+    st_axes = state_axes(api, grad_compression=compress_grads)
+    state_spec = jax.eval_shape(
+        lambda: init_state(api, jax.random.key(0),
+                           grad_compression=compress_grads))
+    st_sh = shardings_for_tree(st_axes, mesh, rules, state_spec)
+    batch_spec = api.input_specs(shape)
+    b_sh = shardings_for_tree(api.input_axes(shape), mesh, rules, batch_spec)
+    jf = jax.jit(step, in_shardings=(st_sh, b_sh), donate_argnums=(0,))
+    return jf.lower(state_spec, batch_spec)
+
+
+def _serve_param_specs(api):
+    """Serving runs bf16 weights (model code casts at use anyway)."""
+    spec = jax.eval_shape(lambda: api.model.init(jax.random.key(0)))
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating)
+            else s.dtype), spec)
+
+
+def _lower_prefill(api, shape, mesh, rules):
+    params_spec = _serve_param_specs(api)
+    p_sh = shardings_for_tree(api.model.param_axes(), mesh, rules,
+                              params_spec)
+    batch_spec = api.input_specs(shape)
+    b_sh = shardings_for_tree(api.input_axes(shape), mesh, rules, batch_spec)
+    fn = lambda p, b: api.prefill(p, b, shape)
+    jf = jax.jit(fn, in_shardings=(p_sh, b_sh))
+    return jf.lower(params_spec, batch_spec)
+
+
+def _lower_decode(api, shape, mesh, rules):
+    params_spec = _serve_param_specs(api)
+    p_sh = shardings_for_tree(api.model.param_axes(), mesh, rules,
+                              params_spec)
+    batch_spec = api.input_specs(shape)
+    b_sh = shardings_for_tree(api.input_axes(shape), mesh, rules, batch_spec)
+    cache_spec = api.cache_specs(shape)
+    c_sh = shardings_for_tree(api.cache_axes(), mesh, rules, cache_spec)
+    jf = jax.jit(api.serve_step, in_shardings=(p_sh, b_sh, c_sh),
+                 donate_argnums=(2,))   # donated in-place cache update
+    return jf.lower(params_spec, batch_spec, cache_spec)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--attention-impl", default=None)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--bf16-params", action="store_true")
+    ap.add_argument("--act-sp", action="store_true")
+    ap.add_argument("--fsdp-only", action="store_true")
+    ap.add_argument("--kv-int8", action="store_true")
+    args = ap.parse_args()
+
+    rules = None          # auto (per-cell plan)
+    if args.seq_parallel:
+        from ..sharding.partition import SP_RULES
+        rules = SP_RULES
+    if args.act_sp:
+        from ..sharding.partition import ACT_SP_RULES
+        rules = ACT_SP_RULES
+    if args.fsdp_only:
+        from ..sharding.partition import FSDP_RULES
+        rules = FSDP_RULES
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(SHAPES_BY_NAME) if (args.all or not args.shape) \
+        else [args.shape]
+
+    results, failures = [], []
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                try:
+                    ok, info = lower_cell(
+                        a, s, m, rules=rules,
+                        compress_grads=args.compress_grads,
+                        attention_impl=args.attention_impl,
+                        accum=args.accum, cast_bf16=args.bf16_params,
+                        kv_int8=args.kv_int8)
+                    if "skipped" in info:
+                        print(f"[{a} × {s} × {m}] {info['skipped']}")
+                    results.append(info)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((a, s, m, repr(e)))
+    print(f"\n== dry-run: {len(results)} cells ok, "
+          f"{len(failures)} failed ==")
+    for f in failures:
+        print("  FAIL:", f)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

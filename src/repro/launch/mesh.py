@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Importing this module never touches jax device state; call the functions.
+  single-pod: (16, 16)        ("data", "model")   = 256 chips (one v5e pod)
+  multi-pod:  (2, 16, 16)     ("pod", "data", "model") = 512 chips
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(devices: int, *, model_parallel: int = 0):
+    """Best-effort mesh for an arbitrary device count (tests, smoke)."""
+    mp = model_parallel or max(1, min(4, devices))
+    while devices % mp:
+        mp -= 1
+    return jax.make_mesh(
+        (devices // mp, mp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+MESH_NAMES = ("single", "multi")
+
+
+def make_named_mesh(name: str):
+    assert name in MESH_NAMES, name
+    return make_production_mesh(multi_pod=(name == "multi"))

@@ -1,0 +1,51 @@
+"""Recompute roofline reports from saved dry-run HLO artifacts (no
+recompilation — used when the analyzer itself improves).
+
+    PYTHONPATH=src python -m repro.launch.reanalyze [dir ...]
+"""
+
+import gzip
+import json
+import sys
+from pathlib import Path
+
+from ..configs import SHAPES_BY_NAME, get_arch
+from . import roofline as rl
+
+
+def reanalyze_dir(root: Path) -> None:
+    for d in sorted(root.iterdir()):
+        meta_p = d / "meta.json"
+        hlo_p = d / "hlo.txt.gz"
+        if not (meta_p.exists() and hlo_p.exists()):
+            continue
+        info = json.loads(meta_p.read_text())
+        arch = get_arch(info["arch"])
+        shape = SHAPES_BY_NAME[info["shape"]]
+        chips = info["chips"]
+        mp = 16
+        dp = chips // mp
+        with gzip.open(hlo_p, "rt") as f:
+            hlo = f.read()
+        roof = rl.roofline_report(
+            hlo, chips=chips, arch=arch, shape=shape,
+            n_params=info["params"], n_active=info["active_params"],
+            mp=mp, dp=dp, accum=info.get("accum", 1))
+        info["roofline"] = roof
+        promo = rl.cpu_promotion_bytes(hlo)
+        info["cpu_promotion_bytes"] = promo
+        info["temp_tpu_estimate"] = max(
+            info["temp_bytes_per_device"] - promo, 0)
+        meta_p.write_text(json.dumps(info, indent=1, default=float))
+        print(f"{d.name}: {roof['dominant']}-bound "
+              f"c={roof['compute_s']*1e3:.0f}ms "
+              f"m={roof['memory_s']*1e3:.0f}ms "
+              f"x={roof['collective_s']*1e3:.0f}ms "
+              f"frac={roof['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    dirs = [Path(p) for p in sys.argv[1:]] or \
+        [Path(__file__).resolve().parents[3] / "runs" / "dryrun"]
+    for d in dirs:
+        reanalyze_dir(d)

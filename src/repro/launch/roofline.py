@@ -1,0 +1,436 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e target).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs_per_chip    / PEAK_FLOPS      (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_chip    / HBM_BW          (819 GB/s)
+    collective = collective_bytes/chip / ICI_BW          (~50 GB/s/link)
+
+FLOPs and collective bytes come from walking the optimized HLO text —
+including *while-loop bodies multiplied by their trip counts* (XLA's own
+cost analysis counts a scanned layer once; we scan over layers, so this
+correction is what makes 96-layer models report honest numbers).  Ring
+accounting for collectives: all-reduce moves 2·(n-1)/n bytes/chip,
+all-gather/reduce-scatter/all-to-all (n-1)/n, permute 1.
+
+An independent analytic model (6·N·D dense / 6·N_active·D MoE + exact
+param/KV-cache byte counts) cross-checks every cell; both are reported.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+# -- hardware constants (TPU v5e) -------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (used: 1 link per axis hop)
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = re.compile(
+    r"(?:to_apply|body|condition|branch_computations|called_computations)="
+    r"[{]?%?([\w.\-, %]+)[}]?")
+
+
+def _parse_shape(s: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(s)
+    if not m:
+        return "f32", []
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return m.group(1), dims
+
+
+def _nbytes(dtype: str, dims: List[int]) -> int:
+    n = DTYPE_BYTES.get(dtype, 4)
+    for d in dims:
+        n *= d
+    return n
+
+
+def _all_shapes(expr: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(expr):
+        dims = [int(d) for d in m.group(2).split(",") if d] \
+            if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    hbm_bytes: float = 0.0
+    calls: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
+    # (computation_name, multiplier)
+
+
+class HloAnalyzer:
+    """Walks optimized HLO text computation-by-computation."""
+
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[str]] = {}
+        self.entry: Optional[str] = None
+        self._split(hlo_text)
+        # symbol table: instruction name -> list of (dtype, dims) of its
+        # result (tuples give several entries).  Operands are printed
+        # without shapes in optimized HLO, so dot contraction sizes must be
+        # resolved through this table.
+        self.shape_of: Dict[str, List[Tuple[str, List[int]]]] = {}
+        self.defs: Dict[str, str] = {}
+        for lines in self.comps.values():
+            for line in lines:
+                mi = _INSTR_RE.match(line)
+                if not mi:
+                    continue
+                expr = mi.group(2)
+                lhs = expr.split("(")[0] if "(" in expr else expr
+                self.shape_of[mi.group(1)] = _all_shapes(lhs)
+                self.defs[mi.group(1)] = line.strip()
+        self.stats: Dict[str, CompStats] = {}
+        for name in self.comps:
+            self.stats[name] = self._analyze(name)
+        self._total_cache: Dict[str, CompStats] = {}
+
+    # -- parsing ------------------------------------------------------------
+    def _split(self, text: str) -> None:
+        """HLO text: computation headers start at column 0 (optionally
+        'ENTRY '), instructions are indented."""
+        cur = None
+        for line in text.splitlines():
+            if not line:
+                continue
+            if not line[0].isspace():
+                m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+                if m and "{" in line:
+                    cur = m.group(1)
+                    self.comps[cur] = []
+                    if line.startswith("ENTRY"):
+                        self.entry = cur
+                continue
+            if cur is not None:
+                if line.strip() == "}":
+                    cur = None
+                else:
+                    self.comps[cur].append(line)
+
+    def _trip_count(self, cond_name: str) -> int:
+        """Largest integer constant in the loop condition (heuristic; scan
+        conditions compare the induction variable with the trip count)."""
+        best = 1
+        for line in self.comps.get(cond_name, []):
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                best = max(best, int(m.group(1)))
+        return best
+
+    def _analyze(self, name: str) -> CompStats:
+        st = CompStats()
+        for line in self.comps[name]:
+            mi = _INSTR_RE.match(line)
+            if not mi:
+                continue
+            expr = mi.group(2)
+            opm = re.match(r"(?:\w+\[[\d,]*\]\s*|\([^=]*\)\s*)?(\w[\w\-]*)\(",
+                           expr)
+            shapes = _all_shapes(expr)
+            if not shapes:
+                continue
+            out_dtype, out_dims = shapes[0]
+            op = None
+            for cand in ("dot", "convolution", "while", "fusion", "call",
+                         "conditional", "custom-call") + COLLECTIVES:
+                if re.search(rf"\b{re.escape(cand)}\(", expr):
+                    op = cand
+                    break
+            if op is None:
+                continue
+            # shapes to the LEFT of the op token are the result type(s)
+            opm2 = re.search(rf"\b{re.escape(op)}\(", expr)
+            out_shapes = _all_shapes(expr[:opm2.start()]) if opm2 else \
+                shapes[:1]
+            if op == "dot":
+                st.flops += self._dot_flops(expr, out_shapes)
+                st.hbm_bytes += self._dot_bytes(expr, out_shapes)
+            elif op == "convolution":
+                st.flops += 2 * _nbytes("s8", out_dims)  # rough lower bound
+            elif op in COLLECTIVES:
+                payload = self._coll_payload(op, expr, out_shapes)
+                if payload and self._is_promoted(op, expr):
+                    payload /= 2
+                st.coll_bytes += payload
+                st.coll_by_kind[op] = st.coll_by_kind.get(op, 0) + payload
+                st.hbm_bytes += 2 * sum(_nbytes(dt, dm)
+                                        for dt, dm in out_shapes)
+            elif op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", expr)
+                mc = re.search(r"condition=%?([\w.\-]+)", expr)
+                if mb:
+                    trips = self._trip_count(mc.group(1)) if mc else 1
+                    st.calls.append((mb.group(1), float(trips)))
+            elif op in ("fusion", "call", "conditional", "custom-call"):
+                mto = re.search(r"(?:to_apply|calls)=%?([\w.\-]+)", expr)
+                if mto and mto.group(1) in self.comps:
+                    st.calls.append((mto.group(1), 1.0))
+                if op == "fusion":
+                    st.hbm_bytes += sum(_nbytes(dt, dm)
+                                        for dt, dm in shapes)
+        return st
+
+    def _dot_operands(self, expr: str) -> List[List[Tuple[str, List[int]]]]:
+        mo = re.search(r"\bdot\(([^)]*)\)", expr)
+        if not mo:
+            return []
+        names = [a.strip().lstrip("%") for a in mo.group(1).split(",")]
+        return [self.shape_of.get(n, []) for n in names]
+
+    def _dot_flops(self, expr: str, out_shapes) -> float:
+        # 2 × output elements × contraction size (from the lhs operand's
+        # shape, resolved through the symbol table)
+        out_dims = out_shapes[0][1] if out_shapes else []
+        ops = self._dot_operands(expr)
+        lhs_dims = ops[0][0][1] if ops and ops[0] else []
+        mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", expr)
+        contr = 1
+        if mc and lhs_dims:
+            for idx in (int(i) for i in mc.group(1).split(",") if i):
+                if idx < len(lhs_dims):
+                    contr *= lhs_dims[idx]
+        out_elems = 1
+        for d in out_dims:
+            out_elems *= d
+        return 2.0 * out_elems * contr
+
+    def _dot_bytes(self, expr: str, out_shapes) -> float:
+        n = sum(_nbytes(dt, dm) for dt, dm in out_shapes)
+        for op_shapes in self._dot_operands(expr):
+            n += sum(_nbytes(dt, dm) for dt, dm in op_shapes)
+        return float(n)
+
+    def _is_promoted(self, op: str, expr: str) -> bool:
+        """XLA's CPU backend has no bf16 collectives: it wraps them in
+        f32 converts (reducers named '*promoted'; gather/permute operands
+        fed by bf16->f32 convert fusions).  On the TPU target these run
+        natively at bf16, so the roofline counts the pre-promotion width.
+        """
+        if "promoted" in expr:
+            return True
+        mo = re.search(rf"\b{re.escape(op)}\(%?([\w.\-]+)", expr)
+        if not mo:
+            return False
+        src = self.defs.get(mo.group(1), "")
+        if "convert" not in src and "fusion" not in src:
+            return False
+        if "bf16" in src:
+            return True
+        mc = re.search(r"calls=%?([\w.\-]+)", src)
+        if mc:
+            body = "\n".join(self.comps.get(mc.group(1), []))
+            return "bf16" in body and "convert" in body
+        return "convert" in src
+
+    @staticmethod
+    def _coll_payload(op: str, expr: str, out_shapes) -> float:
+        size = sum(_nbytes(dt, dm) for dt, dm in out_shapes)
+        n = 1
+        mg = re.search(r"replica_groups=\{\{([\d,]+)\}", expr)
+        if mg:
+            n = len(mg.group(1).split(","))
+        else:
+            mi = re.search(r"replica_groups=\[(\d+),(\d+)\]", expr)
+            if mi:
+                n = int(mi.group(2))
+        if n <= 1:
+            return 0.0
+        frac = (n - 1) / n
+        if op == "all-reduce":
+            return 2.0 * size * frac
+        if op == "collective-permute":
+            return float(size)
+        return size * frac
+
+    # -- rollup ------------------------------------------------------------------
+    def total(self, comp: Optional[str] = None) -> CompStats:
+        comp = comp or self.entry or next(iter(self.comps))
+        if comp in self._total_cache:
+            return self._total_cache[comp]
+        st = self.stats[comp]
+        agg = CompStats(st.flops, st.coll_bytes, dict(st.coll_by_kind),
+                        st.hbm_bytes)
+        for callee, mult in st.calls:
+            if callee not in self.comps or callee == comp:
+                continue
+            sub = self.total(callee)
+            agg.flops += mult * sub.flops
+            agg.coll_bytes += mult * sub.coll_bytes
+            agg.hbm_bytes += mult * sub.hbm_bytes
+            for k, v in sub.coll_by_kind.items():
+                agg.coll_by_kind[k] = agg.coll_by_kind.get(k, 0) + mult * v
+        self._total_cache[comp] = agg
+        return agg
+
+
+def cpu_promotion_bytes(hlo_text: str, min_bytes: int = 1 << 28) -> float:
+    """Bytes of f32 staging copies the CPU backend creates because it has
+    no native bf16 FMA/collectives: hoisted convert(bf16->f32) of large
+    stacked weights/caches.  The TPU target consumes bf16 directly, so the
+    dry-run's temp memory is corrected by this amount when judging
+    fits-in-HBM (reported as both raw and corrected in EXPERIMENTS.md)."""
+    total = 0.0
+    seen = set()
+    for m in re.finditer(
+            r"= f32\[([\d,]+)\][^=]*(?:convert|wrapped_convert)", hlo_text):
+        dims = [int(d) for d in m.group(1).split(",") if d]
+        n = 4
+        for d in dims:
+            n *= d
+        if n >= min_bytes and m.group(1) not in seen:
+            seen.add(m.group(1))
+            total += n
+    return total
+
+
+# --------------------------------------------------------------------------
+# analytic cross-check model
+# --------------------------------------------------------------------------
+
+def analytic_model(arch, shape, n_params: int, n_active: int) -> Dict:
+    """MODEL_FLOPS and exact byte counts from the config."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        flops = 6.0 * n_active * tokens
+        # + attention quadratic term 12·L·d·S²·B (dense archs)
+        if arch.family not in ("ssm",):
+            n_attn = arch.n_layers
+            if arch.family == "hybrid" and arch.block_pattern:
+                n_attn = arch.n_layers // len(arch.block_pattern) * \
+                    arch.block_pattern.count("attn")
+            eff_S = min(S, arch.local_window) if arch.family == "hybrid" \
+                else S
+            flops += 12.0 * n_attn * arch.n_heads * arch.hd * eff_S * B * S
+        bytes_ = 2 * n_params * 4        # rough: read+write fp32 grads/opt
+    elif shape.kind == "prefill":
+        tokens = B * S
+        flops = 2.0 * n_active * tokens
+        if arch.family not in ("ssm",):
+            flops += 4.0 * arch.n_layers * arch.n_heads * arch.hd * S * S * B
+        bytes_ = n_params * 2
+    else:  # decode: one token per sequence
+        tokens = B
+        flops = 2.0 * n_active * tokens
+        bytes_ = n_params * 2 + kv_cache_bytes(arch, shape)
+    return {"model_flops": flops, "model_bytes": float(bytes_),
+            "tokens": tokens}
+
+
+def analytic_hbm_bytes(arch, shape, *, chips: int, mp: int, dp: int,
+                       accum: int, n_params: int) -> float:
+    """Per-chip HBM traffic estimate for one step.
+
+    train: per microbatch each chip reads its model-shard of the gathered
+    f32 weights twice (fwd + bwd), plus optimizer state r/w, the remat
+    carry write+read+recompute, and the (transient) logits.
+    serve:  bf16 weight read per step + KV cache read(+write).
+    """
+    P = float(n_params)
+    L = arch.n_layers + arch.encoder_layers
+    if shape.kind == "train":
+        w = accum * 2 * (P / mp) * 4
+        opt = 10 * (P / chips) * 4
+        tokens_chip = shape.global_batch * shape.seq_len / dp
+        act = 3 * L * tokens_chip * arch.d_model * 2
+        logits = 3 * (tokens_chip / accum) * (arch.vocab / mp) * 4
+        return w + opt + act + logits
+    if shape.kind == "prefill":
+        w = 2 * (P / mp) * 2
+        kv = 2 * kv_cache_bytes(arch, shape) / chips
+        # flash tiles re-read KV once per q-block column pass (~S/bq)
+        return w + kv * 2
+    # decode: one token; weights + cache dominate utterly
+    w = (P / mp) * 2
+    kv = 2 * kv_cache_bytes(arch, shape) / chips
+    return w + kv
+
+
+def kv_cache_bytes(arch, shape) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    if arch.family == "ssm":
+        N = arch.rwkv_head_dim
+        H = arch.d_model // N
+        return arch.n_layers * B * (H * N * N * 4 + 2 * arch.d_model * 2)
+    eff = S
+    n_attn = arch.n_layers
+    extra = 0.0
+    if arch.family == "hybrid" and arch.block_pattern:
+        k = len(arch.block_pattern)
+        n_attn = arch.n_layers // k * arch.block_pattern.count("attn")
+        n_rec = arch.n_layers - n_attn
+        eff = min(S, arch.local_window or S)
+        w = arch.lru_width or arch.d_model
+        extra = n_rec * B * (w * 4 + (arch.conv_width - 1) * w * 2)
+    per_layer = 2 * B * eff * arch.n_kv_heads * arch.hd * 2
+    total = n_attn * per_layer + extra
+    if arch.is_encdec:
+        total += 2 * arch.n_layers * B * S * arch.n_kv_heads * arch.hd * 2
+    return float(total)
+
+
+# --------------------------------------------------------------------------
+# report
+# --------------------------------------------------------------------------
+
+def roofline_report(hlo_text: str, *, chips: int, arch, shape,
+                    n_params: int, n_active: int,
+                    cost_analysis: Optional[Dict] = None,
+                    mp: int = 16, dp: Optional[int] = None,
+                    accum: int = 1) -> Dict:
+    an = HloAnalyzer(hlo_text)
+    tot = an.total()
+    dp = dp if dp is not None else max(chips // mp, 1)
+    # HLO here is the per-device (SPMD) program: FLOPs/bytes are per chip
+    compute_s = tot.flops / PEAK_FLOPS
+    hbm_bytes = analytic_hbm_bytes(arch, shape, chips=chips, mp=mp, dp=dp,
+                                   accum=accum, n_params=n_params)
+    memory_s = hbm_bytes / HBM_BW
+    coll_s = tot.coll_bytes / ICI_BW
+    model = analytic_model(arch, shape, n_params, n_active)
+    model_flops_per_chip = model["model_flops"] / chips
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops_per_chip / tot.flops if tot.flops else 0.0
+    bound = max(terms.values())
+    out = {
+        "chips": chips,
+        "hlo_flops_per_chip": tot.flops,
+        "hbm_bytes_per_chip": hbm_bytes,
+        "hlo_bytes_upper_bound": tot.hbm_bytes,  # per-op sum (no reuse)
+        "collective_bytes_per_chip": tot.coll_bytes,
+        "collective_by_kind": tot.coll_by_kind,
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_total": model["model_flops"],
+        "model_bytes_total": model["model_bytes"],
+        "useful_flop_fraction": useful,
+        "step_time_bound_s": bound,
+        "roofline_fraction": (model_flops_per_chip / PEAK_FLOPS) / bound
+        if bound else 0.0,           # useful-compute time / bound (≈ MFU cap)
+        "tokens": model["tokens"],
+    }
+    if cost_analysis:
+        out["xla_cost_flops"] = cost_analysis.get("flops", 0.0)
+        out["xla_cost_bytes"] = cost_analysis.get("bytes accessed", 0.0)
+    return out

@@ -1,0 +1,109 @@
+"""Training driver: Zerrow data pipeline -> jit'd train step -> async
+Zerrow-backed checkpoints, with fleet monitoring hooks.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --smoke --steps 50
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_arch, smoke_variant
+from ..data.pipeline import (PipelineConfig, ZerrowDataPipeline,
+                             make_text_shards)
+from ..models.api import ModelAPI
+from ..runtime.checkpoint import CheckpointStore
+from ..runtime.fault import FaultConfig, FleetMonitor, RestartPolicy
+from ..train.trainstep import init_state, make_train_step
+
+
+def train_loop(arch_name: str, *, steps: int = 100, batch: int = 8,
+               seq_len: int = 256, smoke: bool = True,
+               ckpt_dir: str = None, ckpt_every: int = 50,
+               data_dir: str = None, lr: float = 1e-3,
+               log_every: int = 10, resume: bool = False):
+    arch = get_arch(arch_name)
+    if smoke:
+        arch = smoke_variant(arch)
+    arch = dataclasses.replace(arch, vocab=max(arch.vocab, 257))
+    api = ModelAPI(arch)
+
+    data_dir = data_dir or os.path.join(tempfile.gettempdir(),
+                                        "zerrow-corpus")
+    if not os.path.isdir(data_dir) or not os.listdir(data_dir):
+        make_text_shards(data_dir, n_shards=2, rows_per_shard=4000)
+    shards = sorted(os.path.join(data_dir, f)
+                    for f in os.listdir(data_dir) if f.endswith(".zq"))
+    pipe = ZerrowDataPipeline(shards, PipelineConfig(batch=batch,
+                                                     seq_len=seq_len))
+
+    state = init_state(api, jax.random.key(0))
+    store = None
+    if ckpt_dir:
+        store = CheckpointStore(ckpt_dir)
+        if resume and store.latest_step() is not None:
+            state, mani = store.restore(like=state)
+            print(f"resumed from step {mani['step']}")
+    step_fn = jax.jit(make_train_step(api, peak_lr=lr, total_steps=steps),
+                      donate_argnums=(0,))
+
+    monitor = FleetMonitor(n_workers=1)
+    t_start = time.perf_counter()
+    it = pipe.batches(epochs=10_000)
+    losses = []
+    for i in range(steps):
+        batch_np = next(it)
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, {
+            "tokens": jnp.asarray(batch_np["tokens"]),
+            "labels": jnp.asarray(batch_np["labels"])})
+        dt = time.perf_counter() - t0
+        monitor.heartbeat(0, i, dt)
+        losses.append(float(metrics["loss"]))
+        if i % log_every == 0 or i == steps - 1:
+            print(f"step {i:5d} loss {losses[-1]:.4f} "
+                  f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms")
+        if store and (i + 1) % ckpt_every == 0:
+            store.save(i + 1, jax.tree.map(np.asarray, state))
+    if store:
+        store.close()
+    print("pipeline stats:", {k: v for k, v in pipe.stats().items()
+                              if k in ("decache_hits", "loads",
+                                       "bytes_reshared", "bytes_deanon",
+                                       "bytes_copied")})
+    pipe.close()
+    wall = time.perf_counter() - t_start
+    print(f"done: {steps} steps in {wall:.1f}s; "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-friendly)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    a = ap.parse_args()
+    train_loop(a.arch, steps=a.steps, batch=a.batch, seq_len=a.seq_len,
+               smoke=a.smoke, ckpt_dir=a.ckpt_dir, resume=a.resume,
+               lr=a.lr)
+
+
+if __name__ == "__main__":
+    main()

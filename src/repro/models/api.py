@@ -1,0 +1,120 @@
+"""Unified model API: build any assigned architecture, get its train /
+prefill / decode entry points, input specs (ShapeDtypeStruct stand-ins for
+the dry-run) and logical sharding axes for every input and state."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeConfig
+from .encdec import EncDecLM
+from .lm import DecoderLM
+
+
+class ModelAPI:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.model = EncDecLM(cfg) if cfg.is_encdec else DecoderLM(cfg)
+
+    # -- inputs -------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+        train:   {tokens, labels, [patches|frames]}
+        prefill: {tokens, [patches|frames]}
+        decode:  {tokens (B,1), positions (B,1)} (+ cache specs separately)
+        """
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        f32 = jnp.dtype(cfg.dtype)
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            d: Dict[str, Any] = {}
+            if cfg.is_encdec:
+                d["frames"] = sds((B, S, cfg.d_model), f32)
+                d["tokens"] = sds((B, S), i32)
+                d["labels"] = sds((B, S), i32)
+            elif cfg.vision_tokens:
+                d["patches"] = sds((B, cfg.vision_tokens, cfg.d_model), f32)
+                d["tokens"] = sds((B, S - cfg.vision_tokens), i32)
+                d["labels"] = sds((B, S - cfg.vision_tokens), i32)
+            else:
+                d["tokens"] = sds((B, S), i32)
+                d["labels"] = sds((B, S), i32)
+            return d
+        if shape.kind == "prefill":
+            d = {}
+            if cfg.is_encdec:
+                d["frames"] = sds((B, S, cfg.d_model), f32)
+                d["tokens"] = sds((B, 1), i32)       # BOS
+            elif cfg.vision_tokens:
+                d["patches"] = sds((B, cfg.vision_tokens, cfg.d_model), f32)
+                d["tokens"] = sds((B, S - cfg.vision_tokens), i32)
+            else:
+                d["tokens"] = sds((B, S), i32)
+            return d
+        # decode: one new token against a cache of seq_len
+        return {"tokens": sds((B, 1), i32), "positions": sds((B, 1), i32)}
+
+    def input_axes(self, shape: ShapeConfig) -> Dict[str, Tuple]:
+        cfg = self.cfg
+        ax: Dict[str, Tuple] = {}
+        for k in self.input_specs(shape):
+            if k in ("frames", "patches"):
+                ax[k] = ("batch", "seq", None) if k == "frames" \
+                    else ("batch", None, None)
+            else:
+                ax[k] = ("batch", "seq") if shape.kind != "decode" \
+                    else ("batch", None)
+        return ax
+
+    # -- caches ------------------------------------------------------------------
+    def cache_specs(self, shape: ShapeConfig) -> Any:
+        """Abstract cache pytree for decode shapes (eval_shape: no alloc)."""
+        B, S = shape.global_batch, shape.seq_len
+        if self.cfg.is_encdec:
+            def mk():
+                caches = self.model.init_cache(B, S)
+                cross = jax.eval_shape(
+                    lambda: self._abstract_cross(B, S))
+                return caches, cross
+            # build both under eval_shape
+            return jax.eval_shape(lambda: (self.model.init_cache(B, S),
+                                           self._abstract_cross(B, S)))
+        return jax.eval_shape(lambda: self.model.init_cache(B, S))
+
+    def _abstract_cross(self, B, S_enc):
+        cfg = self.cfg
+        z = jnp.zeros((cfg.n_layers, B, S_enc, cfg.n_kv_heads, cfg.hd),
+                      jnp.dtype(cfg.dtype))
+        return (z, z)
+
+    def cache_axes(self) -> Any:
+        base = self.model.cache_axes()
+        if self.cfg.is_encdec:
+            cross = ((None, "batch", "kv_seq", "kv_heads", None),) * 2
+            return (base, cross)
+        return base
+
+    # -- entry points ----------------------------------------------------------
+    def train_loss(self, params, batch):
+        return self.model.loss_fn(params, batch)
+
+    def prefill(self, params, batch, shape: ShapeConfig):
+        return self.model.prefill(params, batch, cache_len=shape.seq_len)
+
+    def serve_step(self, params, batch, caches):
+        """decode: one new token for every sequence in the batch."""
+        return self.model.decode_step(params, batch["tokens"], caches,
+                                      batch["positions"])
+
+
+@functools.lru_cache(maxsize=None)
+def build_model(cfg: ArchConfig) -> ModelAPI:
+    return ModelAPI(cfg)

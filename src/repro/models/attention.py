@@ -1,0 +1,272 @@
+"""GQA attention: chunked online-softmax (flash-style, pure jnp) + decode.
+
+The chunked jnp path is the lowering/roofline backend (its dots are visible
+to HLO cost analysis); the Pallas flash kernel (kernels/flash_attention.py)
+is the TPU-optimized variant with identical math (same oracle).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.partition import constrain
+from .layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d: int, n_heads: int, n_kv: int, hd: int, dtype):
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], d, (n_heads, hd), dtype),
+            "wk": dense_init(ks[1], d, (n_kv, hd), dtype),
+            "wv": dense_init(ks[2], d, (n_kv, hd), dtype),
+            "wo": dense_init(ks[3], n_heads * hd, d, dtype, scale=1.0)}
+
+
+def attn_axes():
+    return {"wq": ("fsdp", "heads", None),
+            "wk": ("fsdp", "kv_heads", None),
+            "wv": ("fsdp", "kv_heads", None),
+            "wo": ("heads", "fsdp")}
+
+
+def _online_softmax(qg, k, v, q_pos, *, causal: bool, window: int,
+                    chunk: int, scale: float):
+    """Inner online-softmax pass over KV chunks for one block of queries.
+
+    qg: (B, Sq, KV, G, hd); k, v: (B, T, KV, hd); q_pos: (Sq,) absolute.
+    Returns normalized output (B, Sq, KV, G, hd) float32.
+    """
+    B, Sq, KV, G, hd = qg.shape
+    T = k.shape[1]
+    chunk = min(chunk, T)
+    n = T // chunk
+    rem = T - n * chunk
+
+    def attend(carry, kc, vc, idx0):
+        m, l, acc = carry
+        s = jnp.einsum("bskgh,bckh->bskgc", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        kv_pos = idx0 + jnp.arange(kc.shape[1])
+        mask = jnp.ones((Sq, kc.shape[1]), dtype=bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bskgc,bckh->bskgh", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    m0 = jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KV, G, hd), jnp.float32)
+    if n > 0:
+        ks = k[:, :n * chunk].reshape(B, n, chunk, KV, hd).swapaxes(0, 1)
+        vs = v[:, :n * chunk].reshape(B, n, chunk, KV, hd).swapaxes(0, 1)
+        idx = jnp.arange(n) * chunk
+
+        def body(carry, inp):
+            kc, vc, i0 = inp
+            return attend(carry, kc, vc, i0), None
+        (m0, l0, a0), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, idx))
+    if rem:
+        m0, l0, a0 = attend((m0, l0, a0), k[:, n * chunk:],
+                            v[:, n * chunk:], n * chunk)
+    return a0 / jnp.maximum(l0[..., None], 1e-37)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      chunk: int = 1024, q_chunk: int = 512, q_offset=0):
+    """Double-blocked online-softmax attention (flash semantics in jnp).
+
+    q: (B, S, H, hd); k, v: (B, T, KV, hd); GQA via head grouping.
+    Queries are processed in ``q_chunk`` blocks under ``jax.checkpoint``:
+    the backward pass recomputes each block's scores instead of saving the
+    (S × T) probability tensor — flash-attention's memory shape, so 32k
+    prefill fits HBM.  ``q_offset``: absolute position of q[:, 0].
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qc = min(q_chunk, S)
+    if S % qc:
+        qc = S          # odd small sizes: single block
+    nq = S // qc
+    qg = q.reshape(B, nq, qc, KV, G, hd).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def per_q(args):
+        qi, qb = args
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+        return _online_softmax(qb, k, v, q_pos, causal=causal,
+                               window=window, chunk=chunk, scale=scale)
+
+    if nq == 1:
+        out = per_q((jnp.zeros((), jnp.int32), qg[0]))[None]
+    else:
+        out = jax.lax.map(per_q, (jnp.arange(nq), qg))
+    out = out.swapaxes(0, 1).reshape(B, S, H, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-token attention over a (possibly ring-buffered) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, T, KV, hd); cache_len: valid entries
+    (scalar or (B,)).  The cache length dim is kv_seq-sharded over the
+    'model' axis under SERVE_RULES (flash-decoding split-K): each chip
+    scores its shard; XLA's partial softmax combines are tiny (B,KV,G).
+    """
+    B, _, H, hd = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, KV, G, hd)
+    # dots run in the cache dtype (MXU accumulates f32 internally on the
+    # TPU target; forcing preferred=f32 here makes the CPU backend
+    # materialize an f32 copy of the whole cache) — only the small score
+    # tensor is upcast for the softmax
+    s = jnp.einsum("bkgh,btkh->bkgt", qg.astype(k_cache.dtype), k_cache)
+    s = s.astype(jnp.float32) * scale
+    pos = jnp.arange(T)
+    valid = pos[None, :] < jnp.reshape(jnp.asarray(cache_len), (-1, 1))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def _attend(q, k, v, cfg, causal: bool, window: int):
+    """Backend dispatch: 'xla' chunked online-softmax (FLOPs visible to
+    cost analysis) or the 'pallas' flash kernel (block-skips masked
+    tiles)."""
+    if getattr(cfg, "attention_impl", "xla") == "pallas":
+        from ..kernels.ops import flash_attention
+        bq = min(128, q.shape[1])
+        bk = min(128, k.shape[1])
+        if q.shape[1] % bq == 0 and k.shape[1] % bk == 0:
+            return flash_attention(q, k, v, causal=causal, window=window,
+                                   bq=bq, bk=bk)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             chunk=cfg.attn_chunk)
+
+
+def quant_kv(x):
+    """Symmetric int8 per-(batch, position, kv-head): x (B,T,KV,hd) ->
+    (int8 codes, f32 scales (B,T,KV)).  Halves KV-cache HBM (the decode
+    memory-roofline term) at <0.5% attention error."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-9
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequant_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attn_apply(p, x, *, cfg, mode: str, cache: Optional[Dict] = None,
+               pos=None, window: int = 0, causal: bool = True,
+               kv_override: Optional[Tuple] = None):
+    """Full attention sub-block: qkv proj + rope + attend + out proj.
+
+    mode: 'train' | 'prefill' (writes cache) | 'decode' (reads+appends).
+    cache: {"k": (B,T,KV,hd), "v": ..., "len": scalar int32} or None.
+    kv_override: (k, v) for cross-attention (already projected).
+    Returns (out, new_cache).
+    """
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    else:
+        k, v = kv_override
+    if pos is None:
+        pos = jnp.arange(S)[None, :].astype(jnp.int32)
+    use_rope = cfg.rope_theta > 0 and kv_override is None
+    if use_rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        if kv_override is None:
+            k = apply_rope(k, pos, cfg.rope_theta)
+    q = constrain(q, ("batch", "seq", "heads", None))
+
+    new_cache = cache
+    if kv_override is not None:
+        # cross-attention: static encoder KV, no cache mutation
+        if mode == "decode":
+            out = decode_attention(q, k, v, k.shape[1])
+        else:
+            out = chunked_attention(q, k, v, causal=False,
+                                    chunk=cfg.attn_chunk)
+    elif mode == "train" or (mode == "prefill" and cache is None):
+        out = _attend(q, k, v, cfg, causal, window)
+    elif mode == "prefill":
+        out = _attend(q, k, v, cfg, causal, window)
+        T = cache["k"].shape[1]
+        quant = "k_scale" in cache
+        if T < S:
+            kk, vv = k[:, S - T:], v[:, S - T:]   # windowed ring cache
+        else:
+            kk, vv = k, v
+        if quant:
+            kk, ks = quant_kv(kk)
+            vv, vs = quant_kv(vv)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], kk.astype(cache["k"].dtype), (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], vv.astype(cache["v"].dtype), (0, 0, 0, 0)),
+            "len": jnp.asarray(min(S, T), jnp.int32),
+        }
+        if quant:
+            new_cache["k_scale"] = jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, 0, 0))
+            new_cache["v_scale"] = jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, 0, 0))
+    elif mode == "decode":
+        T = cache["k"].shape[1]
+        quant = "k_scale" in cache
+        # donated in-place append (the device-side resharing analogue):
+        # ring-buffer slot for windowed caches, plain append otherwise
+        slot = cache["len"] % T if window else \
+            jnp.minimum(cache["len"], T - 1)
+        if quant:
+            kq, ks = quant_kv(k)
+            vq, vs = quant_kv(v)
+            kc = jax.lax.dynamic_update_slice(cache["k"], kq,
+                                              (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], vq,
+                                              (0, slot, 0, 0))
+            ksc = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                               (0, slot, 0))
+            vsc = jax.lax.dynamic_update_slice(cache["v_scale"], vs,
+                                               (0, slot, 0))
+            out = decode_attention(q, dequant_kv(kc, ksc, x.dtype),
+                                   dequant_kv(vc, vsc, x.dtype),
+                                   jnp.minimum(cache["len"] + 1, T))
+            new_cache = {"k": kc, "v": vc, "k_scale": ksc,
+                         "v_scale": vsc, "len": cache["len"] + 1}
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            out = decode_attention(q, kc, vc,
+                                   jnp.minimum(cache["len"] + 1, T))
+            new_cache = {"k": kc, "v": vc, "len": cache["len"] + 1}
+    else:
+        raise ValueError(mode)
+    out = out.reshape(B, S, H * hd)
+    return out @ p["wo"].astype(x.dtype), new_cache

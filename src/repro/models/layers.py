@@ -1,0 +1,119 @@
+"""Common model layers (pure JAX, functional, scan-over-layers friendly).
+
+Params are nested dicts of jnp arrays; every initializer has a matching
+``*_axes`` function returning the pytree of logical sharding axes
+(see sharding/partition.py for the logical -> mesh mapping).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.partition import constrain
+
+
+def dense_init(key, in_dim: int, out_dims, dtype, scale: float = 1.0):
+    """Truncated-normal fan-in init for a (in, *out) weight."""
+    out_dims = (out_dims,) if isinstance(out_dims, int) else tuple(out_dims)
+    shape = (in_dim,) + out_dims
+    std = scale / math.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, dim),
+                                        jnp.float32)).astype(dtype)
+
+
+def rms_norm(x, w, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))
+            ).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))            # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP variants
+# --------------------------------------------------------------------------
+
+def mlp_init(key, d: int, f: int, kind: str, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {"wi": dense_init(ks[0], d, f, dtype),
+                "wg": dense_init(ks[1], d, f, dtype),
+                "wo": dense_init(ks[2], f, d, dtype)}
+    return {"wi": dense_init(ks[0], d, f, dtype),
+            "wo": dense_init(ks[2], f, d, dtype)}
+
+
+def mlp_axes(kind: str) -> Dict[str, Tuple]:
+    if kind == "swiglu":
+        return {"wi": ("fsdp", "ffn"), "wg": ("fsdp", "ffn"),
+                "wo": ("ffn", "fsdp")}
+    return {"wi": ("fsdp", "ffn"), "wo": ("ffn", "fsdp")}
+
+
+def mlp_apply(p, x, kind: str):
+    h = x @ p["wi"].astype(x.dtype)
+    if kind == "swiglu":
+        g = x @ p["wg"].astype(x.dtype)
+        h = jax.nn.silu(g) * h
+    elif kind == "squared_relu":                # nemotron-4
+        h = jnp.square(jax.nn.relu(h))
+    elif kind == "gelu":                        # whisper
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(kind)
+    h = constrain(h, ("batch", "seq", "ffn"))
+    return h @ p["wo"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# loss
+# --------------------------------------------------------------------------
+
+def softmax_xent(logits, labels, z_loss: float = 1e-4):
+    """Cross entropy with optional z-loss; logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return loss

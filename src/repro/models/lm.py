@@ -1,0 +1,342 @@
+"""Decoder-only LM covering the dense / moe / hybrid / ssm / vlm families.
+
+Layers are stacked with ``jax.lax.scan`` over parameter groups (a group is
+one block for uniform stacks, or one ``block_pattern`` repetition for the
+hybrid arch), keeping HLO size O(1) in depth — essential for 96-layer
+configs and for while-loop-aware roofline accounting.  Remat wraps the
+scan body for training.
+
+Modes: 'train' (logits/loss), 'prefill' (populate caches, return last-token
+logits), 'decode' (one token, donated in-place cache update).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..sharding.partition import constrain
+from .attention import attn_apply, attn_axes, attn_init
+from .layers import (dense_init, embed_init, mlp_apply, mlp_axes, mlp_init,
+                     rms_norm, softmax_xent)
+from .moe import moe_apply, moe_axes, moe_init
+from .rglru import rglru_axes, rglru_block_apply, rglru_init
+from .rwkv6 import (rwkv_channel_apply, rwkv_channel_axes, rwkv_channel_init,
+                    rwkv_time_apply, rwkv_time_axes, rwkv_time_init)
+
+
+# --------------------------------------------------------------------------
+# block structure per family
+# --------------------------------------------------------------------------
+
+def block_kinds(cfg: ArchConfig) -> Tuple[str, ...]:
+    """Sub-block kinds within one scan group."""
+    if cfg.family == "hybrid":
+        return cfg.block_pattern            # e.g. ("rec", "rec", "attn")
+    if cfg.family == "ssm":
+        return ("rwkv",)
+    if cfg.family == "moe":
+        return ("moe",)
+    return ("attn",)                        # dense / vlm
+
+
+def n_groups(cfg: ArchConfig) -> int:
+    k = len(block_kinds(cfg))
+    assert cfg.n_layers % k == 0 or cfg.family == "hybrid", \
+        f"{cfg.name}: n_layers {cfg.n_layers} vs pattern {k}"
+    return cfg.n_layers // k
+
+
+def sub_block_init(kind: str, key, cfg: ArchConfig, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    if kind == "rwkv":
+        return {"ln1": jnp.zeros((d,), jnp.float32),
+                "time": rwkv_time_init(ks[0], cfg, dtype),
+                "ln2": jnp.zeros((d,), jnp.float32),
+                "channel": rwkv_channel_init(ks[1], cfg, dtype)}
+    mix = {"attn": lambda: attn_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.hd, dtype),
+           "rec": lambda: rglru_init(ks[0], cfg, dtype),
+           "moe": lambda: attn_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.hd, dtype)}[kind]()
+    ffn = moe_init(ks[1], cfg, dtype) if kind == "moe" \
+        else mlp_init(ks[1], d, cfg.d_ff, cfg.mlp, dtype)
+    return {"ln1": jnp.zeros((d,), jnp.float32), "mix": mix,
+            "ln2": jnp.zeros((d,), jnp.float32), "ffn": ffn}
+
+
+def sub_block_axes(kind: str, cfg: ArchConfig) -> Dict[str, Any]:
+    if kind == "rwkv":
+        return {"ln1": (None,), "time": rwkv_time_axes(),
+                "ln2": (None,), "channel": rwkv_channel_axes()}
+    mix = attn_axes() if kind in ("attn", "moe") else rglru_axes()
+    ffn = moe_axes() if kind == "moe" else mlp_axes(cfg.mlp)
+    return {"ln1": (None,), "mix": mix, "ln2": (None,), "ffn": ffn}
+
+
+def sub_block_apply(kind: str, p, x, cfg: ArchConfig, mode: str,
+                    cache: Optional[Dict], pos, aux: Dict):
+    """One sub-block (pre-norm residual).  Returns (x, new_cache, aux)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "rwkv":
+        o, c_time = rwkv_time_apply(p["time"], h, cfg, mode,
+                                    cache.get("time") if cache else None)
+        x = x + o
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        o2, c_ch = rwkv_channel_apply(p["channel"], h2, cfg, mode,
+                                      cache.get("channel") if cache else None)
+        x = x + o2
+        nc = {"time": c_time, "channel": c_ch} if cache is not None else None
+        return x, nc, aux
+    if kind == "rec":
+        o, c_rec = rglru_block_apply(p["mix"], h, cfg, mode, cache)
+        new_cache = c_rec
+    else:  # attention (dense / moe / local for hybrid)
+        # under seq-sharded layouts (ACT_SP/FSDP rules) attention needs the
+        # full sequence: gather ONCE here — otherwise the chunked-attention
+        # loop reshards per q-chunk (catastrophic per-chunk collectives)
+        h = constrain(h, ("batch", "seq", None))
+        window = cfg.local_window if cfg.family == "hybrid" else 0
+        o, new_cache = attn_apply(p["mix"], h, cfg=cfg, mode=mode,
+                                  cache=cache, pos=pos, window=window)
+    x = x + o
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    # the MLP is per-token: it runs happily on the seq-sharded residual
+    h2 = constrain(h2, ("batch", "act_seq", None))
+    if kind == "moe":
+        o2, moe_aux = moe_apply(p["ffn"], h2, cfg)
+        for k, v in moe_aux.items():
+            aux = dict(aux)
+            aux[k] = aux.get(k, 0.0) + v
+    else:
+        o2 = mlp_apply(p["ffn"], h2, cfg.mlp)
+    return x + o2, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# cache structure
+# --------------------------------------------------------------------------
+
+def sub_block_cache(kind: str, cfg: ArchConfig, B: int, cache_len: int,
+                    dtype) -> Optional[Dict]:
+    """Zeros-cache spec for one sub-block (leading group axis added later)."""
+    d, w = cfg.d_model, (cfg.lru_width or cfg.d_model)
+    if kind == "attn" or kind == "moe":
+        T = min(cache_len, cfg.local_window) if cfg.family == "hybrid" \
+            and cfg.local_window else cache_len
+        if cfg.kv_cache_dtype == "int8":
+            return {"k": jnp.zeros((B, T, cfg.n_kv_heads, cfg.hd),
+                                   jnp.int8),
+                    "v": jnp.zeros((B, T, cfg.n_kv_heads, cfg.hd),
+                                   jnp.int8),
+                    "k_scale": jnp.zeros((B, T, cfg.n_kv_heads),
+                                         jnp.float32),
+                    "v_scale": jnp.zeros((B, T, cfg.n_kv_heads),
+                                         jnp.float32),
+                    "len": jnp.zeros((), jnp.int32)}
+        return {"k": jnp.zeros((B, T, cfg.n_kv_heads, cfg.hd), dtype),
+                "v": jnp.zeros((B, T, cfg.n_kv_heads, cfg.hd), dtype),
+                "len": jnp.zeros((), jnp.int32)}
+    if kind == "rec":
+        return {"h": jnp.zeros((B, w), jnp.float32),
+                "conv": jnp.zeros((B, cfg.conv_width - 1, w), dtype)}
+    if kind == "rwkv":
+        N = cfg.rwkv_head_dim
+        H = cfg.d_model // N
+        return {"time": {"shift": jnp.zeros((B, d), dtype),
+                         "state": jnp.zeros((B, H, N, N), jnp.float32)},
+                "channel": {"shift": jnp.zeros((B, d), dtype)}}
+    raise ValueError(kind)
+
+
+def sub_block_cache_axes(kind: str, cfg: ArchConfig):
+    if kind in ("attn", "moe"):
+        out = {"k": (None, "batch", "kv_seq", "kv_heads", None),
+               "v": (None, "batch", "kv_seq", "kv_heads", None),
+               "len": (None,)}
+        if cfg.kv_cache_dtype == "int8":
+            out["k_scale"] = (None, "batch", "kv_seq", "kv_heads")
+            out["v_scale"] = (None, "batch", "kv_seq", "kv_heads")
+        return out
+    if kind == "rec":
+        return {"h": (None, "batch", "lru"),
+                "conv": (None, "batch", None, "lru")}
+    return {"time": {"shift": (None, "batch", "tensor"),
+                     "state": (None, "batch", "tensor", None, None)},
+            "channel": {"shift": (None, "batch", "tensor")}}
+
+
+# --------------------------------------------------------------------------
+# the model
+# --------------------------------------------------------------------------
+
+class DecoderLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.kinds = block_kinds(cfg)
+        self.groups = n_groups(cfg)
+        self.pdtype = jnp.dtype(cfg.param_dtype)
+        self.cdtype = jnp.dtype(cfg.dtype)
+
+    # -- params ----------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        kb, ke, kh = jax.random.split(key, 3)
+
+        def group_init(k):
+            kk = jax.random.split(k, len(self.kinds))
+            return {f"b{i}": sub_block_init(kind, kk[i], cfg, self.pdtype)
+                    for i, kind in enumerate(self.kinds)}
+        blocks = jax.vmap(group_init)(jax.random.split(kb, self.groups))
+        params = {"embed": embed_init(ke, cfg.vocab, cfg.d_model,
+                                      self.pdtype),
+                  "blocks": blocks,
+                  "final_norm": jnp.zeros((cfg.d_model,), jnp.float32)}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(kh, cfg.d_model, cfg.vocab,
+                                           self.pdtype)
+        if cfg.vision_tokens:
+            # the frontend is a stub; a single projection adapts patch
+            # embeddings (frozen upstream encoder assumption)
+            params["vision_proj"] = dense_init(kh, cfg.d_model, cfg.d_model,
+                                               self.pdtype)
+        return params
+
+    def param_axes(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        blocks = {f"b{i}": jax.tree.map(
+            lambda a: ("layers",) + a,
+            sub_block_axes(kind, cfg),
+            is_leaf=lambda x: isinstance(x, tuple) and
+            all(e is None or isinstance(e, str) for e in x))
+            for i, kind in enumerate(self.kinds)}
+        axes = {"embed": ("vocab", "fsdp"), "blocks": blocks,
+                "final_norm": (None,)}
+        if not cfg.tie_embeddings:
+            axes["lm_head"] = ("fsdp", "vocab")
+        if cfg.vision_tokens:
+            axes["vision_proj"] = ("fsdp", "tensor")
+        return axes
+
+    # -- embedding / head ---------------------------------------------------
+    def embed_inputs(self, params, tokens, patches=None):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.cdtype)
+        if self.cfg.vision_tokens and patches is not None:
+            pv = (patches.astype(self.cdtype)
+                  @ params["vision_proj"].astype(self.cdtype))
+            x = jnp.concatenate([pv, x], axis=1)
+        return constrain(x, ("batch", "seq", None))
+
+    def head(self, params, x):
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        w = params.get("lm_head")
+        if w is None:
+            w = params["embed"].T
+        logits = x @ w.astype(x.dtype)
+        # act_seq keeps huge logits seq-sharded under SP/FSDP layouts
+        return constrain(logits, ("batch", "act_seq", "vocab"))
+
+    # -- stacked apply ---------------------------------------------------------
+    def backbone(self, params, x, mode: str, caches=None, pos=None):
+        cfg = self.cfg
+        aux0 = {}
+        if cfg.n_experts:
+            aux0 = {"moe_lb_loss": jnp.zeros((), jnp.float32),
+                    "moe_z_loss": jnp.zeros((), jnp.float32),
+                    "moe_dropped": jnp.zeros((), jnp.float32)}
+
+        def group_apply(carry, scanned):
+            x, aux = carry
+            gp, gc = scanned
+            # pin the FSDP all-gather of this layer's weights AND the dtype
+            # converts of this layer's cache slice INSIDE the loop body:
+            # without the barrier XLA hoists them out of the scan and
+            # materializes every layer's full weights / an f32 copy of the
+            # entire stacked KV cache at once
+            if gc is not None:
+                gp, gc = jax.lax.optimization_barrier((gp, gc))
+            else:
+                gp = jax.lax.optimization_barrier(gp)
+            new_gc = {} if gc is not None else None
+            for i, kind in enumerate(self.kinds):
+                c_i = gc.get(f"b{i}") if gc is not None else None
+                x, nc, aux = sub_block_apply(kind, gp[f"b{i}"], x, cfg,
+                                             mode, c_i, pos, aux)
+                if new_gc is not None:
+                    new_gc[f"b{i}"] = nc
+            # the carry is the remat-saved residual; under ACT_SP_RULES it
+            # is stored seq-sharded over the model axis
+            x = constrain(x, ("batch", "act_seq", None))
+            return (x, aux), new_gc
+
+        body = group_apply
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(
+                group_apply,
+                policy=jax.checkpoint_policies.nothing_saveable)
+
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, aux0), (params["blocks"], caches))
+        return x, aux, new_caches
+
+    # -- public entry points ------------------------------------------------------
+    def loss_fn(self, params, batch):
+        """Train forward: batch {tokens (B,S), labels (B,S), [patches]}."""
+        cfg = self.cfg
+        x = self.embed_inputs(params, batch["tokens"],
+                              batch.get("patches"))
+        pos = jnp.arange(x.shape[1])[None, :]
+        x, aux, _ = self.backbone(params, x, "train", None, pos)
+        if cfg.vision_tokens:
+            x = x[:, cfg.vision_tokens:]
+        logits = self.head(params, x)
+        tok_loss = softmax_xent(logits, batch["labels"])
+        mask = batch.get("loss_mask")
+        if mask is None:
+            loss = tok_loss.mean()
+        else:
+            loss = (tok_loss * mask).sum() / jnp.maximum(mask.sum(), 1)
+        metrics = {"loss": loss}
+        if cfg.n_experts:
+            scale = 1.0 / self.groups
+            loss = loss + 0.01 * aux["moe_lb_loss"] * scale \
+                + 0.001 * aux["moe_z_loss"] * scale
+            metrics.update({k: v * scale for k, v in aux.items()})
+        metrics["total_loss"] = loss
+        return loss, metrics
+
+    def init_cache(self, B: int, cache_len: int) -> Dict[str, Any]:
+        """Stacked (groups-leading) zero caches."""
+        def one(_):
+            return {f"b{i}": sub_block_cache(kind, self.cfg, B, cache_len,
+                                             self.cdtype)
+                    for i, kind in enumerate(self.kinds)}
+        return jax.vmap(one)(jnp.arange(self.groups))
+
+    def cache_axes(self):
+        return {f"b{i}": sub_block_cache_axes(kind, self.cfg)
+                for i, kind in enumerate(self.kinds)}
+
+    def prefill(self, params, batch, cache_len: int):
+        """Process the prompt; returns (last_logits, caches)."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self.embed_inputs(params, tokens, batch.get("patches"))
+        pos = jnp.arange(x.shape[1])[None, :]
+        caches = self.init_cache(B, cache_len)
+        x, _, caches = self.backbone(params, x, "prefill", caches, pos)
+        logits = self.head(params, x[:, -1:])
+        return logits, caches
+
+    def decode_step(self, params, tokens, caches, positions):
+        """One token for every sequence.  tokens (B, 1); positions (B, 1)."""
+        x = self.embed_inputs(params, tokens)
+        x, _, caches = self.backbone(params, x, "decode", caches, positions)
+        logits = self.head(params, x)
+        return logits, caches

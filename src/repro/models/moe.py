@@ -1,0 +1,197 @@
+"""Mixture-of-Experts block (Qwen3-MoE style: 128 experts, top-8).
+
+Sort-based capacity dispatch (TPU-friendly: one sort + gathers instead of
+the (T, E, C) one-hot einsum whose memory explodes at 1M tokens):
+
+  1. router logits -> top-k experts + normalized weights per token
+  2. flatten (token, expert) pairs, stable-sort by expert id
+  3. position-in-expert via running count; drop beyond capacity C
+  4. gather token activations into (E, C, d) — sharded over the
+     'expert' (=model) mesh axis, so XLA inserts the dispatch all-to-all
+  5. per-expert ffn via batched einsum
+  6. combine: scatter-add weighted outputs back to (T, d)
+
+Aux losses: load-balancing (Switch-style) + router z-loss.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.partition import constrain
+from .layers import dense_init, mlp_axes, mlp_init
+
+
+def moe_init(key, cfg, dtype) -> Dict[str, Any]:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {"router": dense_init(ks[0], d, E, dtype),
+         "wi": dense_init(ks[1], d, (E, f), dtype).swapaxes(0, 1),
+         "wg": dense_init(ks[2], d, (E, f), dtype).swapaxes(0, 1),
+         "wo": dense_init(ks[3], f, (E, d), dtype).swapaxes(0, 1)}
+    return p
+
+
+def moe_axes() -> Dict[str, Tuple]:
+    return {"router": ("fsdp", None),
+            "wi": ("expert", "fsdp", None),
+            "wg": ("expert", "fsdp", None),
+            "wo": ("expert", None, "fsdp")}
+
+
+def _dispatch_groups(cfg) -> int:
+    """Number of local dispatch groups = the data(-parallel) shard count,
+    so the sort/scatter stays shard-local and only the (G,E,C,d)->(E,G*C,d)
+    transpose crosses the mesh (the MoE all-to-all)."""
+    from ..sharding.partition import current_mesh, current_rules
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    table = current_rules().to_dict()
+    m = table.get("batch", ())
+    axes = (m,) if isinstance(m, str) else tuple(m or ())
+    g = 1
+    for a in axes:
+        g *= sizes.get(a, 1)
+    return max(g, 1)
+
+
+def _token_path(p, cfg, xt, slot, st_, sw, keep, E, C, d, Tl, dtype):
+    """Dispatch -> expert ffn -> weighted combine.
+
+    shard_map version (when a mesh is active): each chip scatters *only its
+    own experts'* capacity rows (dispatch = zero communication), runs its
+    local expert ffn, scatter-adds weighted outputs into a per-rank (Tl, d)
+    partial and psums it over 'model' — the only wire traffic is Tl·d per
+    chip instead of the E·C·d bucket gather (10x+ less at top-8/cf1.25).
+    """
+    from jax.sharding import PartitionSpec as P
+    from ..sharding.partition import current_mesh
+    mesh = current_mesh()
+    G = xt.shape[0]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else {}
+    mp = sizes.get("model", 1)
+    baxes = tuple(a for a in ("pod", "data") if a in sizes)
+    gm = 1
+    for a in baxes:
+        gm *= sizes[a]
+    if mesh is None or mp <= 1 or E % mp or G != gm:
+        return _token_path_auto(p, cfg, xt, slot, st_, sw, keep,
+                                E, C, d, Tl, dtype)
+    E_loc = E // mp
+
+    def block(xt_b, slot_b, st_b, sw_b, keep_b, wi, wg, wo):
+        # per-chip blocks: xt (1,Tl,d); slot/st/sw/keep (1,TK);
+        # wi/wg/wo (E_loc, d|f, f|d) — this rank's experts
+        m = jax.lax.axis_index("model")
+        rel = slot_b[0] - m * (E_loc * C)
+        mine = (rel >= 0) & (rel < E_loc * C) & keep_b[0]
+        src = xt_b[0][st_b[0]]                       # (TK, d) local gather
+        idx = jnp.where(mine, rel, E_loc * C)        # OOB rows dropped
+        xe = jnp.zeros((E_loc * C, d), dtype).at[idx].set(
+            src, mode="drop").reshape(E_loc, C, d)
+        h = jnp.einsum("ecd,edf->ecf", xe, wi.astype(dtype))
+        g = jnp.einsum("ecd,edf->ecf", xe, wg.astype(dtype))
+        ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h,
+                        wo.astype(dtype)).reshape(E_loc * C, d)
+        contrib = jnp.where(
+            mine[:, None],
+            ye[jnp.clip(rel, 0, E_loc * C - 1)] *
+            sw_b[0][:, None].astype(dtype), 0)
+        # bf16 on the wire: each token receives <= top_k contributions, so
+        # bf16 accumulation is safe and halves the only MoE exchange
+        part = jnp.zeros((Tl, d), dtype).at[st_b[0]].add(contrib)
+        out = jax.lax.psum(part, "model")            # the ONLY exchange
+        return out[None].astype(dtype)
+
+    bspec = P(baxes if len(baxes) > 1 else baxes[0])
+    return jax.shard_map(
+        block, mesh=mesh,
+        in_specs=(P(bspec[0], None, None), P(bspec[0], None),
+                  P(bspec[0], None), P(bspec[0], None), P(bspec[0], None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=P(bspec[0], None, None),
+        check_vma=False)(xt, slot, st_, sw, keep,
+                         p["wi"], p["wg"], p["wo"])
+
+
+def _token_path_auto(p, cfg, xt, slot, st_, sw, keep, E, C, d, Tl, dtype):
+    """Pure-SPMD fallback (no mesh / indivisible experts): correct, used by
+    CPU tests; the dispatch stays group-local via constraints."""
+    G = xt.shape[0]
+
+    def scatter_g(slot_g, src_g):
+        return jnp.zeros((E * C + 1, d), dtype).at[slot_g].set(src_g)
+    src = jnp.take_along_axis(xt, st_[..., None], axis=1)      # (G, TK, d)
+    buckets = jax.vmap(scatter_g)(slot, src)                   # (G, EC+1, d)
+    xe = buckets[:, :E * C].reshape(G, E, C, d).transpose(1, 0, 2, 3)
+    xe = xe.reshape(E, G * C, d)
+    h = jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(dtype))
+    g = jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(dtype))
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h,
+                    p["wo"].astype(dtype))
+    ye = ye.reshape(E, G, C, d).transpose(1, 0, 2, 3).reshape(G, E * C, d)
+
+    def combine_g(ye_g, slot_g, st_g, sw_g, keep_g):
+        contrib = jnp.where(
+            keep_g[:, None],
+            ye_g[jnp.minimum(slot_g, E * C - 1)] *
+            sw_g[:, None].astype(dtype), 0)
+        return jnp.zeros((Tl, d), dtype).at[st_g].add(contrib)
+    return jax.vmap(combine_g)(ye, slot, st_, sw, keep)
+
+
+def moe_apply(p, x, cfg) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, S, d) -> (B, S, d), aux metrics/losses."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = _dispatch_groups(cfg)
+    while T % G or (T // G) < K:
+        G //= 2
+    Tl = T // G
+    xt = x.reshape(G, Tl, d)
+    xt = constrain(xt, ("batch", None, None))
+
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    logits = constrain(logits, ("batch", None, None))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G, Tl, E)
+    probs = constrain(probs, ("batch", None, None))
+    gate_w, gate_e = jax.lax.top_k(probs, K)                   # (G, Tl, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # --- group-local sort-based dispatch ----------------------------------
+    C = int(cfg.capacity_factor * K * Tl / E) or 1
+    TK = Tl * K
+    flat_e = gate_e.reshape(G, TK)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tl), K)[None], (G, TK))
+    flat_w = gate_w.reshape(G, TK)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    st_ = jnp.take_along_axis(flat_t, order, axis=1)
+    sw = jnp.take_along_axis(flat_w, order, axis=1)
+    # position within expert run = index - first occurrence of that expert
+    first = jax.vmap(lambda s: jnp.searchsorted(s, s, side="left"))(se)
+    pos_in_e = jnp.arange(TK)[None] - first
+    keep = pos_in_e < C                                        # capacity drop
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)           # overflow bin
+    slot = constrain(slot, ("batch", None))
+
+    out = _token_path(p, cfg, xt, slot, st_, sw, keep, E, C, d, Tl, x.dtype)
+
+    # --- aux losses ----------------------------------------------------------
+    me = probs.mean(axis=(0, 1))                               # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[gate_e.reshape(-1)].add(1.0) \
+        / (T * K)
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - keep.mean()
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+           "moe_dropped": dropped}
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,128 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t)              recurrence gate
+    i_t = sigmoid(W_x x_t)              input gate
+    log a_t = -c * softplus(Λ) * r_t    (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Block = (in-proj ×2 branches, short conv1d on the recurrent branch,
+RG-LRU, gelu-gated merge, out-proj).  Gates use per-head block-diagonal
+weights as in the paper.  Train/prefill uses an associative scan (O(log S)
+depth); decode is a single fused step.  The Pallas kernel
+(kernels/rglru_scan.py) implements the chunked sequential-parallel hybrid.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.partition import constrain
+from .layers import dense_init
+
+C_FACTOR = 8.0
+N_GATE_HEADS = 16
+
+
+def rglru_init(key, cfg, dtype) -> Dict[str, Any]:
+    d, w = cfg.d_model, (cfg.lru_width or cfg.d_model)
+    ks = jax.random.split(key, 7)
+    hb = w // N_GATE_HEADS
+    # Λ init so that a ∈ [0.9, 0.999] as in the paper
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / (2 * C_FACTOR)) - 1.0)
+    return {
+        "wx": dense_init(ks[1], d, w, dtype),            # recurrent branch
+        "wy": dense_init(ks[2], d, w, dtype),            # gate branch
+        "conv": (jax.random.normal(ks[3], (cfg.conv_width, w), jnp.float32)
+                 * 0.02).astype(dtype),
+        "gate_a": (jax.random.normal(ks[4], (N_GATE_HEADS, hb, hb),
+                                     jnp.float32) / math.sqrt(hb)).astype(dtype),
+        "gate_x": (jax.random.normal(ks[5], (N_GATE_HEADS, hb, hb),
+                                     jnp.float32) / math.sqrt(hb)).astype(dtype),
+        "lam": lam,
+        "wo": dense_init(ks[6], w, d, dtype),
+    }
+
+
+def rglru_axes() -> Dict[str, Tuple]:
+    return {"wx": ("fsdp", "lru"), "wy": ("fsdp", "lru"),
+            "conv": (None, "lru"),
+            "gate_a": ("lru", None, None), "gate_x": ("lru", None, None),
+            "lam": ("lru",), "wo": ("lru", "fsdp")}
+
+
+def _gates(p, x):
+    """Block-diagonal gate projections: x (B,S,w) -> r, i (B,S,w)."""
+    B, S, w = x.shape
+    xh = x.reshape(B, S, N_GATE_HEADS, w // N_GATE_HEADS)
+    r = jnp.einsum("bshk,hkj->bshj", xh, p["gate_a"].astype(x.dtype))
+    i = jnp.einsum("bshk,hkj->bshj", xh, p["gate_x"].astype(x.dtype))
+    return (jax.nn.sigmoid(r.reshape(B, S, w)),
+            jax.nn.sigmoid(i.reshape(B, S, w)))
+
+
+def _coeffs(p, x):
+    r, i = _gates(p, x)
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"]).astype(jnp.float32) \
+        * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    b = beta * (i.astype(jnp.float32) * x.astype(jnp.float32))
+    return a, b
+
+
+def rglru_scan(p, x, h0: Optional[jnp.ndarray] = None):
+    """Associative linear-recurrence scan.  x: (B,S,w) -> (y, h_last)."""
+    a, b = _coeffs(p, x)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(l, r_):
+        al, bl = l
+        ar, br = r_
+        return al * ar, bl * ar + br
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p, x, h):
+    """Single decode step.  x: (B,1,w), h: (B,w)."""
+    a, b = _coeffs(p, x)
+    h_new = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return h_new[:, None].astype(x.dtype), h_new
+
+
+def conv1d_apply(conv_w, x, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv, width W.  x: (B,S,w); state: (B,W-1,w)."""
+    W = conv_w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * conv_w[i].astype(x.dtype)
+              for i in range(W))
+    new_state = xp[:, xp.shape[1] - (W - 1):]
+    return out, new_state
+
+
+def rglru_block_apply(p, x, cfg, mode: str, cache: Optional[Dict] = None):
+    """The full recurrent block.  Returns (out, new_cache)."""
+    rec = x @ p["wx"].astype(x.dtype)
+    gate = jax.nn.gelu(x @ p["wy"].astype(x.dtype))
+    rec = constrain(rec, ("batch", "seq", "lru"))
+    conv_state = cache.get("conv") if cache else None
+    rec, new_conv = conv1d_apply(p["conv"], rec, conv_state)
+    if mode == "decode":
+        y, h_last = rglru_step(p, rec, cache["h"])
+    else:
+        h0 = cache.get("h") if cache else None
+        y, h_last = rglru_scan(p, rec, h0)
+    out = (y * gate) @ p["wo"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_last.astype(jnp.float32), "conv": new_conv}
+    return out, new_cache

@@ -1,0 +1,205 @@
+"""RWKV-6 'Finch' block (arXiv:2404.05892) — attention-free, data-dependent
+decay.
+
+Time-mix (per head, head dim N; state S ∈ R^{N×N}):
+    o_t = r_t · (diag(u) k_t v_tᵀ + S_{t-1})
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+with w_t = exp(-exp(w0 + LoRA(x̄_t))) a *data-dependent* per-channel decay
+and token-shift interpolation x̄_t = lerp(x_t, x_{t-1}, μ).
+
+Channel-mix: k = relu(x̄ @ Wk)²; out = sigmoid(x̄r @ Wr) ⊙ (k @ Wv).
+
+Train/prefill uses a chunked formulation (matmuls within chunks, one
+sequential pass over chunks — the same structure the Pallas kernel tiles);
+decode is one fused step with O(1) state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.partition import constrain
+from .layers import dense_init
+
+LORA_R = 64
+
+
+def rwkv_time_init(key, cfg, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    N = cfg.rwkv_head_dim
+    H = d // N
+    ks = jax.random.split(key, 12)
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5).astype(dtype),
+        "wr": dense_init(ks[1], d, d, dtype),
+        "wk": dense_init(ks[2], d, d, dtype),
+        "wv": dense_init(ks[3], d, d, dtype),
+        "wg": dense_init(ks[4], d, d, dtype),
+        "wo": dense_init(ks[5], d, d, dtype),
+        "w0": (jnp.zeros((d,), jnp.float32) - 6.0).astype(jnp.float32),
+        "w_lora_a": dense_init(ks[6], d, LORA_R, dtype),
+        "w_lora_b": dense_init(ks[7], LORA_R, d, dtype),
+        "u": (jax.random.normal(ks[8], (H, N), jnp.float32) * 0.02),
+        "ln_w": jnp.ones((d,), jnp.float32),  # per-head group norm on out
+    }
+
+
+def rwkv_time_axes() -> Dict[str, Tuple]:
+    return {"mu": (None, "fsdp"),
+            "wr": ("fsdp", "tensor"), "wk": ("fsdp", "tensor"),
+            "wv": ("fsdp", "tensor"), "wg": ("fsdp", "tensor"),
+            "wo": ("tensor", "fsdp"),
+            "w0": ("tensor",), "w_lora_a": ("fsdp", None),
+            "w_lora_b": (None, "tensor"), "u": ("tensor", None),
+            "ln_w": ("tensor",)}
+
+
+def rwkv_channel_init(key, cfg, dtype) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {"mu": (jax.random.uniform(ks[0], (2, d)) * 0.5).astype(dtype),
+            "wk": dense_init(ks[1], d, f, dtype),
+            "wv": dense_init(ks[2], f, d, dtype),
+            "wr": dense_init(ks[3], d, d, dtype)}
+
+
+def rwkv_channel_axes() -> Dict[str, Tuple]:
+    return {"mu": (None, "fsdp"), "wk": ("fsdp", "ffn"),
+            "wv": ("ffn", "fsdp"), "wr": ("fsdp", "tensor")}
+
+
+def _token_shift(x, last: Optional[jnp.ndarray]):
+    """x_{t-1} with optional carried state. x: (B,S,d); last: (B,d)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, 0])
+    prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+    return prev, x[:, -1]
+
+
+def wkv6_chunked(r, k, v, w, u, state: Optional[jnp.ndarray] = None,
+                 chunk: int = 64):
+    """Chunked WKV-6 recurrence.
+
+    r,k,v: (B,S,H,N); w: (B,S,H,N) decays in (0,1); u: (H,N) bonus.
+    Returns (out (B,S,H,N), final_state (B,H,N,N)).
+    The math matches ref.wkv6_ref (sequential oracle) exactly.
+    """
+    B, S, H, N = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+    C = min(chunk, S)
+    assert S % C == 0, "seq must be divisible by chunk"
+    G = S // C
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(B, G, C, H, N).transpose(1, 0, 3, 2, 4)
+    kc = k.astype(f32).reshape(B, G, C, H, N).transpose(1, 0, 3, 2, 4)
+    vc = v.astype(f32).reshape(B, G, C, H, N).transpose(1, 0, 3, 2, 4)
+    wc = w.astype(f32).reshape(B, G, C, H, N).transpose(1, 0, 3, 2, 4)
+    # (G, B, H, C, N)
+
+    tri = jnp.tril(jnp.ones((C, C), f32), k=-1)            # strictly lower
+
+    def body(st, inp):
+        rg, kg, vg, wg = inp                               # (B,H,C,N)
+        logw = jnp.log(jnp.maximum(wg, 1e-8))
+        cum = jnp.cumsum(logw, axis=2)                     # inclusive
+        cum_excl = cum - logw
+        # decay from chunk start to just before t: exp(cum_excl)
+        d_in = jnp.exp(cum_excl)                           # (B,H,C,N)
+        # contribution of carried state: r_t ⊙ d_in · S
+        out_state = jnp.einsum("bhcn,bhnm->bhcm", rg * d_in, st)
+        # intra-chunk: o_t += Σ_{s<t} (r_t ⊙ exp(cum_excl_t - cum_s)) k_s v_s
+        # A[t,s] = Σ_n r_t[n] k_s[n] exp(cum_excl[t,n] - cum[s,n]) for s<t,
+        # computed as (r ⊙ e^{cum_excl}) @ (k ⊙ e^{-cum})ᵀ.  e^{-cum} grows
+        # with accumulated decay; the decay floor (see rwkv_time_apply:
+        # log w ≥ -4) bounds the exponent by 4·chunk, so chunk ≤ 16 keeps
+        # everything comfortably inside float32 range.
+        k_scaled = kg * jnp.exp(-cum)                      # k_s e^{-cum_s}
+        A = jnp.einsum("bhtn,bhsn->bhts", rg * d_in, k_scaled)
+        A = A * tri[None, None]
+        out_intra = jnp.einsum("bhts,bhsn->bhtn", A, vg)
+        # diagonal (bonus) term: u ⊙ k_t v_t
+        diag = jnp.einsum("bhcn,bhcn->bhc", rg, kg * u[None, :, None, :])
+        out_diag = diag[..., None] * vg
+        out = out_state + out_intra + out_diag             # (B,H,C,N)
+        # state update: S' = D_total·S + Σ_s e^{cum_last - cum_s} k_s v_s
+        d_total = jnp.exp(cum[:, :, -1, :])                # (B,H,N)
+        k_tail = kg * jnp.exp(cum[:, :, -1:, :] - cum)     # (B,H,C,N)
+        st_new = st * d_total[..., None] + \
+            jnp.einsum("bhcn,bhcm->bhnm", k_tail, vg)
+        return st_new, out
+
+    state, outs = jax.lax.scan(body, state, (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, N)
+    return out.astype(r.dtype), state
+
+
+def wkv6_step(r, k, v, w, u, state):
+    """One decode step.  r,k,v,w: (B,1,H,N); state: (B,H,N,N)."""
+    f32 = jnp.float32
+    r0, k0, v0, w0 = (a.astype(f32)[:, 0] for a in (r, k, v, w))
+    kv = jnp.einsum("bhn,bhm->bhnm", k0, v0)
+    out = jnp.einsum("bhn,bhnm->bhm", r0,
+                     state + u[None, :, :, None] * kv)
+    state = state * w0[..., None] + kv
+    return out[:, None].astype(r.dtype), state
+
+
+def rwkv_time_apply(p, x, cfg, mode: str, cache: Optional[Dict] = None):
+    """Time-mix sub-block.  cache: {"shift": (B,d), "state": (B,H,N,N)}."""
+    B, S, d = x.shape
+    N = cfg.rwkv_head_dim
+    H = d // N
+    last = cache.get("shift") if cache else None
+    prev, new_shift = _token_shift(x, last)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + mu[i] * (prev - x) for i in range(5))
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(B, S, H, N)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(B, S, H, N)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(B, S, H, N)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    # data-dependent decay (the Finch contribution); the clip keeps
+    # log w ≥ -4 (decay floor e⁻⁴ ≈ 0.018) — chunked-kernel stability,
+    # see wkv6_chunked
+    dw = jnp.tanh(xw @ p["w_lora_a"].astype(x.dtype)) \
+        @ p["w_lora_b"].astype(x.dtype)
+    w = jnp.exp(-jnp.exp(jnp.clip(p["w0"] + dw.astype(jnp.float32),
+                                  -20.0, 1.3862))).reshape(B, S, H, N)
+    state = cache.get("state") if cache else None
+    if mode == "decode":
+        out, new_state = wkv6_step(r, k, v, w, p["u"], state)
+    else:
+        if state is None:
+            state = jnp.zeros((B, H, N, N), jnp.float32)
+        out, new_state = wkv6_chunked(r, k, v, w, p["u"], state,
+                                      chunk=min(16, S))
+    out = out.reshape(B, S, d)
+    # simplified group-norm over heads
+    oh = out.reshape(B, S, H, N).astype(jnp.float32)
+    oh = oh * jax.lax.rsqrt(jnp.mean(jnp.square(oh), -1, keepdims=True)
+                            + 1e-5)
+    out = (oh.reshape(B, S, d) * p["ln_w"]).astype(x.dtype)
+    out = (out * g) @ p["wo"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift": new_shift, "state": new_state}
+    return out, new_cache
+
+
+def rwkv_channel_apply(p, x, cfg, mode: str,
+                       cache: Optional[Dict] = None):
+    last = cache.get("shift") if cache else None
+    prev, new_shift = _token_shift(x, last)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + mu[0] * (prev - x)
+    xr = x + mu[1] * (prev - x)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    k = constrain(k, ("batch", "seq", "ffn"))
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) \
+        * (k @ p["wv"].astype(x.dtype))
+    new_cache = {"shift": new_shift} if cache is not None else None
+    return out, new_cache

@@ -1,0 +1,57 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+int8 per-tensor symmetric quantization with error feedback: the pod axis
+is the slow link (DCN, not ICI), so shrinking that one all-reduce 4x
+(fp32->int8) moves the collective roofline term directly.  Error feedback
+keeps the scheme unbiased over time (residual carried in fp32 state the
+same shape as the grads, sharded like params).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads_psum(grads, residual, axis_name: str, n_pods: int = 2):
+    """Inside shard_map over the pod axis: quantize (grad + residual),
+    psum a true-int8 payload, dequantize, update residual.
+
+    The quantization range is ±(127 // n_pods) so the int8 ring-reduce
+    cannot overflow — the wire payload really is 1 byte/element (4x less
+    DCN traffic than fp32, 2x less than bf16).
+
+    Returns (synced_grads, new_residual)."""
+    qmax = max(127 // n_pods, 1)
+
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        # shared scale across pods (one tiny pmax) so the int8 sum is exact
+        scale = jax.lax.pmax(jnp.max(jnp.abs(g)), axis_name) / qmax + 1e-12
+        q = jnp.clip(jnp.round(g / scale), -qmax, qmax).astype(jnp.int8)
+        new_r = g - q.astype(jnp.float32) * scale   # error feedback
+        qsum = jax.lax.psum(q, axis_name)           # int8 on the wire
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        synced = qsum.astype(jnp.float32) * scale / n
+        return synced, new_r
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]))
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)

@@ -1,0 +1,76 @@
+"""Batched serving engine: continuous prefill + decode with donated caches.
+
+The KV cache is updated in place via buffer donation — the device-side
+analogue of Zerrow's resharing (appending one token never rewrites the
+cache, exactly as SIPC's slice/concat never rewrites input buffers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models.api import ModelAPI
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # (S,) int32
+    max_new: int = 16
+    out: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, api: ModelAPI, params, *, batch: int,
+                 max_seq: int, greedy: bool = True):
+        self.api = api
+        self.params = params
+        self.batch = batch
+        self.max_seq = max_seq
+        self.greedy = greedy
+        shape = ShapeConfig("serve", "prefill", max_seq, batch)
+        self._prefill = jax.jit(
+            lambda p, b: api.prefill(p, b, shape))
+        self._decode = jax.jit(api.serve_step, donate_argnums=(2,))
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0,
+                      "prefill_s": 0.0, "decode_s": 0.0}
+
+    def run_batch(self, requests: List[Request]) -> List[List[int]]:
+        assert len(requests) <= self.batch
+        B = self.batch
+        S = max(len(r.prompt) for r in requests)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, S - len(r.prompt):] = r.prompt     # left-pad
+        t0 = time.perf_counter()
+        logits, caches = self._prefill(self.params,
+                                       {"tokens": jnp.asarray(toks)})
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += B * S
+
+        outs = [[] for _ in range(B)]
+        cur = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
+                         np.int32).reshape(B, 1)
+        max_new = max(r.max_new for r in requests)
+        pos = S
+        t0 = time.perf_counter()
+        for step in range(max_new):
+            for i in range(B):
+                outs[i].append(int(cur[i, 0]))
+            logits, caches = self._decode(
+                self.params,
+                {"tokens": jnp.asarray(cur),
+                 "positions": jnp.full((B, 1), pos, jnp.int32)},
+                caches)
+            cur = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
+                             np.int32).reshape(B, 1)
+            pos += 1
+            self.stats["decode_steps"] += 1
+        self.stats["decode_s"] += time.perf_counter() - t0
+        return [outs[i][:r.max_new] for i, r in enumerate(requests)]

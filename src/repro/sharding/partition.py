@@ -1,0 +1,226 @@
+"""Logical-axis partitioning (MaxText-style) for the production mesh.
+
+Mesh axes:
+  single-pod:  ("data", "model")            = (16, 16)   -> 256 chips
+  multi-pod:   ("pod", "data", "model")     = (2, 16, 16) -> 512 chips
+
+Logical axes used by the model code:
+  "batch"        -> ("pod", "data")   activations' batch dim
+  "fsdp"         -> "data"            param dim sharded ZeRO-style
+  "tensor"       -> "model"           TP dim (heads / ffn / vocab / experts)
+  "expert"       -> "model"           expert parallelism for MoE stacks
+  "seq"          -> None by default; "model" under sequence parallelism
+  "layers"/None  -> replicated
+
+The "pod" axis is *pure data parallelism*: params are replicated across
+pods (only the gradient all-reduce crosses the DCN once per step), while
+FSDP stays inside a pod — deliberate: cross-DCN per-layer all-gathers
+would dominate the collective roofline term (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axis (or tuple of mesh axes)."""
+    rules: Tuple[Tuple[str, Any], ...] = (
+        ("batch", ("pod", "data")),
+        ("fsdp", "data"),
+        ("tensor", "model"),
+        ("expert", "model"),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("vocab", "model"),
+        ("ffn", "model"),
+        ("seq", None),
+        ("act_seq", None),      # residual-stream seq dim between blocks
+        ("kv_seq", None),       # decode KV-cache length dim (serving)
+        ("lru", "model"),
+        ("layers", None),
+    )
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dict(self.rules)
+
+    def with_overrides(self, **kw) -> "ShardingRules":
+        d = self.to_dict()
+        d.update(kw)
+        return ShardingRules(tuple(d.items()))
+
+
+DEFAULT_RULES = ShardingRules()
+
+# sequence-parallel variant for very long sequences (beyond-paper perf knob)
+SP_RULES = DEFAULT_RULES.with_overrides(seq="model")
+
+# activation sequence-sharding: the residual stream saved between scanned
+# blocks (the remat working set) lives seq-sharded over 'model'; XLA
+# re-gathers it at each block entry.  Trades one all-gather/layer for a
+# 16x smaller saved-activation footprint — required to fit the 340B-class
+# train cells on 16 GB chips.
+ACT_SP_RULES = DEFAULT_RULES.with_overrides(act_seq="model")
+
+# serving topology (decode/prefill): weights replicated across 'data'
+# (FSDP gathers per token would swamp the ICI), TP over 'model', and the
+# KV cache *length*-sharded over 'model' (flash-decoding style split-K:
+# per-chip partial softmax + a tiny cross-chip combine).
+SERVE_RULES = DEFAULT_RULES.with_overrides(fsdp=None, kv_seq="model")
+
+# big-model serving (weights at TP-16 exceed a 16 GB chip): keep the fsdp
+# dim sharded over 'data' as well — weights live 2D-sharded (256-way) and
+# XLA resolves each use as row-parallel partial sums or per-layer gathers,
+# whichever is cheaper.  Trades collective time for fitting at all; the
+# production alternative is pipeline parallelism (DESIGN.md §5).
+SERVE_BIG_RULES = DEFAULT_RULES.with_overrides(kv_seq="model")
+
+# pure-FSDP layout (no tensor parallelism): params fully sharded over all
+# 256 chips, weights gathered per layer, ZERO activation all-reduces.
+# For dense archs at large batch this trades the Megatron partial-sum
+# reductions (∝ tokens·d per layer) for weight gathers (∝ params·accum) —
+# a huge win when tokens >> params/accum (§Perf iteration 3).
+FSDP_RULES = DEFAULT_RULES.with_overrides(
+    batch=("pod", "data", "model"),   # batch over ALL chips (no TP)
+    fsdp=("data", "model"), tensor=None, heads=None, kv_heads=None,
+    vocab=None, ffn=None, lru=None, expert=None)
+
+
+def logical_to_spec(axes: Tuple[Optional[str], ...], mesh: Mesh,
+                    rules: ShardingRules = DEFAULT_RULES,
+                    shape: Optional[Tuple[int, ...]] = None) -> P:
+    """Map logical axis names to a PartitionSpec valid for this mesh.
+
+    If ``shape`` is given, mesh axes whose size does not divide the
+    corresponding dimension are dropped (dim replicated) — e.g. smollm's
+    9 attention heads cannot be TP-sharded 16 ways; multi-axis entries
+    keep the longest dividing prefix (("pod","data") on a batch divisible
+    by 2 but not 32 keeps just "pod").
+    """
+    table = rules.to_dict()
+    mesh_axes = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = set()
+    out = []
+    for i, ax in enumerate(axes):
+        if ax is None:
+            out.append(None)
+            continue
+        m = table.get(ax, None)
+        if m is None:
+            out.append(None)
+            continue
+        cand = tuple(a for a in ((m,) if isinstance(m, str) else m)
+                     if a in mesh_axes and a not in used)
+        if shape is not None and i < len(shape):
+            kept, prod = [], 1
+            for a in cand:
+                if shape[i] % (prod * sizes[a]) == 0:
+                    kept.append(a)
+                    prod *= sizes[a]
+                else:
+                    break
+            cand = tuple(kept)
+        for a in cand:
+            used.add(a)
+        out.append(cand if len(cand) > 1 else (cand[0] if cand else None))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and \
+        all(a is None or isinstance(a, str) for a in x)
+
+
+def shardings_for_tree(logical_tree, mesh: Mesh,
+                       rules: ShardingRules = DEFAULT_RULES,
+                       specs_tree=None):
+    """Map a pytree of logical-axis tuples to NamedShardings.
+
+    ``specs_tree`` (matching pytree of arrays/ShapeDtypeStructs) enables
+    divisibility-aware axis dropping.
+    """
+    if specs_tree is None:
+        return jax.tree.map(
+            lambda axes: NamedSharding(mesh,
+                                       logical_to_spec(axes, mesh, rules)),
+            logical_tree, is_leaf=_is_axes_leaf)
+
+    flat_axes = jax.tree.flatten(logical_tree, is_leaf=_is_axes_leaf)[0]
+    flat_specs, treedef = jax.tree.flatten(specs_tree)
+    assert len(flat_axes) == len(flat_specs), \
+        (len(flat_axes), len(flat_specs))
+    out = [NamedSharding(mesh, logical_to_spec(a, mesh, rules,
+                                               tuple(s.shape)))
+           for a, s in zip(flat_axes, flat_specs)]
+    return treedef.unflatten(out)
+
+
+# module-level mesh/rules context so model code can constrain activations
+# without threading a mesh handle through every layer
+_CURRENT: Dict[str, Any] = {"mesh": None, "rules": DEFAULT_RULES}
+
+
+def set_mesh(mesh: Optional[Mesh],
+             rules: ShardingRules = DEFAULT_RULES) -> None:
+    _CURRENT["mesh"] = mesh
+    _CURRENT["rules"] = rules
+
+
+class use_mesh:
+    """Context manager: activate a mesh (+rules) for logical constraints."""
+
+    def __init__(self, mesh: Optional[Mesh],
+                 rules: ShardingRules = DEFAULT_RULES):
+        self.new = (mesh, rules)
+
+    def __enter__(self):
+        self.old = (_CURRENT["mesh"], _CURRENT["rules"])
+        set_mesh(*self.new)
+        return self.new[0]
+
+    def __exit__(self, *exc):
+        set_mesh(*self.old)
+        return False
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT["mesh"]
+
+
+def current_rules() -> ShardingRules:
+    return _CURRENT["rules"]
+
+
+def constrain_tree(tree, axes_tree, rules: Optional["ShardingRules"] = None):
+    """constrain() every leaf of ``tree`` with the matching logical axes
+    from ``axes_tree`` (same structure, tuple-of-names leaves)."""
+    flat, treedef = jax.tree.flatten(tree)
+    flat_axes = jax.tree.flatten(axes_tree, is_leaf=_is_axes_leaf)[0]
+    assert len(flat) == len(flat_axes), (len(flat), len(flat_axes))
+    return treedef.unflatten([constrain(x, a, rules)
+                              for x, a in zip(flat, flat_axes)])
+
+
+def constrain(x, axes: Tuple[Optional[str], ...],
+              rules: Optional[ShardingRules] = None):
+    """with_sharding_constraint by logical axes (no-op outside a mesh)."""
+    mesh = _CURRENT["mesh"]
+    if mesh is None:
+        return x
+    rules = rules or _CURRENT["rules"]
+    axes = tuple(axes)[:x.ndim]
+    spec = logical_to_spec(axes, mesh, rules, tuple(x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def divisible_pad(n: int, k: int) -> int:
+    return -(-n // k) * k

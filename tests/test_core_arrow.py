@@ -1,0 +1,105 @@
+"""Unit tests for the Arrow computational format layer."""
+import numpy as np
+import pytest
+
+from repro.core import arrow as A
+from repro.core import ops
+
+
+def test_primitive_roundtrip():
+    v = np.arange(100, dtype=np.int64)
+    c = A.Column.primitive(v)
+    assert c.length == 100
+    assert c.type is A.INT64
+    assert np.array_equal(c.to_numpy(), v)
+
+
+def test_utf8_from_strings():
+    c = A.Column.from_strings(["ab", "", "cdef", "g"])
+    assert c.length == 4
+    assert c.get_bytes(0) == b"ab"
+    assert c.get_bytes(1) == b""
+    assert c.get_bytes(2) == b"cdef"
+    assert c.get_bytes(3) == b"g"
+
+
+def test_validity_bitmap_roundtrip():
+    mask = np.array([True, False, True, True, False, True, True, True, False])
+    bm = A.pack_validity(mask)
+    assert bm.nbytes == 2
+    assert np.array_equal(A.unpack_validity(bm, 9), mask)
+
+
+def test_slice_is_view():
+    v = np.arange(1000, dtype=np.float64)
+    c = A.Column.primitive(v)
+    s = c.slice(100, 200)
+    assert s.length == 100
+    # zero copy: the slice's values share memory with the parent
+    assert s.values.base is v or s.values.base is c.values.base or \
+        s.values.__array_interface__["data"][0] == \
+        v.__array_interface__["data"][0] + 100 * 8
+
+
+def test_utf8_slice_shares_values_buffer():
+    c = A.Column.from_strings([f"s{i:03d}" for i in range(50)])
+    s = c.slice(10, 20)
+    assert s.length == 10
+    assert s.get_bytes(0) == b"s010"
+    # values buffer is the SAME array (non-zero-based offsets)
+    assert s.values is c.values
+
+
+def test_take_utf8():
+    c = A.Column.from_strings(["aa", "bbb", "c", "dddd"])
+    t = c.take(np.array([3, 0, 0, 2]))
+    assert [t.get_bytes(i) for i in range(4)] == [b"dddd", b"aa", b"aa", b"c"]
+
+
+def test_dictionary_roundtrip():
+    dic = A.Column.from_strings(["x", "yy", "zzz"])
+    codes = np.array([2, 0, 1, 1, 2], dtype=np.int32)
+    c = A.Column.dictionary_encoded(codes, dic)
+    dec = c.decode_dictionary()
+    assert [dec.get_bytes(i) for i in range(5)] == \
+        [b"zzz", b"x", b"yy", b"yy", b"zzz"]
+
+
+def test_dict_take_shares_dictionary():
+    dic = A.Column.from_strings(["x", "yy", "zzz"])
+    c = A.Column.dictionary_encoded(np.array([0, 1, 2, 0], np.int32), dic)
+    t = c.take(np.array([2, 0]))
+    assert t.dictionary is dic  # dictionary sharing
+    assert t._get_logical_bytes(0) == b"zzz"
+
+
+def test_table_pydict_roundtrip():
+    d = {"a": [1, 2, 3], "b": ["x", "y", "z"]}
+    t = A.Table.from_pydict(d)
+    assert t.num_rows == 3
+    assert t.to_pydict() == {"a": [1, 2, 3], "b": ["x", "y", "z"]}
+
+
+def test_table_equals():
+    t1 = A.Table.from_pydict({"a": [1, 2, 3]})
+    t2 = A.Table.from_pydict({"a": [1, 2, 3]})
+    t3 = A.Table.from_pydict({"a": [1, 2, 4]})
+    assert t1.equals(t2)
+    assert not t1.equals(t3)
+
+
+def test_chunked_combine():
+    t1 = A.Table.from_pydict({"a": [1, 2], "s": ["p", "qq"]})
+    t2 = A.Table.from_pydict({"a": [3], "s": ["rrr"]})
+    t = ops.concat_tables([t1, t2])
+    assert len(t.batches) == 2
+    assert t.num_rows == 3
+    c = t.combine()
+    assert len(c.batches) == 1
+    assert c.to_pydict() == {"a": [1, 2, 3], "s": ["p", "qq", "rrr"]}
+
+
+def test_ranges_helper():
+    lens = np.array([3, 0, 2, 1], dtype=np.int64)
+    r = A._ranges(lens)
+    assert np.array_equal(r, [0, 1, 2, 0, 1, 0])

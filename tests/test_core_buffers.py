@@ -1,0 +1,178 @@
+"""Unit tests for BufferStore / KernelZero (de-anonymization, swap)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (AnonRegion, BufferStore, KernelZero, OOMError, PAGE,
+                        alloc_aligned)
+
+
+@pytest.fixture()
+def store(tmp_path):
+    s = BufferStore(swap_dir=str(tmp_path / "swap"))
+    yield s
+    s.close()
+
+
+def test_alloc_aligned():
+    a = alloc_aligned(10000)
+    assert a.__array_interface__["data"][0] % PAGE == 0
+    assert a.nbytes == 10000
+
+
+def test_deanon_zero_copy_aligned(store):
+    kz = KernelZero(store)
+    cg = store.new_cgroup("sb")
+    f = kz.new_file(cg)
+    src = alloc_aligned(8 * PAGE).view(np.int64)
+    src[:] = np.arange(src.size)
+    before = store.stats.bytes_copied
+    off, n = kz.deanon(f, src)
+    assert n == 8 * PAGE
+    # aligned input: no partial pages -> zero bytes copied
+    assert store.stats.bytes_copied == before
+    assert store.stats.bytes_deanon >= 8 * PAGE
+    # the file view IS the source memory
+    view = f.read(off, n)
+    assert view.__array_interface__["data"][0] == \
+        src.view(np.uint8).__array_interface__["data"][0]
+    assert np.array_equal(view.view(np.int64), np.arange(src.size))
+    # transferred memory is immutable now
+    with pytest.raises(ValueError):
+        src[0] = 1
+
+
+def test_deanon_partial_pages_accounted(store):
+    kz = KernelZero(store)
+    cg = store.new_cgroup("sb")
+    f = kz.new_file(cg)
+    base = alloc_aligned(4 * PAGE)
+    src = base[100:100 + 2 * PAGE]  # unaligned head/tail
+    off, n = kz.deanon(f, src)
+    assert store.stats.partial_page_bytes > 0
+    assert np.array_equal(f.read(off, n), src)
+
+
+def test_writer_copy_is_a_real_copy(store):
+    kz = KernelZero(store)
+    cg = store.new_cgroup("sb")
+    f = kz.new_file(cg)
+    src = np.arange(1024, dtype=np.int64)
+    off, n = kz.writer_copy(f, src)
+    assert store.stats.bytes_copied >= n
+    view = f.read(off, n)
+    assert view.__array_interface__["data"][0] != \
+        src.view(np.uint8).__array_interface__["data"][0]
+    assert np.array_equal(view.view(np.int64), src)
+
+
+def test_charge_accounting_transfer(store):
+    kz = KernelZero(store)
+    sandbox_cg = store.new_cgroup("sb")
+    file_cg = store.new_cgroup("files")
+    arr = alloc_aligned(PAGE * 4)
+    region = AnonRegion(arr, sandbox_cg)
+    assert sandbox_cg.charged == PAGE * 4
+    f = kz.new_file(file_cg)
+    kz.deanon(f, region)
+    assert sandbox_cg.charged == 0            # charge moved
+    assert file_cg.charged == PAGE * 4
+    assert store.global_charged == PAGE * 4    # no double count
+
+
+def test_swap_out_in_roundtrip(store):
+    kz = KernelZero(store)
+    cg = store.new_cgroup("sb")
+    f = kz.new_file(cg)
+    src = alloc_aligned(PAGE * 16)
+    src_vals = np.random.default_rng(0).integers(0, 255, PAGE * 16,
+                                                 dtype=np.uint8)
+    src[:] = src_vals
+    off, n = kz.deanon(f, src)
+    assert store.swap_out_file(f.file_id) == n
+    assert cg.charged == 0
+    assert cg.swap_charged == n
+    view = f.read(off, n)              # triggers foreground swapin
+    assert store.stats.fg_swapin_pages == 16
+    assert np.array_equal(view, src_vals)
+    assert cg.charged == n
+
+
+def test_direct_swap_no_io(store):
+    kz = KernelZero(store)
+    cg = store.new_cgroup("sb")
+    arr = alloc_aligned(PAGE * 8)
+    arr[:] = 7
+    region = AnonRegion(arr, cg)
+    region.swap_out(store)
+    io_before = store.stats.swapin_bytes
+    f = kz.new_file(cg)
+    off, n = kz.deanon(f, region, direct_swap=True)
+    # no swapin happened: the swap entry moved into the file
+    assert store.stats.swapin_bytes == io_before
+    assert store.stats.direct_swap_bytes == PAGE * 8
+    # reading the file later swaps in and sees the data
+    view = f.read(off, n)
+    assert np.all(view == 7)
+
+
+def test_indirect_swap_does_io(store):
+    kz = KernelZero(store)
+    cg = store.new_cgroup("sb")
+    arr = alloc_aligned(PAGE * 8)
+    arr[:] = 9
+    region = AnonRegion(arr, cg)
+    region.swap_out(store)
+    f = kz.new_file(cg)
+    io_before = store.stats.swapin_bytes
+    kz.deanon(f, region, direct_swap=False)
+    assert store.stats.swapin_bytes == io_before + PAGE * 8
+
+
+def test_cgroup_limit_triggers_reclaim(tmp_path):
+    store = BufferStore(swap_dir=str(tmp_path / "swap"))
+    kz = KernelZero(store)
+    cg = store.new_cgroup("sb", limit=PAGE * 8)
+    f = kz.new_file(cg)
+    for i in range(4):
+        kz.deanon(f, alloc_aligned(PAGE * 4))
+    # limit 8 pages, 16 appended -> at least half swapped out
+    assert cg.charged <= PAGE * 8
+    assert store.stats.swapout_bytes >= PAGE * 8
+    store.close()
+
+
+def test_system_oom_without_kswap(tmp_path):
+    store = BufferStore(swap_dir=str(tmp_path / "swap"),
+                        system_limit=PAGE * 8)
+    store.kswap_enabled = False
+    kz = KernelZero(store)
+    cg = store.new_cgroup("sb")
+    f = kz.new_file(cg)
+    with pytest.raises(OOMError):
+        for _ in range(4):
+            kz.deanon(f, alloc_aligned(PAGE * 4))
+    store.close()
+
+
+def test_kswap_avoids_oom(tmp_path):
+    store = BufferStore(swap_dir=str(tmp_path / "swap"),
+                        system_limit=PAGE * 8)
+    kz = KernelZero(store)
+    cg = store.new_cgroup("sb")
+    f = kz.new_file(cg)
+    for _ in range(4):
+        kz.deanon(f, alloc_aligned(PAGE * 4))
+    assert store.stats.swapout_events > 0
+    store.close()
+
+
+def test_file_delete_frees_charge(store):
+    kz = KernelZero(store)
+    cg = store.new_cgroup("sb")
+    f = kz.new_file(cg)
+    kz.deanon(f, alloc_aligned(PAGE * 4))
+    assert cg.charged == PAGE * 4
+    store.delete_file(f.file_id)
+    assert cg.charged == 0

@@ -1,0 +1,178 @@
+"""DAG executor + DeCache + Resource Manager (admission & eviction)."""
+import numpy as np
+import pytest
+
+from repro.core import (BufferStore, DAG, Executor, NodeSpec, OOMError,
+                        RMConfig, ResourceManager, SipcReader, Table)
+from repro.core import ops, zarquet
+
+
+@pytest.fixture()
+def source(tmp_path):
+    path = str(tmp_path / "t.zq")
+    t = zarquet.gen_int_table(4, 1 << 14, seed=7)
+    zarquet.write_table(path, t)
+    return path, t
+
+
+def make_env(tmp_path, **cfg):
+    store = BufferStore(swap_dir=str(tmp_path / "swap"))
+    rm = ResourceManager(store, RMConfig(**cfg))
+    ex = Executor(store, rm)
+    return store, rm, ex
+
+
+def two_node_dag(path, name="d"):
+    return DAG([
+        NodeSpec("load", source=path, est_mem=1 << 16),
+        NodeSpec("sum", fn=lambda ts: Table.from_pydict(
+            {"total": np.array([ops.sum_all_ints(ts[0])], dtype=np.int64)}),
+            deps=["load"], est_mem=1 << 12),
+    ], name=name)
+
+
+def test_zarquet_roundtrip(tmp_path):
+    path = str(tmp_path / "t.zq")
+    t = Table.from_pydict({"a": np.arange(100, dtype=np.int64),
+                           "s": [f"v{i}" for i in range(100)]})
+    zarquet.write_table(path, t)
+    t2 = zarquet.read_table(path)
+    assert t.equals(t2)
+
+
+def test_zarquet_dict_columns(tmp_path):
+    path = str(tmp_path / "t.zq")
+    t = Table.from_pydict({"s": ["aa", "bb", "aa", "cc", "bb"]})
+    zarquet.write_table(path, t)
+    t2 = zarquet.read_table(path, dict_columns=("s",))
+    col = t2.batches[0].columns[0]
+    assert col.type.is_dict
+    assert col.dictionary.length == 3
+    assert t2.to_pydict()["s"] == ["aa", "bb", "aa", "cc", "bb"]
+
+
+def test_simple_dag_runs(tmp_path, source):
+    path, t = source
+    store, rm, ex = make_env(tmp_path)
+    dag = two_node_dag(path)
+    ex.run([dag])
+    assert dag.all_done()
+    # validate the computed sum
+    out = dag.nodes["sum"]
+    assert out.status == "done"
+
+
+def test_decache_dedups_loads(tmp_path, source):
+    path, _ = source
+    store, rm, ex = make_env(tmp_path, decache=True)
+    dags = [two_node_dag(path, f"d{i}") for i in range(5)]
+    ex.run(dags)
+    assert ex.load_runs == 1            # loaded once, shared 5 ways
+    assert rm.decache.hits >= 4
+
+
+def test_no_decache_loads_every_time(tmp_path, source):
+    path, _ = source
+    store, rm, ex = make_env(tmp_path, decache=False)
+    dags = [two_node_dag(path, f"d{i}") for i in range(3)]
+    ex.run(dags)
+    assert ex.load_runs == 3
+
+
+def chain_dag(path, depth, name="c", repeat=1):
+    nodes = [NodeSpec("load", source=path, est_mem=1 << 16)]
+    prev = "load"
+    for i in range(depth):
+        def fn(ts, i=i):
+            return ops.add_columns_compute(ts[0], "i0", "i1", f"n{i}",
+                                           repeat=repeat)
+        nodes.append(NodeSpec(f"add{i}", fn=fn, deps=[prev],
+                              est_mem=1 << 15))
+        prev = f"add{i}"
+    return DAG(nodes, name=name)
+
+
+def test_chain_dag_correct(tmp_path, source):
+    path, t = source
+    store, rm, ex = make_env(tmp_path)
+    dag = chain_dag(path, 3)
+    ex.run([dag])
+    assert dag.all_done()
+
+
+def test_rollback_eviction_reexecutes(tmp_path, source):
+    path, _ = source
+    # tiny memory budget forces eviction of intermediate outputs
+    store, rm, ex = make_env(tmp_path, memory_limit=3 << 15,
+                             policy="rollback")
+    dags = [chain_dag(path, 4, f"c{i}") for i in range(3)]
+    ex.run(dags)
+    assert all(d.all_done() for d in dags)
+    assert rm.evictions["rollback"] + rm.evictions["uncache"] > 0
+    # some nodes had to run more than once
+    assert ex.node_runs > sum(len(d.nodes) for d in dags) - 3
+
+
+def test_limitdrop_eviction_swaps(tmp_path, source):
+    path, _ = source
+    store, rm, ex = make_env(tmp_path, memory_limit=3 << 15,
+                             policy="limitdrop")
+    dags = [chain_dag(path, 4, f"c{i}") for i in range(3)]
+    ex.run(dags)
+    assert all(d.all_done() for d in dags)
+    assert store.stats.swapout_bytes > 0
+    assert rm.evictions["limitdrop"] > 0
+
+
+def test_adaptive_eviction_completes(tmp_path, source):
+    path, _ = source
+    store, rm, ex = make_env(tmp_path, memory_limit=3 << 15,
+                             policy="adaptive")
+    dags = [chain_dag(path, 4, f"c{i}") for i in range(3)]
+    ex.run(dags)
+    assert all(d.all_done() for d in dags)
+    assert rm.evictions["rollback"] + rm.evictions["limitdrop"] > 0
+
+
+def test_fanout_dag(tmp_path, source):
+    """Fanout-2, depth-3 (the Fig 10b shape): 1 load + branching adds."""
+    path, _ = source
+    store, rm, ex = make_env(tmp_path)
+    nodes = [NodeSpec("load", source=path, est_mem=1 << 16)]
+    frontier = ["load"]
+    k = 0
+    for d in range(3):
+        nxt = []
+        for p in frontier:
+            for b in range(2):
+                name = f"n{k}"
+                k += 1
+                nodes.append(NodeSpec(
+                    name, fn=lambda ts, i=k: ops.add_columns_compute(
+                        ts[0], "i0", "i1", f"c{i}"),
+                    deps=[p], est_mem=1 << 15))
+                nxt.append(name)
+        frontier = nxt
+    dag = DAG(nodes, "fan")
+    ex.run([dag])
+    assert dag.all_done()
+    assert len(dag.nodes) == 1 + 2 + 4 + 8
+
+
+def test_memory_is_freed_after_dags(tmp_path, source):
+    path, _ = source
+    store, rm, ex = make_env(tmp_path, decache=False)
+    dags = [two_node_dag(path, f"d{i}") for i in range(3)]
+    ex.run(dags)
+    assert store.global_charged == 0   # all intermediates GC'd
+
+
+def test_decache_pinned_survives_dag(tmp_path, source):
+    path, _ = source
+    store, rm, ex = make_env(tmp_path, decache=True)
+    ex.run([two_node_dag(path, "d0")])
+    assert store.global_charged > 0    # DeCache entry persists
+    # uncache frees it
+    for e in rm.decache.uncache_candidates():
+        rm.decache.uncache(e)
+    assert store.global_charged == 0

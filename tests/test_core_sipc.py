@@ -1,0 +1,209 @@
+"""SIPC: reference-passing IPC, IPC inspection, resharing, dict sharing."""
+import numpy as np
+import pytest
+
+from repro.core import (AddressMap, BufferStore, Column, KernelZero,
+                        SipcReader, SipcWriter, Table, alloc_aligned)
+from repro.core import ops
+from repro.core.zarquet import gen_int_table, gen_str_table
+
+
+@pytest.fixture()
+def env(tmp_path):
+    store = BufferStore(swap_dir=str(tmp_path / "swap"))
+    kz = KernelZero(store)
+    cg = store.new_cgroup("sb")
+    yield store, kz, cg
+    store.close()
+
+
+def roundtrip(store, kz, cg, table, mode="zero"):
+    w = SipcWriter(store, kz, cg, mode=mode)
+    msg = w.write_table(table)
+    r = SipcReader(store, mode=mode)
+    return msg, r.read_table(msg), r
+
+
+def test_roundtrip_zero(env):
+    store, kz, cg = env
+    t = Table.from_pydict({"a": np.arange(1000, dtype=np.int64),
+                           "s": [f"v{i}" for i in range(1000)]})
+    msg, t2, _ = roundtrip(store, kz, cg, t)
+    assert t.equals(t2)
+    # schema copied, data referenced: wire size is tiny
+    assert msg.wire_nbytes < 1000
+    assert msg.new_bytes > 0 and msg.reshared_bytes == 0
+
+
+def test_roundtrip_modes_equal(env):
+    store, kz, cg = env
+    t = Table.from_pydict({"a": np.arange(257, dtype=np.float64),
+                           "s": [f"x{i}" for i in range(257)]})
+    for mode in ("full_copy", "writer_copy", "zero", "zero_noreshare"):
+        _, t2, _ = roundtrip(store, kz, cg, t, mode)
+        assert t.equals(t2), mode
+
+
+def test_zero_mode_reader_views_share_memory(env):
+    store, kz, cg = env
+    v = alloc_aligned(8 * 4096).view(np.int64)
+    v[:] = np.arange(v.size)
+    t = Table.from_pydict({"a": v})
+    msg, t2, _ = roundtrip(store, kz, cg, t)
+    a1 = v.view(np.uint8).__array_interface__["data"][0]
+    a2 = t2.batches[0].columns[0].values.view(np.uint8) \
+        .__array_interface__["data"][0]
+    assert a1 == a2  # true zero copy end to end
+
+
+def test_writer_copy_mode_copies(env):
+    store, kz, cg = env
+    t = gen_int_table(2, 1 << 16)
+    before = store.stats.bytes_copied
+    roundtrip(store, kz, cg, t, mode="writer_copy")
+    assert store.stats.bytes_copied - before >= 2 * (1 << 16)
+
+
+# ---------------------------------------------------------------------------
+# resharing (IPC inspection)
+# ---------------------------------------------------------------------------
+
+def run_node(store, kz, in_msg, fn, mode="zero"):
+    """Simulate a downstream node: read inputs, apply fn, SIPC-write."""
+    cg = store.new_cgroup("node")
+    reader = SipcReader(store, mode=mode)
+    t = reader.read_table(in_msg)
+    out = fn(t)
+    w = SipcWriter(store, kz, cg, mode=mode, input_map=reader.map)
+    return w.write_table(out)
+
+
+def test_reshare_drop_columns(env):
+    store, kz, cg = env
+    t = gen_int_table(10, 1 << 14)
+    msg, _, _ = roundtrip(store, kz, cg, t)
+    out = run_node(store, kz, msg, lambda x: ops.drop_columns(x, ["i0", "i1"]))
+    assert out.new_bytes == 0                    # zero new physical data
+    assert out.reshared_bytes == 8 * (1 << 14)
+    r = SipcReader(store)
+    t2 = r.read_table(out)
+    assert t2.num_columns == 8
+    assert t2.equals(ops.drop_columns(t, ["i0", "i1"]))
+
+
+def test_reshare_slice_rows(env):
+    store, kz, cg = env
+    t = gen_int_table(4, 1 << 14)
+    msg, _, _ = roundtrip(store, kz, cg, t)
+    out = run_node(store, kz, msg, lambda x: ops.slice_rows(x, 10, 500))
+    assert out.new_bytes == 0
+    t2 = SipcReader(store).read_table(out)
+    assert t2.equals(ops.slice_rows(t, 10, 500))
+
+
+def test_reshare_slice_strings(env):
+    store, kz, cg = env
+    t = gen_str_table(2, 1 << 14, str_len=20)
+    msg, _, _ = roundtrip(store, kz, cg, t)
+    out = run_node(store, kz, msg, lambda x: ops.slice_rows(x, 5, 100))
+    assert out.new_bytes == 0                    # offsets view + values ref
+    t2 = SipcReader(store).read_table(out)
+    assert t2.equals(ops.slice_rows(t, 5, 100))
+
+
+def test_reshare_add_column_costs_only_new(env):
+    store, kz, cg = env
+    t = gen_int_table(4, 1 << 14)
+    msg, _, _ = roundtrip(store, kz, cg, t)
+    ncol = (1 << 14) // 8
+    out = run_node(store, kz, msg,
+                   lambda x: ops.add_column(
+                       x, "new", np.arange(ncol, dtype=np.int64)))
+    assert out.new_bytes == 1 << 14              # just the added column
+    assert out.reshared_bytes == 4 * (1 << 14)
+
+
+def test_reshare_concat(env):
+    store, kz, cg = env
+    t = gen_int_table(3, 1 << 13, seed=1)
+    msg, _, _ = roundtrip(store, kz, cg, t)
+
+    def concat_self(x):
+        return ops.concat_tables([x, x])
+    out = run_node(store, kz, msg, concat_self)
+    # both halves reference the same input buffers -> zero new data
+    assert out.new_bytes == 0
+    t2 = SipcReader(store).read_table(out)
+    assert t2.num_rows == 2 * t.num_rows
+
+
+def test_filter_copies_but_dict_shares(env):
+    store, kz, cg = env
+    t = gen_str_table(2, 1 << 14, str_len=16, seed=3)
+    t = ops.dict_encode(t, ["s0", "s1"])
+    msg, _, _ = roundtrip(store, kz, cg, t)
+    nrows = t.num_rows
+
+    def filt(x):
+        mask = np.zeros(x.num_rows, dtype=bool)
+        mask[::2] = True
+        return ops.filter_rows(x, mask)
+    out = run_node(store, kz, msg, filt)
+    # codes copied (4B * kept rows * 2 cols), dictionaries reshared
+    assert out.new_bytes == 2 * 4 * ((nrows + 1) // 2)
+    assert out.reshared_bytes > 0
+    t2 = SipcReader(store).read_table(out)
+    mask = np.zeros(nrows, dtype=bool)
+    mask[::2] = True
+    assert t2.equals(ops.filter_rows(t, mask))
+
+
+def test_upper_ascii_reshares_offsets(env):
+    store, kz, cg = env
+    t = gen_str_table(1, 1 << 13, str_len=32, seed=5)
+    msg, _, _ = roundtrip(store, kz, cg, t)
+    out = run_node(store, kz, msg, lambda x: ops.upper(x, "s0"))
+    # ASCII fast path: values new, offsets reshared
+    nrows = t.num_rows
+    assert out.reshared_bytes == (nrows + 1) * 8   # offsets buffer
+    t2 = SipcReader(store).read_table(out)
+    assert t2.batches[0].columns[0].get_bytes(0).isupper()
+
+
+def test_upper_utf8_general_no_reshare(env):
+    store, kz, cg = env
+    t = Table.from_pydict({"s": ["straße", "ŉdif", "plain"]})
+    msg, _, _ = roundtrip(store, kz, cg, t)
+    out = run_node(store, kz, msg, lambda x: ops.upper(x, "s"))
+    assert out.reshared_bytes == 0
+    t2 = SipcReader(store).read_table(out)
+    assert t2.to_pydict()["s"] == ["STRASSE", "ŉdif".upper(), "PLAIN"]
+
+
+def test_files_referenced_exposed_for_rm(env):
+    store, kz, cg = env
+    t = gen_int_table(2, 1 << 12)
+    msg, _, _ = roundtrip(store, kz, cg, t)
+    info = msg.files_referenced()
+    assert len(info) == 2                          # one file per column
+    assert all(v == 1 << 12 for v in info.values())
+    # refcounts pinned
+    for fid in info:
+        assert store.get(fid).refcount == 1
+    msg.release()
+    for fid in info:
+        assert store.get(fid).refcount == 0
+
+
+def test_reshared_refcount_protects_from_delete(env):
+    store, kz, cg = env
+    t = gen_int_table(2, 1 << 12)
+    msg, _, _ = roundtrip(store, kz, cg, t)
+    out = run_node(store, kz, msg, lambda x: ops.drop_columns(x, ["i0"]))
+    fid = out.all_refs()[0].file_id
+    # input msg released, but downstream still references one file
+    msg.release()
+    f = store.get(fid)
+    assert f.refcount == 1
+    t2 = SipcReader(store).read_table(out)        # still readable
+    assert t2.num_columns == 1

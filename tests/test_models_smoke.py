@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward /
+train step + one prefill/decode step on CPU; asserts shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ShapeConfig, smoke_variant
+from repro.models.api import ModelAPI
+from repro.train.trainstep import init_state, make_train_step
+
+SMOKE_TRAIN = ShapeConfig("smoke_train", "train", 32, 2)
+SMOKE_PREFILL = ShapeConfig("smoke_prefill", "prefill", 32, 2)
+SMOKE_DECODE = ShapeConfig("smoke_decode", "decode", 32, 2)
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+def make_batch(api, shape, rng):
+    out = {}
+    for k, s in api.input_specs(shape).items():
+        if s.dtype == jnp.int32:
+            if k == "positions":
+                out[k] = jnp.full(s.shape, shape.seq_len, jnp.int32)
+            else:
+                out[k] = jnp.asarray(
+                    rng.integers(0, api.cfg.vocab, s.shape), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(size=s.shape), s.dtype)
+    return out
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step(name, rng):
+    cfg = smoke_variant(ARCHS[name])
+    api = ModelAPI(cfg)
+    state = init_state(api, jax.random.key(0))
+    step = jax.jit(make_train_step(api, total_steps=10))
+    batch = make_batch(api, SMOKE_TRAIN, rng)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), name
+    assert float(metrics["loss"]) > 0
+    assert int(state["step"]) == 1
+    # params updated and finite
+    for leaf in jax.tree.leaves(state["params"]):
+        assert np.all(np.isfinite(np.asarray(leaf, dtype=np.float32)))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_prefill_decode(name, rng):
+    cfg = smoke_variant(ARCHS[name])
+    api = ModelAPI(cfg)
+    params = api.model.init(jax.random.key(1))
+    batch = make_batch(api, SMOKE_PREFILL, rng)
+    logits, caches = jax.jit(
+        lambda p, b: api.prefill(p, b, SMOKE_PREFILL))(params, batch)
+    B = SMOKE_PREFILL.global_batch
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    dec = {"tokens": jnp.zeros((B, 1), jnp.int32),
+           "positions": jnp.full((B, 1), SMOKE_PREFILL.seq_len, jnp.int32)}
+    logits2, caches2 = jax.jit(api.serve_step)(params, dec, caches)
+    assert logits2.shape == (B, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+
+
+def test_decode_matches_prefill_dense(rng):
+    """Teacher-forced prefill logits == step-by-step decode logits."""
+    cfg = smoke_variant(ARCHS["smollm-135m"])
+    api = ModelAPI(cfg)
+    params = api.model.init(jax.random.key(2))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)), jnp.int32)
+
+    # full forward logits
+    x = api.model.embed_inputs(params, toks)
+    pos = jnp.arange(8)[None, :]
+    h, _, _ = api.model.backbone(params, x, "train", None, pos)
+    full_logits = api.model.head(params, h)
+
+    # prefill on the first 4, then decode 4 steps
+    shape = ShapeConfig("s", "prefill", 8, 1)
+    logits, caches = api.model.prefill(params, {"tokens": toks[:, :4]},
+                                       cache_len=8)
+    np.testing.assert_allclose(np.asarray(logits[0, 0]),
+                               np.asarray(full_logits[0, 3]), rtol=2e-4,
+                               atol=2e-4)
+    for t in range(4, 8):
+        step_logits, caches = api.model.decode_step(
+            params, toks[:, t:t + 1], caches,
+            jnp.full((1, 1), t, jnp.int32))
+        if t < 7:
+            np.testing.assert_allclose(np.asarray(step_logits[0, 0]),
+                                       np.asarray(full_logits[0, t]),
+                                       rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("name", ["rwkv6-3b", "recurrentgemma-9b"])
+def test_decode_matches_prefill_recurrent(name, rng):
+    cfg = smoke_variant(ARCHS[name])
+    api = ModelAPI(cfg)
+    params = api.model.init(jax.random.key(3))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)), jnp.int32)
+    x = api.model.embed_inputs(params, toks)
+    h, _, _ = api.model.backbone(params, x, "train", None,
+                                 jnp.arange(8)[None, :])
+    full_logits = api.model.head(params, h)
+    logits, caches = api.model.prefill(params, {"tokens": toks[:, :4]},
+                                       cache_len=8)
+    np.testing.assert_allclose(np.asarray(logits[0, 0]),
+                               np.asarray(full_logits[0, 3]), rtol=5e-3,
+                               atol=5e-3)
+    for t in range(4, 7):
+        step_logits, caches = api.model.decode_step(
+            params, toks[:, t:t + 1], caches,
+            jnp.full((1, 1), t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(step_logits[0, 0]),
+                                   np.asarray(full_logits[0, t]),
+                                   rtol=5e-3, atol=5e-3)

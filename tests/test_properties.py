@@ -1,0 +1,177 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BufferStore, Column, KernelZero, PAGE, SipcReader,
+                        SipcWriter, Table, alloc_aligned)
+from repro.core import ops
+from repro.core.arrow import pack_validity, unpack_validity
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def small_tables(draw):
+    n = draw(st.integers(1, 64))
+    cols = {}
+    n_int = draw(st.integers(0, 3))
+    n_str = draw(st.integers(0, 2))
+    if n_int + n_str == 0:
+        n_int = 1
+    for j in range(n_int):
+        cols[f"i{j}"] = np.asarray(
+            draw(st.lists(st.integers(-2**40, 2**40),
+                          min_size=n, max_size=n)), np.int64)
+    for j in range(n_str):
+        cols[f"s{j}"] = draw(st.lists(
+            st.text(min_size=0, max_size=12), min_size=n, max_size=n))
+    return Table.from_pydict(cols)
+
+
+# --------------------------------------------------------------------------
+# invariant: deanon roundtrip preserves bytes, at any alignment
+# --------------------------------------------------------------------------
+
+@given(st.integers(1, 4 * PAGE), st.integers(0, 257))
+def test_deanon_roundtrip_bytes(nbytes, offset):
+    store = BufferStore()
+    try:
+        kz = KernelZero(store)
+        cg = store.new_cgroup("p")
+        base = alloc_aligned(nbytes + offset + 8)
+        src = base[offset:offset + nbytes]
+        rng = np.random.default_rng(nbytes)
+        base_w = base
+        base_w[:] = rng.integers(0, 255, base.nbytes, dtype=np.uint8)
+        want = src.copy()
+        f = kz.new_file(cg)
+        off, n = kz.deanon(f, src)
+        assert n == nbytes
+        got = f.read(off, n)
+        assert np.array_equal(got, want)
+    finally:
+        store.close()
+
+
+# --------------------------------------------------------------------------
+# invariant: SIPC roundtrip is identity, in every mode
+# --------------------------------------------------------------------------
+
+@given(small_tables(), st.sampled_from(
+    ["full_copy", "writer_copy", "zero", "zero_noreshare"]))
+def test_sipc_roundtrip_identity(table, mode):
+    store = BufferStore()
+    try:
+        kz = KernelZero(store)
+        cg = store.new_cgroup("p")
+        msg = SipcWriter(store, kz, cg, mode=mode).write_table(table)
+        out = SipcReader(store, mode=mode).read_table(msg)
+        assert table.equals(out)
+    finally:
+        store.close()
+
+
+# --------------------------------------------------------------------------
+# invariant: resharing never changes the logical value of an op
+# --------------------------------------------------------------------------
+
+@given(small_tables(), st.data())
+def test_reshared_op_equals_direct_op(table, data):
+    n = table.num_rows
+    op_name = data.draw(st.sampled_from(
+        ["slice", "drop", "filter", "concat", "sort"]))
+    if op_name == "slice":
+        a = data.draw(st.integers(0, n))
+        b = data.draw(st.integers(a, n))
+        op = lambda t: ops.slice_rows(t, a, b)
+    elif op_name == "drop":
+        name = data.draw(st.sampled_from(table.schema.names()))
+        if len(table.schema) == 1:
+            return
+        op = lambda t: ops.drop_columns(t, [name])
+    elif op_name == "filter":
+        mask = np.asarray(data.draw(st.lists(
+            st.booleans(), min_size=n, max_size=n)), bool)
+        op = lambda t: ops.filter_rows(t, mask)
+    elif op_name == "concat":
+        op = lambda t: ops.concat_tables([t, t])
+    else:
+        name = table.schema.names()[0]
+        op = lambda t: ops.sort_by(t, name)
+    direct = op(table)
+
+    store = BufferStore()
+    try:
+        kz = KernelZero(store)
+        cg = store.new_cgroup("p")
+        msg = SipcWriter(store, kz, cg, mode="zero").write_table(table)
+        reader = SipcReader(store, mode="zero")
+        t2 = reader.read_table(msg)
+        out = op(t2)
+        w2 = SipcWriter(store, kz, store.new_cgroup("c"), mode="zero",
+                        input_map=reader.map)
+        msg2 = w2.write_table(out)
+        back = SipcReader(store, mode="zero").read_table(msg2)
+        assert direct.equals(back)
+    finally:
+        store.close()
+
+
+# --------------------------------------------------------------------------
+# invariant: refcounts never go negative; GC only frees refcount-0 files
+# --------------------------------------------------------------------------
+
+@given(small_tables())
+def test_refcount_protects_reshared_files(table):
+    store = BufferStore()
+    try:
+        kz = KernelZero(store)
+        msg = SipcWriter(store, kz, store.new_cgroup("p"),
+                         mode="zero").write_table(table)
+        reader = SipcReader(store, mode="zero")
+        t2 = reader.read_table(msg)
+        out = ops.concat_tables([t2, t2])
+        msg2 = SipcWriter(store, kz, store.new_cgroup("c"), mode="zero",
+                          input_map=reader.map).write_table(out)
+        msg.release()
+        for fid in msg.files_referenced():
+            f = store.files.get(fid)
+            if f is not None:
+                assert f.refcount >= 0
+        # downstream must still be readable after upstream release
+        back = SipcReader(store, mode="zero").read_table(msg2)
+        assert back.num_rows == 2 * table.num_rows
+    finally:
+        store.close()
+
+
+# --------------------------------------------------------------------------
+# invariant: validity bitmaps roundtrip
+# --------------------------------------------------------------------------
+
+@given(st.lists(st.booleans(), min_size=1, max_size=200))
+def test_validity_roundtrip(bits):
+    mask = np.asarray(bits, bool)
+    assert np.array_equal(unpack_validity(pack_validity(mask), len(mask)),
+                          mask)
+
+
+# --------------------------------------------------------------------------
+# invariant: swap-out/in preserves content (eviction correctness)
+# --------------------------------------------------------------------------
+
+@given(small_tables())
+def test_swap_preserves_table(table):
+    store = BufferStore()
+    try:
+        kz = KernelZero(store)
+        msg = SipcWriter(store, kz, store.new_cgroup("p"),
+                         mode="zero").write_table(table)
+        for fid in list(msg.files_referenced()):
+            store.swap_out_file(fid)
+        out = SipcReader(store, mode="zero").read_table(msg)
+        assert table.equals(out)
+    finally:
+        store.close()
