@@ -46,8 +46,9 @@ def make_env(**cfg) -> Env:
                         system_limit=cfg.pop("system_limit", None))
     if "kswap" in cfg:
         store.kswap_enabled = cfg.pop("kswap")
+    workers = cfg.pop("workers", 1)        # executor worker-pool size
     rm = ResourceManager(store, RMConfig(**cfg))
-    return Env(tmpdir, store, rm, Executor(store, rm))
+    return Env(tmpdir, store, rm, Executor(store, rm, workers=workers))
 
 
 @contextmanager

@@ -9,9 +9,10 @@ import sys
 
 
 def main() -> None:
-    from . import (fig2_copy_latency, fig4_copy_avoidance, fig5_decache,
-                   fig6_resharing, fig7_depth, fig8_dict_repeats,
-                   fig9_dict_norepeats, fig10_eviction, roofline_table)
+    from . import (bench_concurrency, fig2_copy_latency,
+                   fig4_copy_avoidance, fig5_decache, fig6_resharing,
+                   fig7_depth, fig8_dict_repeats, fig9_dict_norepeats,
+                   fig10_eviction, roofline_table)
     figures = {
         "fig2": fig2_copy_latency.main,       # copy-avoidance latency
         "fig4": fig4_copy_avoidance.main,     # KernelZero vs memory limit
@@ -22,6 +23,7 @@ def main() -> None:
         "fig9": fig9_dict_norepeats.main,     # dictionaries, no repeats
         "fig10": fig10_eviction.main,         # eviction mechanisms
         "roofline": roofline_table.main,      # dry-run roofline summary
+        "concurrency": bench_concurrency.main,  # worker-pool loader overlap
     }
     selected = sys.argv[1:] or list(figures)
     print("name,us_per_call,derived")

@@ -1,15 +1,32 @@
 """Zerrow core: true zero-copy Arrow pipelines (the paper's contribution).
 
-Subsystems (paper §4.2):
+Data-plane subsystems (paper §4.2):
   arrow    — Arrow computational format (columns, batches, chunked tables)
   buffers  — BufferStore: tmpfs analogue, cgroup charging, swap
   deanon   — KernelZero: de-anonymization (ownership transfer, direct swap)
   sipc     — Shared IPC: reference-passing streams, IPC inspection,
              resharing, dictionary sharing
-  zarquet  — on-disk compressed columnar source format (Parquet stand-in)
+  zarquet  — on-disk compressed columnar source format (Parquet stand-in;
+             zstd with stdlib-zlib fallback, codec recorded per file)
   decache  — shared deserialization cache
-  dag      — DAGs, node sandboxes, share wrapper
-  rm       — Resource Manager: admission, uncache/rollback/limitdrop/adaptive
+  dag      — DAGs, node lifecycle state machine, sandboxes, share wrapper
+
+Control-plane subsystems (paper §3.1/§3.3, layered — docs/ARCHITECTURE.md):
+  sched.policy     — scheduling priority protocol + registry (SCHEDULES):
+                     depth-first, breadth-first, fair-share, deadline-aware
+  sched.admission  — AdmissionController: budget check + make-room
+  sched.eviction   — EvictionPolicy classes + registry (POLICIES):
+                     none/kswap/rollback/limitdrop/adaptive
+  sched.executor   — WorkerPoolExecutor: N workers pull admitted nodes
+                     concurrently (loader decompression overlaps across
+                     workers); workers=1 is the exact sequential semantics
+  rm       — ResourceManager: accounting, counters, refcount-safe GC, and
+             the wiring of the three sched components; re-exports the
+             executor under its historical ``Executor`` name
+
+Register a new policy by subclassing ``EvictionPolicy`` (decorate with
+``sched.register_eviction``) or ``SchedulePolicy`` (``register_schedule``)
+and selecting it by name in ``RMConfig``.
 """
 
 from .arrow import (ArrowType, Column, Field, RecordBatch, Schema, Table,
@@ -17,10 +34,14 @@ from .arrow import (ArrowType, Column, Field, RecordBatch, Schema, Table,
                     UINT8, UTF8, dict_of, pack_validity, unpack_validity)
 from .buffers import (PAGE, AnonRegion, BufferStore, Cgroup, OOMError,
                       StoreFile, StoreStats, alloc_aligned)
-from .dag import DAG, NodeSpec, Sandbox
+from .dag import (DAG, InvalidTransition, NodeSpec, NodeState, Sandbox,
+                  VALID_TRANSITIONS)
 from .deanon import KernelZero
 from .decache import DeCache
 from .rm import Executor, POLICIES, RMConfig, ResourceManager
+from .sched import (AdmissionController, EvictionPolicy, SCHEDULES,
+                    SchedulePolicy, WorkerPoolExecutor, get_eviction,
+                    get_schedule, register_eviction, register_schedule)
 from .sipc import (AddressMap, BufRef, SipcMessage, SipcReader, SipcWriter)
 
 __all__ = [
@@ -28,8 +49,11 @@ __all__ = [
     "BOOL", "FLOAT32", "FLOAT64", "INT8", "INT16", "INT32", "INT64",
     "UINT8", "UTF8", "dict_of", "pack_validity", "unpack_validity",
     "PAGE", "AnonRegion", "BufferStore", "Cgroup", "OOMError", "StoreFile",
-    "StoreStats", "alloc_aligned", "DAG", "NodeSpec", "Sandbox",
+    "StoreStats", "alloc_aligned", "DAG", "InvalidTransition", "NodeSpec",
+    "NodeState", "Sandbox", "VALID_TRANSITIONS",
     "KernelZero", "DeCache", "Executor", "POLICIES", "RMConfig",
-    "ResourceManager", "AddressMap", "BufRef", "SipcMessage", "SipcReader",
-    "SipcWriter",
+    "ResourceManager", "AdmissionController", "EvictionPolicy", "SCHEDULES",
+    "SchedulePolicy", "WorkerPoolExecutor", "get_eviction", "get_schedule",
+    "register_eviction", "register_schedule",
+    "AddressMap", "BufRef", "SipcMessage", "SipcReader", "SipcWriter",
 ]

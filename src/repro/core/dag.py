@@ -15,6 +15,7 @@ described in §4.2.3.
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
@@ -42,9 +43,26 @@ class NodeSpec:
     #                                    # consumed by an external reader)
 
 
-# node lifecycle
+# node lifecycle — an explicit state machine so the scheduler's claims are
+# verifiable under concurrency (all transitions happen inside the
+# executor's RM critical section; see core/sched/executor.py)
 WAITING, READY, RUNNING, DONE, EVICTED = \
     "waiting", "ready", "running", "done", "evicted"
+
+#: legal lifecycle transitions.  WAITING/EVICTED -> RUNNING is the
+#: scheduler's *claim* (exclusive: only one worker can perform it because
+#: it happens under the executor lock); DONE -> EVICTED is a rollback.
+VALID_TRANSITIONS = {
+    WAITING: (READY, RUNNING),
+    READY: (WAITING, RUNNING),
+    RUNNING: (DONE, WAITING),
+    DONE: (EVICTED,),
+    EVICTED: (RUNNING,),
+}
+
+
+class InvalidTransition(RuntimeError):
+    """An illegal node-lifecycle transition (scheduler logic error)."""
 
 
 class NodeState:
@@ -70,14 +88,34 @@ class NodeState:
     def decache_key(self):
         return (self.spec.source, tuple(sorted(self.spec.dict_columns)))
 
+    def transition(self, new_status: str) -> None:
+        """Move through the lifecycle, validating against
+        ``VALID_TRANSITIONS``.  Callers must hold the executor lock when
+        the DAG is being executed concurrently."""
+        if new_status not in VALID_TRANSITIONS[self.status]:
+            raise InvalidTransition(
+                f"node {self.dag.name}.{self.name}: "
+                f"{self.status} -> {new_status}")
+        self.status = new_status
+
+    def claim(self) -> None:
+        """Scheduler claim: WAITING/EVICTED -> RUNNING."""
+        self.transition(RUNNING)
+
 
 class DAG:
     _next_id = 0
+    _id_lock = threading.Lock()
 
-    def __init__(self, nodes: Sequence[NodeSpec], name: str = ""):
-        DAG._next_id += 1
-        self.id = DAG._next_id
+    def __init__(self, nodes: Sequence[NodeSpec], name: str = "",
+                 deadline: Optional[float] = None,
+                 tenant: Optional[str] = None):
+        with DAG._id_lock:
+            DAG._next_id += 1
+            self.id = DAG._next_id
         self.name = name or f"dag{self.id}"
+        self.deadline = deadline        # for the deadline-aware policy
+        self.tenant = tenant or self.name   # fair-share grouping key
         self.nodes: Dict[str, NodeState] = {s.name: NodeState(s, self)
                                             for s in nodes}
         self.children: Dict[str, List[str]] = {n: [] for n in self.nodes}

@@ -1,170 +1,115 @@
-"""Resource Manager + DAG executor (paper §3.1, §3.3, §4.2.5).
+"""Resource Manager: accounting + back-compat facade over ``core/sched``
+(paper §3.1, §3.3, §4.2.5).
 
-The RM owns four actions (Fig 3a):
-  RM:alloc     — admission control + depth-first priority scheduling
-  RM:uncache   — drop zero-reference DeCache entries
+The RM's four actions (Fig 3a) now live in separate layers:
+
+  RM:alloc     — admission control (sched/admission.py) + priority
+                 scheduling (sched/policy.py)
+  RM:uncache   — drop zero-reference DeCache entries (sched/eviction.py,
+                 step 1 of the memory-freeing sequence)
   RM:rollback  — delete a completed node's outputs; re-execute it later
-                 (cascading up the pipeline if its own inputs were GC'd)
+                 (sched/eviction.py RollbackEviction)
   RM:limitdrop — drop the node sandbox's cgroup limit so its tmpfs output
-                 swaps to disk; restore the limit afterwards
+                 swaps to disk (sched/eviction.py LimitDropEviction)
 
-*Adaptive eviction* picks rollback vs limit-dropping per node from the
-ratio of its execution latency to its output size (threshold ≈ 1/swap
-bandwidth, tuned offline — paper §3.3).
+What remains here is what the RM actually *owns*: configuration, the
+eviction counters, the completed-node set, and refcount-safe GC — the
+share-awareness invariant that underlying files are freed only when
+IPC-inspection-derived refcounts hit zero, so resharing never causes
+use-after-free (Challenge 6).
 
-Share-awareness: eviction operates on *virtual* Arrow artifacts; the
-underlying files are freed only when IPC-inspection-derived refcounts hit
-zero, so resharing never causes use-after-free (Challenge 6).
+``Executor`` is the worker-pool executor from sched/executor.py, re-
+exported under its historical name; ``Executor(store, rm)`` with the
+default ``workers=1`` reproduces the seed's sequential semantics exactly.
 """
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import FrozenSet, List, Optional, Tuple
 
 from .buffers import BufferStore, OOMError
-from .dag import (DAG, DONE, EVICTED, NodeState, RUNNING, Sandbox, WAITING)
+from .dag import NodeState
 from .deanon import KernelZero
 from .decache import DeCache
 from .sipc import SipcMessage
-from . import zarquet
+from .sched.admission import AdmissionController
+from .sched.eviction import (EvictionPolicy, POLICIES, get_eviction)
+from .sched.executor import WorkerPoolExecutor
+from .sched.policy import SCHEDULES, get_schedule
 
-POLICIES = ("none", "kswap", "rollback", "limitdrop", "adaptive")
+# historical name: benchmarks/tests/examples construct `Executor(store, rm)`
+Executor = WorkerPoolExecutor
 
 
 @dataclass
 class RMConfig:
     memory_limit: Optional[int] = None       # admission-control budget (bytes)
     admission: bool = True
-    policy: str = "adaptive"                 # eviction mechanism
+    policy: str = "adaptive"                 # eviction mechanism (POLICIES)
     decache: bool = True
     sipc_mode: str = "zero"                  # full_copy|writer_copy|zero|...
     adaptive_threshold: float = 1.0 / (1.5e9)  # s/byte ≈ 1/swap-bandwidth
     direct_swap: bool = True
-    schedule: str = "depth"   # 'depth' (paper: closest-to-finishing first)
-    #                         # or 'breadth' (models concurrent DAG starts)
+    schedule: str = "depth"   # scheduling priority (SCHEDULES):
+    #                         # 'depth' (paper: closest-to-finishing first),
+    #                         # 'breadth', 'fair', 'deadline'
+    workers: int = 1          # executor worker-pool size (1 = sequential)
 
 
 class ResourceManager:
+    """Accounting + component wiring.  The admission/eviction/schedule
+    components hold a back-reference here for counters and GC."""
+
     def __init__(self, store: BufferStore, config: RMConfig):
-        assert config.policy in POLICIES
+        assert config.policy in POLICIES, \
+            f"unknown eviction policy {config.policy!r}"
         self.store = store
         self.cfg = config
         self.kz = KernelZero(store)
         self.decache = DeCache(store, enabled=config.decache)
-        self.evictions: Dict[str, int] = {"uncache": 0, "rollback": 0,
-                                          "limitdrop": 0}
+        self.evictions = {"uncache": 0, "rollback": 0, "limitdrop": 0}
         self.completed_nodes: List[NodeState] = []   # eviction candidates
+        self.schedule = get_schedule(config.schedule)
+        self.admission = AdmissionController(self)
+        self.eviction: EvictionPolicy = get_eviction(config.policy, self)
+        # direct mechanism handles for the back-compat methods below
+        self._rollback = get_eviction("rollback", self)
+        self._limitdrop = get_eviction("limitdrop", self)
 
-    # -- accounting -------------------------------------------------------
+    # -- accounting (delegated to the admission layer) ---------------------
     def available(self) -> int:
-        if self.cfg.memory_limit is None:
-            return 1 << 62
-        return self.cfg.memory_limit - self.store.global_charged
+        return self.admission.available()
 
-    # -- RM:alloc ----------------------------------------------------------
     def admit(self, node: NodeState) -> bool:
-        """Non-destructive admission check: does the node fit right now?"""
-        if not self.cfg.admission:
-            return True
-        return node.spec.est_mem <= self.available()
+        return self.admission.admit(node)
 
-    def make_room_for(self, node: NodeState) -> None:
-        """Evict outputs one by one until the next scheduled node fits
-        (paper §3.3).  Called only for the definitively chosen node."""
-        if self.cfg.policy in ("none", "kswap") or not self.cfg.admission:
-            return
-        need = node.spec.est_mem - self.available()
-        if need > 0:
-            self.free_memory(need, protect=node)
+    def make_room_for(self, node: NodeState,
+                      extra_protect: FrozenSet[Tuple[int, str]] = frozenset(),
+                      ) -> None:
+        self.admission.make_room_for(node, extra_protect)
 
-    # -- RM memory-freeing sequence (paper §3.3) ----------------------------
-    MAX_EVICTIONS_PER_ALLOC = 8   # bound eviction storms: past this the
-    #                             # node runs over budget instead of the RM
-    #                             # rolling back half the fleet's progress
+    # -- memory-freeing sequence (delegated to the eviction layer) ---------
+    MAX_EVICTIONS_PER_ALLOC = EvictionPolicy.MAX_EVICTIONS_PER_ALLOC
 
     def free_memory(self, need: int,
                     protect: Optional[NodeState] = None) -> int:
-        freed = 0
-        # 1) uncache DeCache entries with no active references
-        for e in self.decache.uncache_candidates():
-            if freed >= need:
-                return freed
-            freed += self.decache.uncache(e)
-            self.evictions["uncache"] += 1
-        # 2) evict outputs of the lowest-priority completed nodes
-        for n_evicted, st in enumerate(self.eviction_candidates(protect)):
-            if freed >= need or n_evicted >= self.MAX_EVICTIONS_PER_ALLOC:
-                break
-            freed += self.evict_node_output(st)
-        return freed
+        return self.eviction.free_memory(need, protect)
 
     def eviction_candidates(self, protect: Optional[NodeState]
                             ) -> List[NodeState]:
-        protected = set()
-        if protect is not None:
-            protected = {(protect.dag.id, d) for d in protect.spec.deps}
-        cands = [st for st in self.completed_nodes
-                 if st.status == DONE and st.output is not None
-                 and not st.output.released
-                 and (st.dag.id, st.name) not in protected
-                 and not (st.is_loader and self.decache.enabled)]
-        # Victim order: lowest-priority = scheduled LAST.  Least-progressed
-        # DAG first; ties broken by dag id DESCENDING (the scheduler picks
-        # ascending ids, so the highest id is needed latest — evicting the
-        # next-to-run DAG's frontier would thrash).  Within a DAG, deepest
-        # output first — releasing the pipeline frontier is what actually
-        # frees exclusively-owned files ('rollback the pipeline', §3.3).
-        progress = {}
-        for st in cands:
-            d = st.dag
-            if d.id not in progress:
-                done = sum(1 for n in d.nodes.values() if n.status == DONE)
-                progress[d.id] = done / max(len(d.nodes), 1)
-        cands.sort(key=lambda st: (progress[st.dag.id], -st.dag.id,
-                                   -st.depth))
-        return cands
+        return self.eviction.victims(protect)
 
     def evict_node_output(self, st: NodeState) -> int:
-        mech = self.cfg.policy
-        if mech == "adaptive":
-            ratio = st.exec_latency / max(st.output_bytes, 1)
-            mech = "limitdrop" if ratio > self.cfg.adaptive_threshold \
-                else "rollback"
-        if mech == "rollback":
-            return self.rollback(st)
-        return self.limitdrop(st)
+        return self.eviction.evict(st)
 
-    # -- RM:rollback --------------------------------------------------------
     def rollback(self, st: NodeState) -> int:
-        freed = self._resident_of(st.output)
-        msg = st.output
-        st.output = None
-        msg.release()
-        self._gc(msg)
-        # re-execution is only scheduled if un-run children still need the
-        # output (otherwise the release is pure GC; a later cascading
-        # rollback can still resurrect it via _ensure_deps)
-        kids = [st.dag.nodes[c] for c in st.dag.children[st.name]]
-        if any(k.status != DONE for k in kids):
-            st.status = EVICTED
-        self.evictions["rollback"] += 1
-        if st in self.completed_nodes:
-            self.completed_nodes.remove(st)
-        return freed
+        return self._rollback.evict(st)
 
-    # -- RM:limitdrop ---------------------------------------------------------
     def limitdrop(self, st: NodeState) -> int:
-        if st.sandbox is None:
-            return 0
-        swapped = st.sandbox.drop_limit_and_swap()
-        self.evictions["limitdrop"] += 1
-        if st in self.completed_nodes:
-            self.completed_nodes.remove(st)   # only evict once
-        return swapped
+        return self._limitdrop.evict(st)
 
-    # -- refcount GC -----------------------------------------------------------
+    # -- refcount GC (the share-awareness invariant) -----------------------
     def _resident_of(self, msg: SipcMessage) -> int:
         total = 0
         for fid in msg.files_referenced():
@@ -184,154 +129,3 @@ class ResourceManager:
             msg = st.output
             msg.release()
             self._gc(msg)
-
-
-class Executor:
-    """Sequential scheduler driven by RM admission + priorities.
-
-    One node runs at a time (single-core container); 'parallelism' is the
-    interleaving the scheduler chooses, and all memory effects (resident
-    growth, swap I/O, recompute) are real.
-    """
-
-    def __init__(self, store: BufferStore, rm: ResourceManager):
-        self.store = store
-        self.rm = rm
-        self.node_runs = 0
-        self.load_runs = 0
-
-    # -- main loop -----------------------------------------------------------
-    def run(self, dags: List[DAG], deadline_s: float = 3600.0) -> float:
-        t0 = time.perf_counter()
-        active: Dict[int, DAG] = {d.id: d for d in dags}
-        # DeCache attachments per dag: key -> entry
-        attach: Dict[int, list] = {d.id: [] for d in dags}
-        while active:
-            if time.perf_counter() - t0 > deadline_s:
-                raise TimeoutError("executor deadline exceeded")
-            cands: List[Tuple[int, int, NodeState]] = []
-            for d in active.values():
-                for st in d.runnable():
-                    # depth-first: deepest (closest to finishing) first;
-                    # 'breadth' models concurrently-started DAGs
-                    key = -st.depth if self.rm.cfg.schedule == "depth" \
-                        else st.depth
-                    cands.append((key, d.id, st))
-            if not cands:
-                # nothing runnable: either all running deps broken or done
-                for did in [i for i, d in active.items() if d.all_done()]:
-                    self._finish_dag(active.pop(did), attach[did])
-                if not active:
-                    break
-                raise RuntimeError("scheduler stall: no runnable node")
-            cands.sort(key=lambda t: (t[0], t[1]))
-            picked = None
-            for _, _, st in cands:
-                self._ensure_deps(st)
-            # re-collect after cascading rollbacks
-            cands = []
-            for d in active.values():
-                for st in d.runnable():
-                    key = -st.depth if self.rm.cfg.schedule == "depth" \
-                        else st.depth
-                    cands.append((key, d.id, st))
-            cands.sort(key=lambda t: (t[0], t[1]))
-            # fast path: highest-priority node that already fits
-            for _, _, st in cands:
-                if self.rm.admit(st):
-                    picked = st
-                    break
-            if picked is None:
-                # nothing fits: evict for the highest-priority node only
-                # (paper: 'outputs are evicted one by one until the available
-                # memory is larger than the requirement of the node scheduled
-                # to run next'); kswap/no-admission runs it anyway and lets
-                # kernel swap / OOM handle the overflow
-                picked = cands[0][2]
-                self.rm.make_room_for(picked)
-            if any(picked.dag.nodes[d].output is None or
-                   picked.dag.nodes[d].output.released
-                   for d in picked.spec.deps):
-                continue  # an eviction broke a dep; re-plan
-            self._run_node(picked, attach[picked.dag.id])
-            for did in [i for i, d in active.items() if d.all_done()]:
-                self._finish_dag(active.pop(did), attach[did])
-        return time.perf_counter() - t0
-
-    # -- cascading rollback repair ---------------------------------------------
-    def _ensure_deps(self, st: NodeState) -> None:
-        for dep_name in st.spec.deps:
-            dep = st.dag.nodes[dep_name]
-            if dep.status == DONE and (dep.output is None or
-                                       dep.output.released):
-                if dep.is_loader and self.rm.decache.enabled:
-                    e = self.rm.decache.lookup(dep.decache_key())
-                    if e is not None:
-                        dep.output = self.rm.decache.attach(e)
-                        continue
-                dep.status = EVICTED
-                dep.output = None
-                self._ensure_deps(dep)
-
-    # -- node execution -----------------------------------------------------------
-    def _run_node(self, st: NodeState, attachments: list) -> None:
-        st.status = RUNNING
-        self.node_runs += 1
-        t0 = time.perf_counter()
-        if st.is_loader:
-            self._run_loader(st, attachments)
-        else:
-            sb = Sandbox(self.store, self.rm.kz,
-                         f"{st.dag.name}.{st.name}#{st.runs}",
-                         mode=self.rm.cfg.sipc_mode)
-            st.sandbox = sb
-            inputs = [st.dag.nodes[d].output for d in st.spec.deps]
-            st.output = sb.run(st.spec.fn, inputs, label=st.name)
-            st.output_bytes = st.output.new_bytes
-        st.exec_latency = time.perf_counter() - t0
-        st.status = DONE
-        st.runs += 1
-        if st not in self.rm.completed_nodes:
-            self.rm.completed_nodes.append(st)
-        # NOTE: outputs are retained until DAG completion (paper §3.1) —
-        # freeing earlier would defeat rollback and share-aware eviction.
-
-    def _run_loader(self, st: NodeState, attachments: list) -> None:
-        key = st.decache_key()
-        e = self.rm.decache.lookup(key)
-        if e is not None:
-            st.output = self.rm.decache.attach(e)
-            attachments.append(e)
-            st.output_bytes = 0
-            return
-        self.load_runs += 1
-        sb = Sandbox(self.store, self.rm.kz,
-                     f"{st.dag.name}.{st.name}#{st.runs}",
-                     mode=self.rm.cfg.sipc_mode)
-        st.sandbox = sb
-        # generic loader 'user code' (paper §4.2.4): deserialize zarquet,
-        # registering every fresh buffer as sandbox anonymous memory
-        table = zarquet.read_table(
-            st.spec.source, dict_columns=st.spec.dict_columns,
-            on_buffer=lambda a: sb.register_anon(a))
-        st.output = sb.write_output(table, label=st.name)
-        st.output_bytes = st.output.new_bytes
-        if self.rm.decache.enabled:
-            e = self.rm.decache.insert(key, st.output,
-                                       time.perf_counter())
-            self.rm.decache.attach(e)
-            attachments.append(e)
-
-    def _finish_dag(self, dag: DAG, attachments: list) -> None:
-        dag.done = True
-        for st in dag.nodes.values():
-            if st.spec.keep_output:
-                continue   # external consumer owns it (releases the msg)
-            if not (st.is_loader and self.rm.decache.enabled):
-                self.rm.release_output(st)
-            if st.sandbox is not None:
-                st.sandbox.destroy()
-            if st in self.rm.completed_nodes:
-                self.rm.completed_nodes.remove(st)
-        for e in attachments:
-            self.rm.decache.detach(e)

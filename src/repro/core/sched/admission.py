@@ -1,0 +1,67 @@
+"""Admission control: the budget check + make-room sequencing (paper §3.3,
+Fig 3a RM:alloc).
+
+Admission is *non-destructive* (``admit`` only answers "does it fit right
+now?"); making room is only performed for the definitively chosen node —
+'outputs are evicted one by one until the available memory is larger than
+the requirement of the node scheduled to run next'.  kswap/no-admission
+configurations run the node anyway and let kernel swap / OOM handle the
+overflow.
+"""
+
+from __future__ import annotations
+
+from typing import FrozenSet, Tuple
+
+from ..dag import NodeState
+
+
+class AdmissionController:
+    """Budget accounting against ``RMConfig.memory_limit``; ``rm`` is the
+    owning ResourceManager (store + config + eviction engine).
+
+    In-flight nodes hold a *reservation* of their ``est_mem`` from claim
+    to completion, so concurrent workers cannot co-admit nodes whose
+    combined estimates exceed the budget (a reservation is conservative:
+    while a node runs, its real charges and its estimate both count).
+    With one worker the reservation set is always empty at admission
+    time, preserving the sequential semantics exactly.
+    """
+
+    def __init__(self, rm):
+        self.rm = rm
+        self.reserved = 0            # sum of in-flight nodes' est_mem
+
+    def reserve(self, node: NodeState) -> None:
+        self.reserved += node.spec.est_mem
+
+    def unreserve(self, node: NodeState) -> None:
+        self.reserved -= node.spec.est_mem
+        assert self.reserved >= 0, "unbalanced admission reservation"
+
+    def available(self) -> int:
+        cfg = self.rm.cfg
+        if cfg.memory_limit is None:
+            return 1 << 62
+        return cfg.memory_limit - self.rm.store.global_charged \
+            - self.reserved
+
+    def admit(self, node: NodeState) -> bool:
+        """Non-destructive admission check: does the node fit right now?"""
+        if not self.rm.cfg.admission:
+            return True
+        return node.spec.est_mem <= self.available()
+
+    def make_room_for(self, node: NodeState,
+                      extra_protect: FrozenSet[Tuple[int, str]] = frozenset(),
+                      ) -> None:
+        """Evict outputs one by one until the chosen node fits (§3.3).
+        ``extra_protect`` shields the dependencies of in-flight nodes when
+        the worker pool runs concurrently."""
+        cfg = self.rm.cfg
+        if cfg.policy in ("none", "kswap") or not cfg.admission:
+            return
+        need = node.spec.est_mem - self.available()
+        if need > 0:
+            self.rm.eviction.free_memory(need, protect=node,
+                                         extra_protect=extra_protect)

@@ -1,0 +1,334 @@
+"""Event-driven worker-pool DAG executor (the RM run loop, paper §3.1/§3.3).
+
+``WorkerPoolExecutor`` replaces the seed's sequential ``Executor.run``
+monolith with four pluggable layers:
+
+  scheduling  — a :class:`~..sched.policy.SchedulePolicy` orders runnable
+                nodes (``RMConfig.schedule``);
+  admission   — the :class:`~.admission.AdmissionController` budget check;
+  eviction    — an :class:`~.eviction.EvictionPolicy` frees memory for the
+                chosen node (``RMConfig.policy``);
+  execution   — N workers pull admitted nodes and run them concurrently.
+
+Concurrency model (``workers > 1``):
+
+  * One re-entrant lock — the *RM critical section* — protects all
+    scheduler, RM, DeCache and BufferStore state.  Node *claims*
+    (WAITING/EVICTED -> RUNNING transitions), completion bookkeeping,
+    eviction, and SIPC reads/writes all happen under it.
+  * Loader nodes release the lock around zarquet decompression, which
+    drops the GIL (zstd/zlib), so deserialization overlaps across workers
+    — the parallelism the paper notes in Fig 2.  Each decompressed buffer
+    re-enters the lock briefly to register as sandbox anonymous memory.
+  * Loads are single-flight per DeCache key: a worker that finds another
+    worker already deserializing the same ``(source, dict_columns)`` waits
+    and attaches to the cached entry instead of duplicating the load.
+  * Eviction only runs when the pool is drained (no in-flight nodes):
+    evicting an output a running node is reading would be a use-after-free.
+    Workers that cannot admit anything while peers run simply wait for a
+    completion event.
+
+``workers=1`` executes inline on the calling thread with the exact
+scheduling semantics of the seed's sequential loop (same node order, same
+``node_runs`` / ``load_runs`` / eviction counts).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..dag import DAG, DONE, EVICTED, NodeState, RUNNING, Sandbox
+from .. import zarquet
+
+#: sentinel: nothing runnable now, but in-flight nodes may unblock us
+_WAIT = object()
+
+
+class WorkerPoolExecutor:
+    """Pull-based executor: workers repeatedly (schedule -> execute ->
+    complete) until every submitted DAG is done.
+
+    ``workers`` defaults to ``rm.cfg.workers``.  The instance is reusable
+    across ``run`` calls (counters accumulate, as before) but a single
+    instance must not run concurrently with itself.
+    """
+
+    def __init__(self, store, rm, workers: Optional[int] = None,
+                 force_threads: bool = False):
+        self.store = store
+        self.rm = rm
+        if workers is None:
+            workers = getattr(rm.cfg, "workers", 1)
+        self.workers = max(int(workers or 1), 1)
+        # run workers=1 through the thread pool instead of inline (used by
+        # tests to prove pool(1) ≡ sequential)
+        self.force_threads = force_threads
+        self.node_runs = 0
+        self.load_runs = 0
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._active: Dict[int, DAG] = {}
+        self._attach: Dict[int, list] = {}
+        self._inflight: Dict[Tuple[int, str], NodeState] = {}
+        self._loading: Set[tuple] = set()
+        self._error: Optional[BaseException] = None
+
+    # -- entry point -------------------------------------------------------
+    def run(self, dags: List[DAG], deadline_s: float = 3600.0) -> float:
+        t0 = time.perf_counter()
+        self._t0 = t0
+        self._deadline = deadline_s
+        self._active = {d.id: d for d in dags}
+        self._attach = {d.id: [] for d in dags}
+        self._inflight = {}
+        self._loading = set()
+        self._error = None
+        if self.workers == 1 and not self.force_threads:
+            self._run_sequential()
+        else:
+            self._run_threaded()
+        if self._error is not None:
+            raise self._error
+        return time.perf_counter() - t0
+
+    def _run_sequential(self) -> None:
+        while True:
+            with self._cond:
+                st = self._schedule_locked()
+            if st is None:
+                return
+            assert st is not _WAIT, "sequential run cannot have in-flight"
+            try:
+                self._execute(st)
+            except BaseException:
+                self._inflight.pop((st.dag.id, st.name), None)
+                self.rm.admission.unreserve(st)
+                raise
+            with self._cond:
+                self._complete_locked(st)
+
+    def _run_threaded(self) -> None:
+        threads = [threading.Thread(target=self._worker_loop,
+                                    name=f"zerrow-worker-{i}", daemon=True)
+                   for i in range(self.workers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cond:
+                st = None
+                while st is None:
+                    if self._error is not None:
+                        return
+                    try:
+                        st = self._schedule_locked()
+                    except BaseException as e:
+                        self._error = e
+                        self._cond.notify_all()
+                        return
+                    if st is None:
+                        self._cond.notify_all()   # wake idle peers: done
+                        return
+                    if st is _WAIT:
+                        st = None
+                        self._cond.wait(timeout=0.1)
+            try:
+                self._execute(st)
+            except BaseException as e:
+                with self._cond:
+                    if self._error is None:
+                        self._error = e
+                    if self._inflight.pop((st.dag.id, st.name),
+                                          None) is not None:
+                        self.rm.admission.unreserve(st)
+                    self._cond.notify_all()
+                return
+            with self._cond:
+                self._complete_locked(st)
+                self._cond.notify_all()
+
+    # -- scheduling (RM critical section) ----------------------------------
+    def _schedule_locked(self):
+        """Pick, admit and claim the next node.  Returns the claimed
+        NodeState, ``_WAIT`` (only possible with in-flight nodes), or
+        ``None`` when every DAG is finished.  Caller holds the lock."""
+        while True:
+            if time.perf_counter() - self._t0 > self._deadline:
+                raise TimeoutError("executor deadline exceeded")
+            if not self._active:
+                return None
+            cands = self._collect()
+            if not cands:
+                self._finish_done_dags()
+                if not self._active:
+                    return None
+                if self._inflight:
+                    return _WAIT
+                raise RuntimeError("scheduler stall: no runnable node")
+            # repair evicted dependencies (cascading rollback) in priority
+            # order, then re-plan: the cascade changes runnability
+            for st in cands:
+                self._ensure_deps(st)
+            cands = self._collect()
+            if not cands:
+                continue
+            # fast path: highest-priority node that already fits
+            picked = None
+            for st in cands:
+                if self.rm.admit(st):
+                    picked = st
+                    break
+            if picked is None:
+                if self._inflight:
+                    # memory may free when a running node completes, and
+                    # evicting under a concurrent reader is unsafe — wait
+                    return _WAIT
+                # nothing fits: evict for the highest-priority node only
+                # (paper: 'outputs are evicted one by one until the
+                # available memory is larger than the requirement of the
+                # node scheduled to run next'); kswap/no-admission runs it
+                # anyway and lets kernel swap / OOM handle the overflow
+                picked = cands[0]
+                self.rm.make_room_for(picked,
+                                      extra_protect=self._inflight_deps())
+                if any(picked.dag.nodes[d].output is None or
+                       picked.dag.nodes[d].output.released
+                       for d in picked.spec.deps):
+                    continue  # an eviction broke a dep; re-plan
+            picked.claim()
+            self._inflight[(picked.dag.id, picked.name)] = picked
+            self.rm.admission.reserve(picked)
+            self.node_runs += 1
+            return picked
+
+    def _collect(self) -> List[NodeState]:
+        policy = self.rm.schedule
+        policy.prepare(self._active.values())
+        cands = [st for d in self._active.values() for st in d.runnable()]
+        cands.sort(key=lambda st: (*policy.key(st), st.dag.id))
+        return cands
+
+    def _inflight_deps(self) -> Set[Tuple[int, str]]:
+        prot: Set[Tuple[int, str]] = set()
+        for st in self._inflight.values():
+            for d in st.spec.deps:
+                prot.add((st.dag.id, d))
+        return prot
+
+    # -- cascading rollback repair ----------------------------------------
+    def _ensure_deps(self, st: NodeState) -> None:
+        for dep_name in st.spec.deps:
+            dep = st.dag.nodes[dep_name]
+            if dep.status == DONE and (dep.output is None or
+                                       dep.output.released):
+                if dep.is_loader and self.rm.decache.enabled:
+                    e = self.rm.decache.lookup(dep.decache_key())
+                    if e is not None:
+                        dep.output = self.rm.decache.attach(e)
+                        continue
+                dep.transition(EVICTED)
+                dep.output = None
+                self._ensure_deps(dep)
+
+    # -- node execution (outside the lock where safe) ----------------------
+    def _execute(self, st: NodeState) -> None:
+        t0 = time.perf_counter()
+        if st.is_loader:
+            self._run_loader(st)
+        else:
+            self._run_compute(st)
+        st.exec_latency = time.perf_counter() - t0
+
+    def _run_compute(self, st: NodeState) -> None:
+        # user code reads inputs (may fault swapped extents) and writes
+        # output through SIPC — all store-mutating, so inside the critical
+        # section; loader decompression is where the parallelism is
+        with self._lock:
+            sb = Sandbox(self.store, self.rm.kz,
+                         f"{st.dag.name}.{st.name}#{st.runs}",
+                         mode=self.rm.cfg.sipc_mode)
+            st.sandbox = sb
+            inputs = [st.dag.nodes[d].output for d in st.spec.deps]
+            st.output = sb.run(st.spec.fn, inputs, label=st.name)
+            st.output_bytes = st.output.new_bytes
+
+    def _run_loader(self, st: NodeState) -> None:
+        key = st.decache_key()
+        with self._cond:
+            # single-flight: if a peer is deserializing this key, wait for
+            # its DeCache insert instead of duplicating the load
+            while key in self._loading:
+                self._cond.wait(timeout=0.1)
+            e = self.rm.decache.lookup(key)
+            if e is not None:
+                st.output = self.rm.decache.attach(e)
+                self._attach[st.dag.id].append(e)
+                st.output_bytes = 0
+                return
+            self._loading.add(key)
+            self.load_runs += 1
+            sb = Sandbox(self.store, self.rm.kz,
+                         f"{st.dag.name}.{st.name}#{st.runs}",
+                         mode=self.rm.cfg.sipc_mode)
+            st.sandbox = sb
+        try:
+            # generic loader 'user code' (paper §4.2.4): deserialize
+            # zarquet OUTSIDE the lock — decompression releases the GIL and
+            # overlaps across workers; each fresh buffer re-enters the lock
+            # to register as sandbox anonymous memory
+            lock = self._lock
+
+            def on_buffer(a):
+                with lock:
+                    sb.register_anon(a)
+
+            table = zarquet.read_table(
+                st.spec.source, dict_columns=st.spec.dict_columns,
+                on_buffer=on_buffer)
+            with self._cond:
+                st.output = sb.write_output(table, label=st.name)
+                st.output_bytes = st.output.new_bytes
+                if self.rm.decache.enabled:
+                    e = self.rm.decache.insert(key, st.output,
+                                               time.perf_counter())
+                    self.rm.decache.attach(e)
+                    self._attach[st.dag.id].append(e)
+        finally:
+            with self._cond:
+                self._loading.discard(key)
+                self._cond.notify_all()
+
+    # -- completion bookkeeping (RM critical section) ----------------------
+    def _complete_locked(self, st: NodeState) -> None:
+        st.transition(DONE)
+        st.runs += 1
+        if st not in self.rm.completed_nodes:
+            self.rm.completed_nodes.append(st)
+        self._inflight.pop((st.dag.id, st.name), None)
+        self.rm.admission.unreserve(st)
+        # NOTE: outputs are retained until DAG completion (paper §3.1) —
+        # freeing earlier would defeat rollback and share-aware eviction.
+        self._finish_done_dags()
+
+    def _finish_done_dags(self) -> None:
+        for did in [i for i, d in self._active.items() if d.all_done()]:
+            self._finish_dag(self._active.pop(did), self._attach.pop(did))
+
+    def _finish_dag(self, dag: DAG, attachments: list) -> None:
+        dag.done = True
+        for st in dag.nodes.values():
+            if st in self.rm.completed_nodes:
+                self.rm.completed_nodes.remove(st)
+            if st.spec.keep_output:
+                continue   # external consumer owns it (releases the msg)
+            if not (st.is_loader and self.rm.decache.enabled):
+                self.rm.release_output(st)
+            if st.sandbox is not None:
+                st.sandbox.destroy()
+        for e in attachments:
+            self.rm.decache.detach(e)

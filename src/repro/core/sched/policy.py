@@ -1,0 +1,108 @@
+"""Scheduling priority policies (paper §3.1: 'closest-to-finishing first').
+
+A :class:`SchedulePolicy` turns a runnable node into a sort key; the
+executor runs candidates in ascending key order, tie-broken by DAG id
+(older DAG first), then by node insertion order (the sort is stable).
+
+Built-in policies:
+
+  depth     — deepest node first: drives one DAG to completion before the
+              next starts, minimizing the live intermediate set (the
+              paper's default).
+  breadth   — shallowest first: models concurrently-started DAGs.
+  fair      — least-progressed tenant first (multi-tenant fair share):
+              no tenant's DAGs run ahead while another's starve.
+  deadline  — earliest-deadline-first over ``DAG.deadline``, depth-first
+              within a DAG; deadline-less DAGs run last.
+
+Register a custom policy with :func:`register_schedule`; select it by name
+via ``RMConfig(schedule=...)``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, Tuple, Type
+
+from ..dag import DAG, DONE, NodeState
+
+SCHEDULES: Dict[str, Type["SchedulePolicy"]] = {}
+
+
+def register_schedule(cls: Type["SchedulePolicy"]) -> Type["SchedulePolicy"]:
+    SCHEDULES[cls.name] = cls
+    return cls
+
+
+def get_schedule(name: str) -> "SchedulePolicy":
+    try:
+        return SCHEDULES[name]()
+    except KeyError:
+        raise KeyError(f"unknown schedule policy {name!r}; "
+                       f"choose from {sorted(SCHEDULES)}") from None
+
+
+class SchedulePolicy:
+    """Priority protocol: ``prepare`` once per scheduling round, then
+    ``key`` per candidate.  Lower key = higher priority."""
+
+    name = ""
+
+    def prepare(self, dags: Iterable[DAG]) -> None:
+        """Hook to precompute per-round state (e.g. per-DAG progress)."""
+
+    def key(self, st: NodeState) -> Tuple:
+        raise NotImplementedError
+
+
+@register_schedule
+class DepthFirst(SchedulePolicy):
+    name = "depth"
+
+    def key(self, st: NodeState) -> Tuple:
+        return (-st.depth,)
+
+
+@register_schedule
+class BreadthFirst(SchedulePolicy):
+    name = "breadth"
+
+    def key(self, st: NodeState) -> Tuple:
+        return (st.depth,)
+
+
+@register_schedule
+class FairShare(SchedulePolicy):
+    """Least-progressed tenant first (progress = completed-node fraction
+    across the tenant's active DAGs), then deepest node.  With one DAG per
+    tenant this round-robins DAGs instead of finishing them serially."""
+
+    name = "fair"
+
+    def __init__(self) -> None:
+        self._progress: Dict[str, float] = {}
+
+    def prepare(self, dags: Iterable[DAG]) -> None:
+        done: Dict[str, int] = {}
+        total: Dict[str, int] = {}
+        for d in dags:
+            t = d.tenant
+            done[t] = done.get(t, 0) + sum(
+                1 for n in d.nodes.values() if n.status == DONE)
+            total[t] = total.get(t, 0) + len(d.nodes)
+        self._progress = {t: done[t] / max(total[t], 1) for t in total}
+
+    def key(self, st: NodeState) -> Tuple:
+        return (self._progress.get(st.dag.tenant, 0.0), -st.depth)
+
+
+@register_schedule
+class DeadlineAware(SchedulePolicy):
+    """Earliest-deadline-first over ``DAG.deadline`` (seconds, caller's
+    clock — only the ordering matters), depth-first within a DAG."""
+
+    name = "deadline"
+
+    def key(self, st: NodeState) -> Tuple:
+        dl = st.dag.deadline
+        return (dl if dl is not None else math.inf, -st.depth)

@@ -1,13 +1,20 @@
 """zarquet — the on-disk columnar source format (Parquet stand-in).
 
 pyarrow is unavailable offline, so Zerrow's sources are 'zarquet' files:
-zstd-compressed column chunks with a JSON footer, keeping the Parquet
+compressed column chunks with a JSON footer, keeping the Parquet
 properties the paper relies on:
   * compressed on disk, uncompressed Arrow in memory (deserialization is
     real decompression work, parallelizable per column — paper Fig 2);
   * ``read_table(..., dict_columns=...)`` mirrors PyArrow's
     ``read_dictionary=`` argument: chosen utf8 columns are deserialized
     straight into dictionary encoding (paper §4.2.4).
+
+zstd is preferred when the ``zstandard`` package is installed; otherwise
+stdlib ``zlib`` is used.  The codec is recorded in the footer, so files
+written with either codec read back on any environment that has the
+matching decompressor.  Both codecs release the GIL while (de)compressing,
+which is what lets the worker-pool executor overlap deserialization
+across loader nodes.
 
 Layout:  [MAGIC][buffer blob .... ][footer json][footer_len u64][MAGIC]
 """
@@ -17,24 +24,48 @@ from __future__ import annotations
 import json
 import os
 import struct
+import zlib
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:                       # clean environment: stdlib only
+    zstandard = None
 
 from .arrow import (ArrowType, Column, Field, RecordBatch, Schema, Table,
                     UTF8)
 from .buffers import alloc_aligned
 
 MAGIC = b"ZQ01"
+DEFAULT_CODEC = "zstd" if zstandard is not None else "zlib"
 
 
-def _comp(data: np.ndarray, level: int) -> bytes:
-    return zstandard.ZstdCompressor(level=level).compress(
-        np.ascontiguousarray(data).view(np.uint8).reshape(-1).tobytes())
+def _comp(data: np.ndarray, level: int, codec: str = DEFAULT_CODEC) -> bytes:
+    raw = np.ascontiguousarray(data).view(np.uint8).reshape(-1).tobytes()
+    if codec == "zstd":
+        return zstandard.ZstdCompressor(level=level).compress(raw)
+    return zlib.compress(raw, level)
 
 
-def write_table(path: str, table: Table, level: int = 1) -> None:
+def _decomp(blob: bytes, rlen: int, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError(
+                "zarquet file was written with zstd but the 'zstandard' "
+                "package is not installed; rewrite the source with the "
+                "zlib codec or install zstandard")
+        return zstandard.ZstdDecompressor().decompress(
+            blob, max_output_size=rlen)
+    return zlib.decompress(blob)
+
+
+def write_table(path: str, table: Table, level: int = 1,
+                codec: str = DEFAULT_CODEC) -> None:
+    if codec == "zstd" and zstandard is None:
+        raise RuntimeError("zstd codec requested but 'zstandard' is not "
+                           "installed")
     t = table.combine()
     b = t.batches[0]
     blobs: List[bytes] = []
@@ -46,7 +77,7 @@ def write_table(path: str, table: Table, level: int = 1) -> None:
         bufs_meta = []
         for bname, arr in c.buffers():
             raw = np.ascontiguousarray(arr)
-            blob = _comp(raw, level)
+            blob = _comp(raw, level, codec)
             bufs_meta.append({"name": bname, "off": off, "clen": len(blob),
                               "rlen": raw.nbytes, "np": str(raw.dtype)})
             blobs.append(blob)
@@ -55,7 +86,8 @@ def write_table(path: str, table: Table, level: int = 1) -> None:
                           "type": (c.type.to_json()),
                           "nrows": c.length,
                           "buffers": bufs_meta})
-    footer = json.dumps({"columns": cols_meta, "nrows": b.num_rows}).encode()
+    footer = json.dumps({"columns": cols_meta, "nrows": b.num_rows,
+                         "codec": codec}).encode()
     with open(path, "wb") as fh:
         fh.write(MAGIC)
         for blob in blobs:
@@ -84,7 +116,7 @@ def read_table(path: str, dict_columns: Sequence[str] = (),
     ``on_buffer`` lets the share wrapper register each fresh buffer as
     sandbox-charged anonymous memory."""
     meta = read_footer(path)
-    dctx = zstandard.ZstdDecompressor()
+    codec = meta.get("codec", "zstd")   # pre-codec files were always zstd
     dict_set = set(dict_columns)
     fields, cols = [], []
     with open(path, "rb") as fh:
@@ -94,7 +126,7 @@ def read_table(path: str, dict_columns: Sequence[str] = (),
                 fh.seek(bm["off"])
                 blob = fh.read(bm["clen"])
                 out = allocator(bm["rlen"])
-                raw = dctx.decompress(blob, max_output_size=bm["rlen"])
+                raw = _decomp(blob, bm["rlen"], codec)
                 out[:] = np.frombuffer(raw, dtype=np.uint8)
                 if on_buffer is not None:
                     on_buffer(out)

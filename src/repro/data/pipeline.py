@@ -57,6 +57,8 @@ class PipelineConfig:
     seq_len: int = 256
     memory_limit: Optional[int] = None
     vocab: int = 257            # bytes + PAD
+    workers: int = 1            # sched worker-pool size: >1 overlaps shard
+    #                           # decompression across loader nodes
 
 
 class ZerrowDataPipeline:
@@ -71,7 +73,7 @@ class ZerrowDataPipeline:
         self.rm = rm or ResourceManager(
             self.store, RMConfig(memory_limit=cfg.memory_limit,
                                  policy="adaptive"))
-        self.ex = Executor(self.store, self.rm)
+        self.ex = Executor(self.store, self.rm, workers=cfg.workers)
         self._owned_msgs: List = []
 
     # -- one shard -> packed ids message -----------------------------------
@@ -81,46 +83,52 @@ class ZerrowDataPipeline:
         n = (len(ids) // span) * span
         return Table.from_pydict({"ids": ids[:n]})
 
-    def _run_shard(self, path: str):
-        est = max(os.path.getsize(path) * 8, 1 << 20)
-        dag = DAG([
-            NodeSpec("load", source=path, est_mem=est),
-            NodeSpec("pack", fn=self._pack_fn, deps=["load"],
-                     est_mem=est // 2, keep_output=True),
-        ], name=f"pipe-{os.path.basename(path)}")
-        self.ex.run([dag])
-        # keep_output=True: the packed message survives DAG completion;
-        # we own its release
-        msg = dag.nodes["pack"].output
-        self._owned_msgs.append(msg)
-        return msg
+    def _run_shards(self, paths: List[str]) -> List:
+        """One DAG per shard, submitted together: with ``workers > 1`` the
+        loader decompressions overlap in the executor's worker pool."""
+        dags = []
+        for path in paths:
+            est = max(os.path.getsize(path) * 8, 1 << 20)
+            dags.append(DAG([
+                NodeSpec("load", source=path, est_mem=est),
+                NodeSpec("pack", fn=self._pack_fn, deps=["load"],
+                         est_mem=est // 2, keep_output=True),
+            ], name=f"pipe-{os.path.basename(path)}"))
+        self.ex.run(dags)
+        # keep_output=True: the packed messages survive DAG completion;
+        # we own their release
+        msgs = [d.nodes["pack"].output for d in dags]
+        self._owned_msgs.extend(msgs)
+        return msgs
 
     # -- batches ---------------------------------------------------------------
     def batches(self, epochs: int = 1) -> Iterator[Dict[str, np.ndarray]]:
         B, S = self.cfg.batch, self.cfg.seq_len
         span = B * (S + 1)
+        group = max(1, self.cfg.workers)
         for _ in range(epochs):
-            for path in self.paths:
+            for g in range(0, len(self.paths), group):
                 # NOTE: loader output is DeCache-shared; epoch 2+ and any
                 # concurrent consumer reuse the same physical Arrow data
-                msg = self._run_shard(path)
-                reader = SipcReader(self.store)
-                packed = reader.read_table(msg)
-                col = packed.combine().batches[0].column("ids")
-                n = col.length
-                for i in range(n // span):
-                    # zero-copy slice (reshared view of the packed buffer)
-                    window = col.slice(i * span, (i + 1) * span)
-                    arr = window.values.reshape(B, S + 1)
-                    yield {"tokens": np.ascontiguousarray(arr[:, :-1]),
-                           "labels": np.ascontiguousarray(arr[:, 1:])}
-                msg.release()
-                self._owned_msgs.remove(msg)
-                for fid in list(msg.files_referenced()):
-                    f = self.store.files.get(fid)
-                    if f is not None and f.refcount == 0 \
-                            and not f.decache_pinned:
-                        self.store.delete_file(fid)
+                for msg in self._run_shards(self.paths[g:g + group]):
+                    reader = SipcReader(self.store)
+                    packed = reader.read_table(msg)
+                    col = packed.combine().batches[0].column("ids")
+                    n = col.length
+                    for i in range(n // span):
+                        # zero-copy slice (reshared view of the packed
+                        # buffer)
+                        window = col.slice(i * span, (i + 1) * span)
+                        arr = window.values.reshape(B, S + 1)
+                        yield {"tokens": np.ascontiguousarray(arr[:, :-1]),
+                               "labels": np.ascontiguousarray(arr[:, 1:])}
+                    msg.release()
+                    self._owned_msgs.remove(msg)
+                    for fid in list(msg.files_referenced()):
+                        f = self.store.files.get(fid)
+                        if f is not None and f.refcount == 0 \
+                                and not f.decache_pinned:
+                            self.store.delete_file(fid)
 
     def stats(self) -> dict:
         return {"decache_hits": self.rm.decache.hits,

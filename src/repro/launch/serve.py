@@ -2,12 +2,18 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         --smoke --batch 4 --max-new 32
+
+With ``--prompt-shards N`` the requests come from zarquet prompt shards
+through the core/sched worker-pool executor (``--workers`` overlaps shard
+decompression) instead of being drawn randomly.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
+import tempfile
 import time
 
 import jax
@@ -15,7 +21,8 @@ import numpy as np
 
 from ..configs import get_arch, smoke_variant
 from ..models.api import ModelAPI
-from ..serve.engine import Request, ServeEngine
+from ..serve.engine import (Request, ServeEngine, ZerrowPromptSource,
+                            make_prompt_shards)
 
 
 def main():
@@ -28,6 +35,12 @@ def main():
     ap.add_argument("--kv-int8", action="store_true",
                     help="int8-quantized KV cache (halves cache HBM)")
     ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--prompt-shards", type=int, default=0,
+                    help="serve prompts from N zarquet shards via the "
+                         "sched executor (0 = random prompts)")
+    ap.add_argument("--prompts-per-shard", type=int, default=32)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="prompt-source worker-pool size")
     a = ap.parse_args()
 
     arch = get_arch(a.arch)
@@ -39,17 +52,33 @@ def main():
     params = api.model.init(jax.random.key(0))
     engine = ServeEngine(api, params, batch=a.batch, max_seq=a.max_seq)
 
-    rng = np.random.default_rng(0)
-    for r in range(a.rounds):
-        reqs = [Request(prompt=rng.integers(
+    source = None
+    if a.prompt_shards > 0:
+        shard_dir = os.path.join(tempfile.gettempdir(), "zerrow-prompts")
+        paths = make_prompt_shards(shard_dir, a.prompt_shards,
+                                   a.prompts_per_shard)
+        source = ZerrowPromptSource(paths, batch=a.batch,
+                                    max_new=a.max_new, workers=a.workers,
+                                    max_prompt_len=a.max_seq // 2)
+        batches = source.batches()
+    else:
+        rng = np.random.default_rng(0)
+        batches = ([Request(prompt=rng.integers(
             1, arch.vocab, size=int(rng.integers(8, a.max_seq // 2))
         ).astype(np.int32), max_new=a.max_new) for _ in range(a.batch)]
+            for _ in range(a.rounds))
+
+    for r, reqs in enumerate(batches):
+        if r >= a.rounds:
+            break
         t0 = time.perf_counter()
         outs = engine.run_batch(reqs)
         dt = time.perf_counter() - t0
         toks = sum(len(o) for o in outs)
         print(f"round {r}: {toks} tokens in {dt:.2f}s "
               f"({toks / dt:.1f} tok/s)")
+    if source is not None:
+        source.close()
     s = engine.stats
     print(f"totals: prefill {s['prefill_tokens']} tok / "
           f"{s['prefill_s']:.2f}s | decode {s['decode_steps']} steps / "

@@ -31,7 +31,8 @@ def train_loop(arch_name: str, *, steps: int = 100, batch: int = 8,
                seq_len: int = 256, smoke: bool = True,
                ckpt_dir: str = None, ckpt_every: int = 50,
                data_dir: str = None, lr: float = 1e-3,
-               log_every: int = 10, resume: bool = False):
+               log_every: int = 10, resume: bool = False,
+               data_workers: int = 1):
     arch = get_arch(arch_name)
     if smoke:
         arch = smoke_variant(arch)
@@ -44,8 +45,8 @@ def train_loop(arch_name: str, *, steps: int = 100, batch: int = 8,
         make_text_shards(data_dir, n_shards=2, rows_per_shard=4000)
     shards = sorted(os.path.join(data_dir, f)
                     for f in os.listdir(data_dir) if f.endswith(".zq"))
-    pipe = ZerrowDataPipeline(shards, PipelineConfig(batch=batch,
-                                                     seq_len=seq_len))
+    pipe = ZerrowDataPipeline(shards, PipelineConfig(
+        batch=batch, seq_len=seq_len, workers=data_workers))
 
     state = init_state(api, jax.random.key(0))
     store = None
@@ -99,10 +100,13 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--data-workers", type=int, default=1,
+                    help="data-pipeline worker-pool size (overlaps shard "
+                         "decompression across loader nodes)")
     a = ap.parse_args()
     train_loop(a.arch, steps=a.steps, batch=a.batch, seq_len=a.seq_len,
                smoke=a.smoke, ckpt_dir=a.ckpt_dir, resume=a.resume,
-               lr=a.lr)
+               lr=a.lr, data_workers=a.data_workers)
 
 
 if __name__ == "__main__":

@@ -3,19 +3,28 @@
 The KV cache is updated in place via buffer donation — the device-side
 analogue of Zerrow's resharing (appending one token never rewrites the
 cache, exactly as SIPC's slice/concat never rewrites input buffers).
+
+``ZerrowPromptSource`` feeds the engine from zarquet prompt shards through
+the ``core/sched`` worker-pool executor: shard decompression overlaps
+across workers, and the DeCache shares decoded shards between engine
+replicas reading the same corpus.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig, ShapeConfig
+from ..core import (BufferStore, DAG, NodeSpec, RMConfig, ResourceManager,
+                    SipcReader, Table, WorkerPoolExecutor)
+from ..core import zarquet
 from ..models.api import ModelAPI
 
 
@@ -24,6 +33,82 @@ class Request:
     prompt: np.ndarray           # (S,) int32
     max_new: int = 16
     out: Optional[List[int]] = None
+
+
+def make_prompt_shards(root: str, n_shards: int, prompts_per_shard: int,
+                       seed: int = 0) -> List[str]:
+    """Synthetic prompt corpus: zarquet shards with a utf8 'text' column."""
+    rng = np.random.default_rng(seed)
+    words = ["describe", "the", "zero", "copy", "arrow", "pipeline",
+             "memory", "kernel", "shared", "data", "cache", "batch",
+             "serve", "model", "token", "fast"]
+    os.makedirs(root, exist_ok=True)
+    paths = []
+    for s in range(n_shards):
+        texts = [" ".join(rng.choice(words, size=rng.integers(4, 16)))
+                 for _ in range(prompts_per_shard)]
+        p = os.path.join(root, f"prompts-{s:04d}.zq")
+        zarquet.write_table(p, Table.from_pydict({"text": texts}))
+        paths.append(p)
+    return paths
+
+
+class ZerrowPromptSource:
+    """Streams ``Request`` batches out of zarquet prompt shards via the
+    sched executor.  All shard DAGs are submitted in one ``run`` so loader
+    decompression overlaps across the worker pool; prompts are
+    byte-tokenized (ids 1..256, 0 stays PAD) so any vocab ≥ 257 works."""
+
+    def __init__(self, shard_paths: List[str], *, batch: int,
+                 max_new: int = 16, workers: int = 1,
+                 max_prompt_len: Optional[int] = None,
+                 memory_limit: Optional[int] = None,
+                 store: Optional[BufferStore] = None,
+                 rm: Optional[ResourceManager] = None):
+        self.paths = list(shard_paths)
+        self.batch = batch
+        self.max_new = max_new
+        self.max_prompt_len = max_prompt_len
+        self.store = store or BufferStore()
+        self.rm = rm or ResourceManager(
+            self.store, RMConfig(memory_limit=memory_limit))
+        self.ex = WorkerPoolExecutor(self.store, self.rm, workers=workers)
+
+    def _passthrough(self, tables: List[Table]) -> Table:
+        return tables[0]     # zero-copy: every output buffer is reshared
+
+    def batches(self) -> Iterator[List[Request]]:
+        dags = []
+        for p in self.paths:
+            est = max(os.path.getsize(p) * 8, 1 << 20)
+            dags.append(DAG([
+                NodeSpec("load", source=p, est_mem=est),
+                NodeSpec("prompts", fn=self._passthrough, deps=["load"],
+                         est_mem=est // 4, keep_output=True),
+            ], name=f"prompts-{os.path.basename(p)}"))
+        self.ex.run(dags)
+        pending: List[Request] = []
+        for dag in dags:
+            msg = dag.nodes["prompts"].output
+            table = SipcReader(self.store).read_table(msg)
+            col = table.combine().batches[0].column("text")
+            for i in range(col.length):
+                ids = np.frombuffer(col.get_bytes(i),
+                                    dtype=np.uint8).astype(np.int32) + 1
+                if self.max_prompt_len is not None:
+                    ids = ids[:self.max_prompt_len]
+                if len(ids) == 0:
+                    continue
+                pending.append(Request(prompt=ids, max_new=self.max_new))
+                if len(pending) == self.batch:
+                    yield pending
+                    pending = []
+            msg.release()
+        if pending:
+            yield pending
+
+    def close(self) -> None:
+        self.store.close()
 
 
 class ServeEngine:

@@ -1,0 +1,462 @@
+"""The layered scheduler subsystem (core/sched/): policies, admission,
+eviction matrix, and the concurrent worker-pool executor."""
+import numpy as np
+import pytest
+
+from repro.core import (BufferStore, DAG, Executor, InvalidTransition,
+                        NodeSpec, POLICIES, RMConfig, ResourceManager,
+                        SCHEDULES, Table, WorkerPoolExecutor)
+from repro.core import ops, zarquet
+from repro.core.dag import DONE, EVICTED, RUNNING, WAITING
+from repro.core.sched.eviction import (AdaptiveEviction, EvictionPolicy,
+                                       register_eviction)
+
+
+@pytest.fixture()
+def source(tmp_path):
+    path = str(tmp_path / "t.zq")
+    t = zarquet.gen_int_table(4, 1 << 14, seed=7)
+    zarquet.write_table(path, t)
+    return path, t
+
+
+def make_env(tmp_path, workers=1, tag="", **cfg):
+    store = BufferStore(swap_dir=str(tmp_path / f"swap{tag}"))
+    rm = ResourceManager(store, RMConfig(**cfg))
+    ex = Executor(store, rm, workers=workers)
+    return store, rm, ex
+
+
+def chain_dag(path, depth, name="c", est=1 << 16):
+    nodes = [NodeSpec("load", source=path, est_mem=est)]
+    prev = "load"
+    for i in range(depth):
+        def fn(ts, i=i):
+            return ops.add_columns_compute(ts[0], "i0", "i1", f"n{i}")
+        nodes.append(NodeSpec(f"add{i}", fn=fn, deps=[prev],
+                              est_mem=est // 2))
+        prev = f"add{i}"
+    return DAG(nodes, name=name)
+
+
+# --------------------------------------------------------------------------
+# registries
+# --------------------------------------------------------------------------
+
+def test_registries_contain_builtin_policies():
+    assert {"none", "kswap", "rollback", "limitdrop",
+            "adaptive"} <= set(POLICIES)
+    assert {"depth", "breadth", "fair", "deadline"} <= set(SCHEDULES)
+
+
+def test_custom_eviction_policy_registers_and_runs(tmp_path, source):
+    path, _ = source
+    calls = []
+
+    @register_eviction
+    class CountingRollback(EvictionPolicy):
+        name = "counting-rollback-test"
+
+        def __init__(self, rm):
+            super().__init__(rm)
+            self._inner = POLICIES["rollback"](rm)
+
+        def evict(self, st):
+            calls.append((st.dag.name, st.name))
+            return self._inner.evict(st)
+
+    try:
+        store, rm, ex = make_env(tmp_path, memory_limit=3 << 15,
+                                 policy="counting-rollback-test")
+        dags = [chain_dag(path, 4, f"c{i}") for i in range(3)]
+        ex.run(dags)
+        assert all(d.all_done() for d in dags)
+        assert calls, "custom policy was never consulted"
+        store.close()
+    finally:
+        del POLICIES["counting-rollback-test"]
+
+
+# --------------------------------------------------------------------------
+# eviction-policy matrix
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,counter", [
+    ("rollback", "rollback"),
+    ("limitdrop", "limitdrop"),
+    ("adaptive", None),           # adaptive picks either mechanism
+])
+def test_eviction_matrix_completes_and_counts(tmp_path, source, policy,
+                                              counter):
+    path, _ = source
+    store, rm, ex = make_env(tmp_path, memory_limit=3 << 15, policy=policy)
+    dags = [chain_dag(path, 4, f"c{i}") for i in range(3)]
+    ex.run(dags)
+    assert all(d.all_done() for d in dags)
+    if counter is not None:
+        assert rm.evictions[counter] > 0
+    else:
+        assert rm.evictions["rollback"] + rm.evictions["limitdrop"] > 0
+    store.close()
+
+
+class _FakeMsg:
+    released = False
+
+
+def _fake_done(dag, names):
+    for n in names:
+        st = dag.nodes[n]
+        st.status = DONE
+        st.output = _FakeMsg()
+        st.output_bytes = 1
+    return [dag.nodes[n] for n in names]
+
+
+def test_victim_order_least_progressed_then_id_then_depth(tmp_path, source):
+    """Victim order: least-progressed DAG first, dag id DESCENDING on
+    ties, deepest output first within a DAG."""
+    path, _ = source
+    store, rm, _ = make_env(tmp_path, policy="rollback", decache=False)
+    d1 = chain_dag(path, 3, "d1")       # 4 nodes
+    d2 = chain_dag(path, 3, "d2")
+    # d1: 3/4 done (more progressed); d2: 2/4 done
+    rm.completed_nodes = (_fake_done(d1, ["load", "add0", "add1"])
+                          + _fake_done(d2, ["load", "add0"]))
+    order = [(st.dag.name, st.name) for st in rm.eviction.victims()]
+    # d2 (least progressed) is evicted first, deepest first within it
+    assert order == [("d2", "add0"), ("d2", "load"),
+                     ("d1", "add1"), ("d1", "add0"), ("d1", "load")]
+    store.close()
+
+
+def test_victim_order_dag_id_descending_on_progress_tie(tmp_path, source):
+    path, _ = source
+    store, rm, _ = make_env(tmp_path, policy="rollback", decache=False)
+    d1 = chain_dag(path, 2, "d1")
+    d2 = chain_dag(path, 2, "d2")      # d2.id > d1.id
+    rm.completed_nodes = (_fake_done(d1, ["load", "add0"])
+                          + _fake_done(d2, ["load", "add0"]))
+    order = [(st.dag.name, st.name) for st in rm.eviction.victims()]
+    # equal progress: highest dag id first (needed latest by the scheduler)
+    assert order == [("d2", "add0"), ("d2", "load"),
+                     ("d1", "add0"), ("d1", "load")]
+    store.close()
+
+
+def test_victims_protect_chosen_nodes_deps(tmp_path, source):
+    path, _ = source
+    store, rm, _ = make_env(tmp_path, policy="rollback", decache=False)
+    d = chain_dag(path, 2, "d")
+    rm.completed_nodes = _fake_done(d, ["load", "add0"])
+    protected = [(st.dag.name, st.name)
+                 for st in rm.eviction.victims(protect=d.nodes["add1"])]
+    assert ("d", "add0") not in protected      # add1 depends on add0
+    assert ("d", "load") in protected
+    store.close()
+
+
+def test_adaptive_mechanism_selection_by_latency_ratio(tmp_path, source):
+    """Adaptive picks limitdrop for slow-to-recompute outputs (latency /
+    bytes above threshold) and rollback for cheap ones."""
+    path, _ = source
+    store, rm, _ = make_env(tmp_path, policy="adaptive", decache=False)
+    assert isinstance(rm.eviction, AdaptiveEviction)
+    picked = []
+    rm.eviction._rollback.evict = lambda st: picked.append("rollback") or 1
+    rm.eviction._limitdrop.evict = lambda st: picked.append("limitdrop") or 1
+    d = chain_dag(path, 2, "d")
+    (cheap, expensive) = _fake_done(d, ["add0", "add1"])
+    cheap.exec_latency, cheap.output_bytes = 0.0, 1 << 20
+    expensive.exec_latency, expensive.output_bytes = 10.0, 1
+    rm.eviction.evict(cheap)
+    rm.eviction.evict(expensive)
+    assert picked == ["rollback", "limitdrop"]
+    store.close()
+
+
+def test_refcount_safe_gc_under_rollback(tmp_path, source):
+    """Eviction operates on virtual artifacts: shared files survive until
+    refcounts hit zero, and everything is freed after the DAGs finish."""
+    path, _ = source
+    store, rm, ex = make_env(tmp_path, memory_limit=3 << 15,
+                             policy="rollback", decache=False)
+    dags = [chain_dag(path, 4, f"c{i}") for i in range(3)]
+    ex.run(dags)
+    assert all(d.all_done() for d in dags)
+    assert rm.evictions["rollback"] > 0
+    for f in store.files.values():          # no deleted-but-referenced file
+        assert not f.deleted
+        assert f.refcount >= 0
+    assert store.global_charged == 0        # all intermediates GC'd
+    store.close()
+
+
+def test_keep_output_never_evicted_in_grouped_run(tmp_path, source):
+    """A finished DAG's keep_output message is promised to an external
+    consumer: later DAGs in the same grouped run must not roll it back."""
+    path, _ = source
+    store, rm, ex = make_env(tmp_path, memory_limit=3 << 15,
+                             policy="rollback", decache=False)
+    dags = []
+    for i in range(3):
+        nodes = [NodeSpec("load", source=path, est_mem=1 << 16)]
+        prev = "load"
+        for j in range(3):
+            def fn(ts, j=j):
+                return ops.add_columns_compute(ts[0], "i0", "i1", f"n{j}")
+            nodes.append(NodeSpec(f"add{j}", fn=fn, deps=[prev],
+                                  est_mem=1 << 15,
+                                  keep_output=(j == 2)))
+            prev = f"add{j}"
+        dags.append(DAG(nodes, name=f"k{i}"))
+    ex.run(dags)
+    assert all(d.all_done() for d in dags)
+    for d in dags:
+        msg = d.nodes["add2"].output
+        assert msg is not None and not msg.released
+        msg.release()
+    store.close()
+
+
+def test_completed_nodes_pruned_after_dag_finish(tmp_path, source):
+    """keep_output nodes must not leak in rm.completed_nodes across runs."""
+    path, _ = source
+    store, rm, ex = make_env(tmp_path, decache=False)
+    for i in range(4):
+        d = DAG([NodeSpec("load", source=path, est_mem=1 << 16),
+                 NodeSpec("sink", fn=lambda ts: ts[0], deps=["load"],
+                          est_mem=1 << 12, keep_output=True)],
+                name=f"p{i}")
+        ex.run([d])
+        d.nodes["sink"].output.release()
+    assert rm.completed_nodes == []
+    store.close()
+
+
+def test_admission_reserves_inflight_estimates(tmp_path, source):
+    """Claimed in-flight nodes hold their est_mem, so concurrent workers
+    cannot co-admit past the budget."""
+    path, _ = source
+    store, rm, _ = make_env(tmp_path, memory_limit=100)
+    d = chain_dag(path, 1, "r", est=60)
+    node = d.nodes["load"]
+    assert rm.admit(node)                  # 60 <= 100
+    rm.admission.reserve(node)
+    assert rm.available() == 40
+    assert not rm.admit(node)              # a second 60 no longer fits
+    assert rm.admit(d.nodes["add0"])       # but est 30 does
+    rm.admission.reserve(node)
+    assert rm.available() == -20
+    assert not rm.admit(d.nodes["add0"])
+    rm.admission.unreserve(node)
+    rm.admission.unreserve(node)
+    assert rm.available() == 100
+    store.close()
+
+
+# --------------------------------------------------------------------------
+# worker-pool executor
+# --------------------------------------------------------------------------
+
+def _multi_source(tmp_path, n):
+    paths = []
+    for i in range(n):
+        p = str(tmp_path / f"s{i}.zq")
+        zarquet.write_table(p, zarquet.gen_int_table(4, 1 << 14, seed=i))
+        paths.append(p)
+    return paths
+
+
+def _run_counts(tmp_path, tag, force_threads=False, **cfg):
+    path = str(tmp_path / f"src{tag}.zq")
+    zarquet.write_table(path, zarquet.gen_int_table(4, 1 << 14, seed=7))
+    store = BufferStore(swap_dir=str(tmp_path / f"swap{tag}"))
+    rm = ResourceManager(store, RMConfig(memory_limit=3 << 15,
+                                         policy="rollback", **cfg))
+    ex = WorkerPoolExecutor(store, rm, workers=1,
+                            force_threads=force_threads)
+    dags = [chain_dag(path, 4, f"c{i}") for i in range(3)]
+    ex.run(dags)
+    assert all(d.all_done() for d in dags)
+    counts = (ex.node_runs, ex.load_runs, dict(rm.evictions))
+    store.close()
+    return counts
+
+
+def test_workers1_pool_equals_sequential(tmp_path):
+    """workers=1 through the thread pool reproduces the inline sequential
+    semantics exactly: same node_runs, load_runs and eviction counts on a
+    fixed eviction-heavy workload."""
+    seq = _run_counts(tmp_path, "seq", force_threads=False)
+    pool = _run_counts(tmp_path, "pool", force_threads=True)
+    assert seq == pool
+
+
+def test_workers1_deterministic_across_runs(tmp_path):
+    assert _run_counts(tmp_path, "a") == _run_counts(tmp_path, "b")
+
+
+@pytest.mark.parametrize("workers", [2, 4])
+def test_concurrent_run_correct(tmp_path, workers):
+    paths = _multi_source(tmp_path, 5)
+    store, rm, ex = make_env(tmp_path, workers=workers, tag=f"w{workers}",
+                             decache=False)
+    expected = []
+    dags = []
+    for i, p in enumerate(paths):
+        t = zarquet.read_table(p)
+        expected.append(int(sum(int(c.values.sum())
+                                for c in t.batches[0].columns)))
+        dags.append(DAG([
+            NodeSpec("load", source=p, est_mem=1 << 16),
+            NodeSpec("sum", fn=lambda ts: Table.from_pydict(
+                {"total": np.array([ops.sum_all_ints(ts[0])],
+                                   dtype=np.int64)}),
+                deps=["load"], est_mem=1 << 12, keep_output=True),
+        ], name=f"d{i}"))
+    ex.run(dags)
+    assert all(d.all_done() for d in dags)
+    assert ex.node_runs == 10 and ex.load_runs == 5
+    from repro.core import SipcReader
+    for d, want in zip(dags, expected):
+        msg = d.nodes["sum"].output
+        got = SipcReader(store).read_table(msg).to_pydict()["total"][0]
+        assert int(got) == want
+        msg.release()
+    store.close()
+
+
+def test_concurrent_decache_single_flight(tmp_path, source):
+    """Workers racing on the same (source, dict_columns) key must not
+    duplicate the load: the DeCache load is single-flight."""
+    path, _ = source
+    store, rm, ex = make_env(tmp_path, workers=4, decache=True)
+    dags = [DAG([
+        NodeSpec("load", source=path, est_mem=1 << 16),
+        NodeSpec("sum", fn=lambda ts: Table.from_pydict(
+            {"total": np.array([ops.sum_all_ints(ts[0])],
+                               dtype=np.int64)}),
+            deps=["load"], est_mem=1 << 12),
+    ], name=f"d{i}") for i in range(6)]
+    ex.run(dags)
+    assert all(d.all_done() for d in dags)
+    assert ex.load_runs == 1
+    assert rm.decache.hits >= 5
+    store.close()
+
+
+def test_concurrent_eviction_workload(tmp_path):
+    paths = _multi_source(tmp_path, 4)
+    store, rm, ex = make_env(tmp_path, workers=2, tag="ev",
+                             memory_limit=3 << 15, policy="adaptive")
+    dags = [chain_dag(p, 4, f"c{i}") for i, p in enumerate(paths)]
+    ex.run(dags)
+    assert all(d.all_done() for d in dags)
+    assert sum(rm.evictions.values()) > 0
+    store.close()
+
+
+# --------------------------------------------------------------------------
+# schedule policies
+# --------------------------------------------------------------------------
+
+def _traced_chain(path, depth, name, trace):
+    nodes = [NodeSpec("load", source=path, est_mem=1 << 16)]
+    prev = "load"
+    for i in range(depth):
+        def fn(ts, i=i, name=name):
+            trace.append((name, f"add{i}"))
+            return ops.add_columns_compute(ts[0], "i0", "i1", f"n{i}")
+        nodes.append(NodeSpec(f"add{i}", fn=fn, deps=[prev],
+                              est_mem=1 << 15))
+        prev = f"add{i}"
+    return DAG(nodes, name=name)
+
+
+def test_depth_first_finishes_dag_before_starting_next(tmp_path):
+    paths = _multi_source(tmp_path, 2)
+    store, rm, ex = make_env(tmp_path, tag="df", schedule="depth",
+                             decache=False)
+    trace = []
+    dags = [_traced_chain(p, 3, f"d{i}", trace)
+            for i, p in enumerate(paths)]
+    ex.run(dags)
+    # all of d0's compute nodes run before any of d1's
+    assert trace == [("d0", f"add{i}") for i in range(3)] + \
+                    [("d1", f"add{i}") for i in range(3)]
+    store.close()
+
+
+def test_breadth_first_interleaves_dags(tmp_path):
+    paths = _multi_source(tmp_path, 2)
+    store, rm, ex = make_env(tmp_path, tag="bf", schedule="breadth",
+                             decache=False)
+    trace = []
+    dags = [_traced_chain(p, 3, f"d{i}", trace)
+            for i, p in enumerate(paths)]
+    ex.run(dags)
+    # shallowest-first alternates between the two DAGs level by level
+    assert trace == [("d0", "add0"), ("d1", "add0"),
+                     ("d0", "add1"), ("d1", "add1"),
+                     ("d0", "add2"), ("d1", "add2")]
+    store.close()
+
+
+def test_fair_share_round_robins_tenants(tmp_path):
+    paths = _multi_source(tmp_path, 2)
+    store, rm, ex = make_env(tmp_path, tag="fs", schedule="fair",
+                             decache=False)
+    trace = []
+    dags = [_traced_chain(p, 3, f"d{i}", trace)
+            for i, p in enumerate(paths)]
+    ex.run(dags)
+    # no tenant ever gets more than one completed node ahead
+    counts = {"d0": 0, "d1": 0}
+    for name, _ in trace:
+        counts[name] += 1
+        assert abs(counts["d0"] - counts["d1"]) <= 1
+    store.close()
+
+
+def test_deadline_aware_prioritizes_urgent_dag(tmp_path):
+    paths = _multi_source(tmp_path, 2)
+    store, rm, ex = make_env(tmp_path, tag="dl", schedule="deadline",
+                             decache=False)
+    trace = []
+    d0 = _traced_chain(paths[0], 3, "d0", trace)       # no deadline
+    d1 = _traced_chain(paths[1], 3, "d1", trace)
+    d1.deadline = 1.0                                  # urgent
+    ex.run([d0, d1])
+    # d1 (earlier deadline) completes before d0 starts computing
+    assert trace[:3] == [("d1", f"add{i}") for i in range(3)]
+    store.close()
+
+
+# --------------------------------------------------------------------------
+# node lifecycle state machine
+# --------------------------------------------------------------------------
+
+def test_node_state_machine_rejects_illegal_transitions(tmp_path, source):
+    path, _ = source
+    d = chain_dag(path, 1, "sm")
+    st = d.nodes["load"]
+    assert st.status == WAITING
+    with pytest.raises(InvalidTransition):
+        st.transition(DONE)             # WAITING -> DONE skips RUNNING
+    st.claim()
+    assert st.status == RUNNING
+    with pytest.raises(InvalidTransition):
+        st.transition(EVICTED)          # only DONE outputs can be evicted
+    st.transition(DONE)
+    st.transition(EVICTED)
+    st.claim()                          # re-execution after rollback
+    assert st.status == RUNNING
+
+
+def test_zarquet_codec_recorded_in_footer(tmp_path):
+    path = str(tmp_path / "codec.zq")
+    zarquet.write_table(path, zarquet.gen_int_table(2, 1 << 10))
+    meta = zarquet.read_footer(path)
+    assert meta["codec"] == zarquet.DEFAULT_CODEC
+    assert zarquet.read_table(path).num_rows > 0
