@@ -1,0 +1,119 @@
+"""Flight data plane: thread vs process workers on a compute-bound
+pipeline.
+
+Each DAG is  load -> dict_encode -> filter  over its own zarquet source.
+``dict_encode`` is deliberately Python-heavy (per-row gather + np.unique)
+— the worst case for the thread executor, whose compute nodes serialize
+on the GIL inside the RM critical section.  ``workers_mode='process'``
+runs the same ops in spawned OS processes over SIPC wire references, so
+the stages actually overlap; the benchmark also records how many bytes
+crossed the worker sockets vs how many data bytes the pipeline produced
+(references-only wire: the ratio should be ~1e-3 or smaller).
+
+    PYTHONPATH=src python -m benchmarks.run flight
+
+Results land in BENCH_flight.json (thread/process wall-clock at each
+worker count, speedup, socket vs data bytes).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import DAG, NodeSpec
+
+from .common import Csv, gb, make_env, timed, write_source
+from repro.core import ops, zarquet
+
+N_DAGS = 4
+WORKERS = 4
+SMOKE = os.environ.get("ZERROW_BENCH_SMOKE") == "1"
+
+
+def encode_op(tables):
+    return ops.dict_encode(tables[0], ["s0"])
+
+
+def filter_op(tables):
+    t = tables[0]
+    mask = np.arange(t.num_rows) % 3 != 0
+    return ops.filter_rows(t, mask)
+
+
+def _build(paths, est):
+    return [DAG([
+        NodeSpec("load", source=p, est_mem=est),
+        NodeSpec("enc", fn=encode_op, deps=["load"], est_mem=est),
+        NodeSpec("filt", fn=filter_op, deps=["enc"], est_mem=est,
+                 keep_output=True),
+    ], name=f"job{i}") for i, p in enumerate(paths)]
+
+
+def _run(mode: str, workers: int, tables, results: dict) -> float:
+    env = make_env(workers=workers, workers_mode=mode, decache=False)
+    est = int(tables[0].nbytes * 4)
+    paths = [write_source(env.tmpdir, f"src{i}.zq", t)
+             for i, t in enumerate(tables)]
+    dags = _build(paths, est)
+    if mode == "process":
+        env.ex._ensure_pool()   # warm workers (FaaS platforms keep them
+        #                       # warm; spawn+import is not the data plane)
+    with timed() as t:
+        env.ex.run(dags)
+    assert all(d.all_done() for d in dags)
+    out_bytes = sum(d.nodes["filt"].output.new_bytes +
+                    d.nodes["filt"].output.reshared_bytes for d in dags)
+    row = {"mode": mode, "workers": workers, "wall_s": t[1],
+           "output_bytes": out_bytes}
+    if mode == "process":
+        row["socket_bytes"] = env.ex.socket_bytes
+        row["copied_bytes"] = env.store.copied_bytes
+    results["runs"].append(row)
+    env.close()
+    return t[1]
+
+
+def main() -> None:
+    size = gb(0.02) if SMOKE else gb(0.1)
+    # short strings: many rows per byte -> the per-row dictionary-encode
+    # work dominates the (GIL-releasing, thread-overlappable) decompression
+    tables = [zarquet.gen_str_table(1, size, str_len=16, repeats=4, seed=i)
+              for i in range(N_DAGS)]
+    data_bytes = sum(t.nbytes for t in tables)
+    results = {"n_dags": N_DAGS, "workers": WORKERS,
+               "input_bytes": data_bytes, "smoke": SMOKE, "runs": []}
+
+    t_seq = _run("thread", 1, tables, results)
+    Csv.add("flight_thread_workers1", t_seq, "baseline")
+    t_thr = _run("thread", WORKERS, tables, results)
+    Csv.add(f"flight_thread_workers{WORKERS}", t_thr,
+            f"{t_thr / t_seq:.2f}x_of_seq")
+    t_proc = _run("process", WORKERS, tables, results)
+    proc_row = results["runs"][-1]
+    sock = proc_row["socket_bytes"]
+    Csv.add(f"flight_process_workers{WORKERS}", t_proc,
+            f"{t_proc / t_seq:.2f}x_of_seq;socket_frac="
+            f"{sock / max(data_bytes, 1):.2e}")
+
+    results["speedup_process_over_thread"] = t_thr / t_proc
+    if SMOKE:
+        # never clobber the checked-in full-size numbers with tiny noisy
+        # smoke results — CI only checks that the pipeline still runs
+        print(f"# smoke: process {t_proc:.2f}s vs thread {t_thr:.2f}s; "
+              "BENCH_flight.json left untouched")
+        return
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_flight.json")
+    with open(out, "w") as fh:
+        json.dump(results, fh, indent=2)
+    print(f"# wrote {out}: process {t_proc:.2f}s vs thread {t_thr:.2f}s "
+          f"at workers={WORKERS} "
+          f"({t_thr / t_proc:.2f}x); socket bytes {sock} vs data bytes "
+          f"{data_bytes}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core import (BufferStore, DAG, Executor, KernelZero, NodeSpec,
                         RMConfig, ResourceManager, SipcReader, SipcWriter,
-                        Table)
+                        Table, make_executor)
 from repro.core import ops, zarquet
 
 # Sizes are scaled ~16x down from the paper's (10 GB tables on a 256 GB
@@ -36,19 +36,26 @@ class Env:
     ex: Executor
 
     def close(self):
+        self.ex.close()
         self.store.close()
         shutil.rmtree(self.tmpdir, ignore_errors=True)
 
 
 def make_env(**cfg) -> Env:
     tmpdir = tempfile.mkdtemp(prefix="zerrow-bench-")
+    backing = cfg.pop("backing", None)
+    if cfg.get("workers_mode") == "process":
+        backing = backing or "file"        # Flight needs real store files
     store = BufferStore(swap_dir=os.path.join(tmpdir, "swap"),
-                        system_limit=cfg.pop("system_limit", None))
+                        system_limit=cfg.pop("system_limit", None),
+                        backing=backing or "ram",
+                        data_dir=os.path.join(tmpdir, "store")
+                        if backing == "file" else None)
     if "kswap" in cfg:
         store.kswap_enabled = cfg.pop("kswap")
     workers = cfg.pop("workers", 1)        # executor worker-pool size
     rm = ResourceManager(store, RMConfig(**cfg))
-    return Env(tmpdir, store, rm, Executor(store, rm, workers=workers))
+    return Env(tmpdir, store, rm, make_executor(store, rm, workers=workers))
 
 
 @contextmanager

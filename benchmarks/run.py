@@ -1,15 +1,28 @@
 """Benchmark harness: one function per paper figure/table.
 
-    PYTHONPATH=src python -m benchmarks.run [figure ...]
+    PYTHONPATH=src python -m benchmarks.run [--smoke] [figure ...]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  ``--smoke`` runs a quick
+CI-sized subset at a heavily reduced scale (so the bench scripts cannot
+rot without the build noticing); it must be passed before importing any
+benchmark module because the scale is read at import time.
 """
 
+import os
 import sys
+
+#: the CI smoke subset: one bench per subsystem family
+SMOKE_FIGURES = ("fig2", "fig6", "concurrency", "flight")
 
 
 def main() -> None:
-    from . import (bench_concurrency, fig2_copy_latency,
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    if smoke:
+        args = [a for a in args if a != "--smoke"]
+        os.environ.setdefault("ZERROW_BENCH_SCALE", "256")
+        os.environ["ZERROW_BENCH_SMOKE"] = "1"
+    from . import (bench_concurrency, bench_flight, fig2_copy_latency,
                    fig4_copy_avoidance, fig5_decache, fig6_resharing,
                    fig7_depth, fig8_dict_repeats, fig9_dict_norepeats,
                    fig10_eviction, roofline_table)
@@ -24,17 +37,23 @@ def main() -> None:
         "fig10": fig10_eviction.main,         # eviction mechanisms
         "roofline": roofline_table.main,      # dry-run roofline summary
         "concurrency": bench_concurrency.main,  # worker-pool loader overlap
+        "flight": bench_flight.main,          # process vs thread data plane
     }
-    selected = sys.argv[1:] or list(figures)
+    selected = args or (list(SMOKE_FIGURES) if smoke else list(figures))
     print("name,us_per_call,derived")
+    failed = []
     for name in selected:
         if name not in figures:
             print(f"{name},0.0,UNKNOWN (choose from {sorted(figures)})")
+            failed.append(name)      # a renamed bench must not pass CI
             continue
         try:
             figures[name]()
         except Exception as e:  # keep the harness going
+            failed.append(name)
             print(f"{name},0.0,ERROR:{e!r}")
+    if smoke and failed:
+        raise SystemExit(f"smoke benchmarks failed: {failed}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,103 @@
+"""Version-compatibility shims over the moving parts of the jax API.
+
+The repo targets the jax baked into the container; upstream has moved
+three symbols we rely on between releases:
+
+  * ``shard_map``   — lived in ``jax.experimental.shard_map`` until it was
+                      promoted to ``jax.shard_map``;
+  * ``AxisType``    — ``jax.make_mesh(..., axis_types=...)`` only exists on
+                      newer jax; older versions take no ``axis_types`` and
+                      treat every axis as auto;
+  * ``optimization_barrier`` — older jax ships the primitive without a
+                      differentiation rule, so any model that barriers its
+                      gathered params inside a scanned/checkpointed block
+                      fails under ``jax.grad`` with NotImplementedError.
+
+Import from here instead of from jax directly.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+# -- shard_map ---------------------------------------------------------------
+try:                                       # promoted top-level location
+    _shard_map_impl = jax.shard_map
+except AttributeError:                     # supported pre-promotion location
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SM_PARAMS = frozenset(
+    inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f, **kwargs):
+    """``shard_map`` accepting the newest keyword spelling on any version.
+
+    Newer jax renamed ``check_rep`` -> ``check_vma`` and replaced the
+    ``auto`` axis set with its complement ``axis_names`` (the axes that are
+    *manual*); translate to whatever the installed version understands.
+    """
+    if "check_vma" in kwargs and "check_vma" not in _SM_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    if "axis_names" in kwargs and "axis_names" not in _SM_PARAMS:
+        manual = set(kwargs.pop("axis_names"))
+        mesh = kwargs.get("mesh")
+        if mesh is not None and "auto" in _SM_PARAMS:
+            auto = frozenset(mesh.axis_names) - manual
+            if auto:
+                kwargs["auto"] = auto
+    return _shard_map_impl(f, **kwargs)
+
+
+# -- make_mesh with axis_types ----------------------------------------------
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with explicit Auto axis types where supported.
+
+    Newer jax distinguishes Auto/Explicit axis types; older jax has no
+    ``AxisType`` and every axis is implicitly auto, so dropping the
+    argument is semantically identical there.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axis_names)
+    return jax.make_mesh(shape, axis_names,
+                         axis_types=(axis_type.Auto,) * len(axis_names))
+
+
+# -- compiled-artifact cost analysis ----------------------------------------
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every version.
+
+    Older jax returns a list with one per-computation dict; newer jax
+    returns the dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
+# -- differentiable optimization_barrier -------------------------------------
+@jax.custom_vjp
+def optimization_barrier(x):
+    """``jax.lax.optimization_barrier`` that is differentiable on every
+    supported jax version.
+
+    The barrier is semantically the identity, so its VJP is the identity
+    on cotangents; we barrier the cotangents too, matching the scheduling
+    intent (keep per-iteration gathers inside the backward loop as well).
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _ob_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _ob_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+optimization_barrier.defvjp(_ob_fwd, _ob_bwd)

@@ -19,10 +19,20 @@ Control-plane subsystems (paper §3.1/§3.3, layered — docs/ARCHITECTURE.md):
                      none/kswap/rollback/limitdrop/adaptive
   sched.executor   — WorkerPoolExecutor: N workers pull admitted nodes
                      concurrently (loader decompression overlaps across
-                     workers); workers=1 is the exact sequential semantics
+                     workers); workers=1 is the exact sequential semantics.
+                     ProcessWorkerExecutor: same scheduling, but node ops
+                     run in spawned OS processes over the Flight data
+                     plane (select with RMConfig.workers_mode='process')
+  flight   — the cross-process zero-copy data plane: SIPC wire protocol
+             (schema bytes + (file_path, offset, length) references over a
+             Unix-domain socket), FlightServer/FlightClient named-ticket
+             exchange, and the process-worker pool.  Pairs with
+             BufferStore(backing='file'), whose store files are real
+             mmap'd files any process can map
   rm       — ResourceManager: accounting, counters, refcount-safe GC, and
              the wiring of the three sched components; re-exports the
-             executor under its historical ``Executor`` name
+             executor under its historical ``Executor`` name and the
+             ``make_executor`` factory (workers_mode -> class)
 
 Register a new policy by subclassing ``EvictionPolicy`` (decorate with
 ``sched.register_eviction``) or ``SchedulePolicy`` (``register_schedule``)
@@ -38,10 +48,15 @@ from .dag import (DAG, InvalidTransition, NodeSpec, NodeState, Sandbox,
                   VALID_TRANSITIONS)
 from .deanon import KernelZero
 from .decache import DeCache
-from .rm import Executor, POLICIES, RMConfig, ResourceManager
-from .sched import (AdmissionController, EvictionPolicy, SCHEDULES,
-                    SchedulePolicy, WorkerPoolExecutor, get_eviction,
-                    get_schedule, register_eviction, register_schedule)
+from .flight import (FlightClient, FlightError, FlightServer,
+                     FlightWorkerError, FlightWorkerPool, WireError,
+                     decode_message, encode_message)
+from .rm import (Executor, POLICIES, RMConfig, ResourceManager,
+                 WORKERS_MODES, make_executor)
+from .sched import (AdmissionController, EvictionPolicy,
+                    ProcessWorkerExecutor, SCHEDULES, SchedulePolicy,
+                    WorkerPoolExecutor, get_eviction, get_schedule,
+                    register_eviction, register_schedule)
 from .sipc import (AddressMap, BufRef, SipcMessage, SipcReader, SipcWriter)
 
 __all__ = [
@@ -52,8 +67,12 @@ __all__ = [
     "StoreStats", "alloc_aligned", "DAG", "InvalidTransition", "NodeSpec",
     "NodeState", "Sandbox", "VALID_TRANSITIONS",
     "KernelZero", "DeCache", "Executor", "POLICIES", "RMConfig",
-    "ResourceManager", "AdmissionController", "EvictionPolicy", "SCHEDULES",
-    "SchedulePolicy", "WorkerPoolExecutor", "get_eviction", "get_schedule",
+    "ResourceManager", "WORKERS_MODES", "make_executor",
+    "AdmissionController", "EvictionPolicy", "SCHEDULES",
+    "SchedulePolicy", "ProcessWorkerExecutor", "WorkerPoolExecutor",
+    "get_eviction", "get_schedule",
     "register_eviction", "register_schedule",
     "AddressMap", "BufRef", "SipcMessage", "SipcReader", "SipcWriter",
+    "FlightClient", "FlightError", "FlightServer", "FlightWorkerError",
+    "FlightWorkerPool", "WireError", "decode_message", "encode_message",
 ]

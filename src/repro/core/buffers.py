@@ -25,6 +25,23 @@ Simulation notes (see DESIGN.md §2a):
     user code may still reference) — experiments are sized to fit RAM, and
     the *time* cost of swap (the quantity that drives the paper's Figures 4
     and 10) is real.
+
+Backing modes (the Flight data plane, docs/ARCHITECTURE.md):
+  - ``backing="ram"`` (default) — extents hold numpy views of user memory;
+    zero-copy within one process, invisible to other processes.  This is
+    the mode every pre-Flight benchmark and test runs in.
+  - ``backing="file"`` — every StoreFile is a real file under ``data_dir``
+    and resident extents are MAP_SHARED mmaps of it, so *any* process can
+    map the same physical page-cache pages by ``(path, offset, length)``.
+    De-anonymization writes the anonymous bytes into the backing file once
+    (``bytes_file_ingest`` — the user-space tax for cross-process reality;
+    the kernel module moves the pages instead) and the anonymous source is
+    freed immediately after, so peak memory matches the transfer
+    semantics.  ``adopt_file`` maps a file another process produced into
+    this store without touching a single data byte — that is how Flight
+    readers and the parent RM pick up worker outputs.  Swap-out of a
+    file-backed extent just drops the mapping (the bytes stay durable in
+    the backing file); swap-in re-maps it.
 """
 
 from __future__ import annotations
@@ -72,6 +89,29 @@ def pages_of(nbytes: int) -> int:
     return -(-nbytes // PAGE)
 
 
+def _file_extend(path: str, length: int) -> None:
+    """Grow ``path`` to at least ``length`` bytes (sparse, no data I/O)."""
+    fd = os.open(path, os.O_RDWR | os.O_CREAT, 0o600)
+    try:
+        if os.fstat(fd).st_size < length:
+            os.ftruncate(fd, length)
+    finally:
+        os.close(fd)
+
+
+def map_extent(path: str, offset: int, length: int) -> np.ndarray:
+    """Read-only MAP_SHARED view of ``path[offset:offset+length]``.
+
+    This is the reader half of the Flight data plane: any process that
+    knows a ``(path, offset, length)`` reference maps the same physical
+    page-cache pages — no data bytes move.
+    """
+    if length == 0:
+        return np.empty(0, dtype=np.uint8)
+    return np.memmap(path, dtype=np.uint8, mode="r", offset=offset,
+                     shape=(length,))
+
+
 # --------------------------------------------------------------------------
 # stats
 # --------------------------------------------------------------------------
@@ -81,6 +121,10 @@ class StoreStats:
     bytes_copied: int = 0            # real memcpys into store files
     bytes_deanon: int = 0            # zero-copy ownership transfers
     bytes_reshared: int = 0          # output refs that reused input files
+    bytes_file_ingest: int = 0       # anon bytes written into backing files
+    #                                # (file mode's deanon tax; not a SIPC
+    #                                # wire/reader/writer copy)
+    bytes_adopted: int = 0           # bytes mapped in from foreign files
     partial_page_bytes: int = 0      # head/tail partial-page copies
     swapout_bytes: int = 0
     swapin_bytes: int = 0
@@ -148,7 +192,7 @@ class Extent:
     """
 
     __slots__ = ("file", "logical_off", "length", "array", "swap_path",
-                 "swap_off", "last_access", "pinned_resident")
+                 "swap_off", "last_access", "pinned_resident", "file_backed")
 
     def __init__(self, file: "StoreFile", logical_off: int, length: int,
                  array: Optional[np.ndarray], swap_path: Optional[str] = None,
@@ -161,6 +205,8 @@ class Extent:
         self.swap_off = swap_off
         self.last_access = 0
         self.pinned_resident = False
+        self.file_backed = False     # array is a MAP_SHARED mmap of the
+        #                            # StoreFile's backing file (file mode)
 
     @property
     def resident(self) -> bool:
@@ -168,10 +214,17 @@ class Extent:
 
 
 class StoreFile:
-    """An in-memory 'tmpfs file' assembled from de-anonymized extents."""
+    """A 'tmpfs file' assembled from de-anonymized extents.
+
+    In-memory in RAM mode; a real file under the store's ``data_dir`` in
+    file mode (``backing_path``), where resident extents are MAP_SHARED
+    mmaps and the byte layout is exactly the logical layout (extent
+    ``logical_off`` == file offset), so ``(backing_path, offset, length)``
+    is a complete cross-process buffer reference.
+    """
 
     def __init__(self, store: "BufferStore", file_id: int, owner: Cgroup,
-                 label: str = ""):
+                 label: str = "", backing_path: Optional[str] = None):
         self.store = store
         self.file_id = file_id
         self.owner = owner
@@ -181,6 +234,8 @@ class StoreFile:
         self.refcount = 0
         self.deleted = False
         self.decache_pinned = False
+        self.backing_path = backing_path   # file mode only
+        self.owns_path = backing_path is not None  # unlink on delete?
 
     # -- building ---------------------------------------------------------
     def append_extent(self, array: Optional[np.ndarray],
@@ -194,10 +249,27 @@ class StoreFile:
         off = self.length
         self.extents.append(ext)
         self.length += n
+        if self.backing_path is not None and n > 0:
+            # the backing file always spans the logical length, so swapped
+            # direct-swap entries have their region reserved up front
+            _file_extend(self.backing_path, self.length)
         if array is not None:
-            array = np.ascontiguousarray(array).view(np.uint8)
-            ext.array = array
-            ext.array.flags.writeable = False  # enforce post-deanon immutability
+            array = np.ascontiguousarray(array).view(np.uint8).reshape(-1)
+            if self.backing_path is not None and n > 0:
+                # file mode: the anonymous bytes are written into the
+                # backing file once (the user-space stand-in for the kernel
+                # module's page move) and the resident view becomes a
+                # MAP_SHARED mmap any process can re-open
+                mm = np.memmap(self.backing_path, dtype=np.uint8,
+                               mode="r+", offset=off, shape=(n,))
+                mm[:] = array
+                mm.flags.writeable = False
+                ext.array = mm
+                ext.file_backed = True
+                self.store.stats.bytes_file_ingest += n
+            else:
+                ext.array = array
+                ext.array.flags.writeable = False  # post-deanon immutability
             if charge:
                 self.owner.charge(n)
             self.store._lru_touch(ext)
@@ -259,13 +331,23 @@ class BufferStore:
     """Registry of StoreFiles + swap machinery + kswap + stats."""
 
     def __init__(self, swap_dir: Optional[str] = None,
-                 system_limit: Optional[int] = None):
+                 system_limit: Optional[int] = None,
+                 backing: str = "ram", data_dir: Optional[str] = None):
+        assert backing in ("ram", "file"), backing
         self.files: Dict[int, StoreFile] = {}
         self._next_id = 1
         self.stats = StoreStats()
         self.swap_dir = swap_dir or os.path.join(
             os.environ.get("TMPDIR", "/tmp"), f"zerrow-swap-{uuid.uuid4().hex[:8]}")
         os.makedirs(self.swap_dir, exist_ok=True)
+        self.backing = backing
+        self.data_dir: Optional[str] = None
+        self.path_index: Dict[str, int] = {}   # abs backing path -> file_id
+        if backing == "file":
+            self.data_dir = os.path.abspath(data_dir or os.path.join(
+                os.environ.get("TMPDIR", "/tmp"),
+                f"zerrow-store-{uuid.uuid4().hex[:8]}"))
+            os.makedirs(self.data_dir, exist_ok=True)
         self.system = Cgroup("system", self, limit=None)
         self.system_limit = system_limit
         self.global_charged = 0
@@ -274,6 +356,14 @@ class BufferStore:
         self.kswap_enabled = True
         self.anon_regions: List["AnonRegion"] = []
         self.on_oom: Optional[Callable[[int], bool]] = None  # returns True if it freed memory
+
+    @property
+    def copied_bytes(self) -> int:
+        """Real data-byte memcpys through the SIPC read/write paths — the
+        quantity the zero-copy claims are asserted on.  File-mode ingest
+        and adoption are accounted separately (``bytes_file_ingest`` /
+        ``bytes_adopted``)."""
+        return self.stats.bytes_copied
 
     # -- cgroups ----------------------------------------------------------
     def new_cgroup(self, name: str, limit: Optional[int] = None) -> Cgroup:
@@ -296,17 +386,84 @@ class BufferStore:
                     f"limit {self.system_limit}")
 
     # -- files ------------------------------------------------------------
-    def new_file(self, owner: Cgroup, label: str = "") -> StoreFile:
+    def new_file(self, owner: Cgroup, label: str = "",
+                 backing_path: Optional[str] = None) -> StoreFile:
         with self._lock:
             fid = self._next_id
             self._next_id += 1
-            f = StoreFile(self, fid, owner, label)
+            path = None
+            if self.backing == "file":
+                path = os.path.abspath(backing_path or os.path.join(
+                    self.data_dir, f"f{fid:06d}"))
+                if backing_path is None:
+                    _file_extend(path, 0)       # create empty backing file
+                self.path_index[path] = fid
+            f = StoreFile(self, fid, owner, label, backing_path=path)
             self.files[fid] = f
             self.stats.files_created += 1
             return f
 
     def get(self, file_id: int) -> StoreFile:
         return self.files[file_id]
+
+    def backing_path(self, file_id: int) -> str:
+        """The cross-process name of a StoreFile (file mode only)."""
+        f = self.files[file_id]
+        if f.backing_path is None:
+            raise ValueError(
+                f"store file {file_id} ({f.label!r}) has no backing file: "
+                "construct the BufferStore with backing='file' to export "
+                "wire references")
+        return f.backing_path
+
+    def ensure_file_backed(self, file_id: int) -> None:
+        """Materialize every extent of a StoreFile in its backing file.
+
+        A direct-swap entry (anon region swapped out *before* deanon, then
+        transferred without I/O) lives in a separate swap file; its
+        backing-file region is only reserved.  Exporting a wire reference
+        to it would hand readers a sparse hole, so the wire encoder calls
+        this before naming the path — the swap-in lands the bytes in the
+        backing file and the extent becomes file-backed for good."""
+        f = self.files[file_id]
+        if f.backing_path is None:
+            raise ValueError(f"store file {file_id} is not file-backed")
+        for ext in f.extents:
+            if not ext.file_backed and not ext.resident:
+                self.swap_in(ext, foreground=False)
+
+    def adopt_file(self, path: str, owner: Optional[Cgroup] = None,
+                   label: str = "", charge: bool = True,
+                   owns_path: bool = False) -> StoreFile:
+        """Map a file produced by another process (or store) into this
+        registry without touching any data bytes.
+
+        Returns the existing StoreFile when ``path`` is already registered
+        (e.g. a worker output that reshares one of our own input files).
+        ``owns_path=True`` transfers unlink responsibility to this store —
+        the ownership handover the parent RM performs on worker outputs.
+        """
+        if self.backing != "file":
+            raise ValueError("adopt_file requires a file-backed store")
+        path = os.path.abspath(path)
+        with self._lock:
+            fid = self.path_index.get(path)
+            if fid is not None:
+                return self.files[fid]
+            length = os.path.getsize(path)
+            f = self.new_file(owner or self.system, label,
+                              backing_path=path)
+            f.owns_path = owns_path
+            if length:
+                ext = Extent(f, 0, length, map_extent(path, 0, length))
+                ext.file_backed = True
+                f.extents.append(ext)
+                f.length = length
+                if charge:
+                    f.owner.charge(length)
+                self._lru_touch(ext)
+            self.stats.bytes_adopted += length
+            return f
 
     def delete_file(self, file_id: int) -> None:
         f = self.files.pop(file_id, None)
@@ -319,8 +476,16 @@ class BufferStore:
                 ext.array = None
             elif ext.swap_path:
                 f.owner.swap_charged -= ext.length
+                if not ext.file_backed:
+                    try:
+                        os.unlink(ext.swap_path)
+                    except OSError:
+                        pass
+        if f.backing_path is not None:
+            self.path_index.pop(f.backing_path, None)
+            if f.owns_path:
                 try:
-                    os.unlink(ext.swap_path)
+                    os.unlink(f.backing_path)
                 except OSError:
                     pass
         self.stats.files_deleted += 1
@@ -332,10 +497,16 @@ class BufferStore:
     def swap_out(self, ext: Extent) -> None:
         if not ext.resident or ext.pinned_resident:
             return
-        path = self._swap_path()
-        ext.array.tofile(path)  # real disk write  # type: ignore[union-attr]
-        ext.swap_path = path
-        ext.array = None
+        if ext.file_backed:
+            # the bytes are durable in the backing file: dropping the
+            # mapping is the page-cache-eviction analogue (no write I/O)
+            ext.swap_path = ext.file.backing_path
+            ext.array = None
+        else:
+            path = self._swap_path()
+            ext.array.tofile(path)  # real disk write  # type: ignore[union-attr]
+            ext.swap_path = path
+            ext.array = None
         ext.file.owner.uncharge(ext.length)
         ext.file.owner.swap_charged += ext.length
         self.stats.swapout_bytes += ext.length
@@ -345,14 +516,32 @@ class BufferStore:
         if ext.resident:
             return
         assert ext.swap_path is not None
-        data = np.fromfile(ext.swap_path, dtype=np.uint8, count=ext.length)  # real read
-        try:
-            os.unlink(ext.swap_path)
-        except OSError:
-            pass
-        ext.swap_path = None
-        data.flags.writeable = False
-        ext.array = data
+        if ext.file_backed:
+            ext.array = map_extent(ext.file.backing_path, ext.logical_off,
+                                   ext.length)
+            ext.swap_path = None
+        else:
+            data = np.fromfile(ext.swap_path, dtype=np.uint8,
+                               count=ext.length)  # real read
+            try:
+                os.unlink(ext.swap_path)
+            except OSError:
+                pass
+            ext.swap_path = None
+            if ext.file.backing_path is not None:
+                # file-mode store: land the faulted bytes in the backing
+                # file (region was reserved at append) so the file stays a
+                # complete cross-process image; future swaps are drops
+                mm = np.memmap(ext.file.backing_path, dtype=np.uint8,
+                               mode="r+", offset=ext.logical_off,
+                               shape=(ext.length,))
+                mm[:] = data
+                mm.flags.writeable = False
+                ext.array = mm
+                ext.file_backed = True
+            else:
+                data.flags.writeable = False
+                ext.array = data
         ext.file.owner.swap_charged -= ext.length
         ext.file.owner.charge(ext.length)  # may recursively reclaim elsewhere
         self.stats.swapin_bytes += ext.length
@@ -431,6 +620,13 @@ class BufferStore:
             os.rmdir(self.swap_dir)
         except OSError:
             pass
+        if self.data_dir is not None:
+            try:
+                for p in os.listdir(self.data_dir):
+                    os.unlink(os.path.join(self.data_dir, p))
+                os.rmdir(self.data_dir)
+            except OSError:
+                pass
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,268 @@
+"""Flight process workers — DAG node ops in separate OS processes.
+
+Each worker is a spawned Python process with its own file-backed
+BufferStore.  The parent executor sends it tiny control frames over a
+Unix-domain socket:
+
+    {"op": "exec", "label", "mode", "fn": <pickled callable>,
+     "inputs": [<SIPC wire frame>, ...]}
+    {"op": "load", "label", "mode", "source", "dict_columns"}
+    {"op": "ping"} / {"op": "shutdown"}
+
+and gets back ``{"ok": True, "msg": <SIPC wire frame>}``.  Inputs and
+outputs are *references only* — the worker maps the parent's store files,
+runs the op inside a normal Sandbox (same share wrapper, same SIPC
+writer, so resharing and dictionary sharing work unchanged), writes its
+output into its own store files, and hands the parent back paths.  After
+the reply the worker forgets its handles; the files stay on disk and the
+parent adopts them with ownership (it unlinks them at GC time).
+
+Because the compute happens in another process, a Python-heavy op no
+longer serializes on the parent's GIL or on the RM critical section —
+this is what finally lets compute-bound pipeline stages scale with
+``workers`` (the paper's separate-FaaS-processes deployment, which the
+thread executor only approximated for GIL-releasing decompression).
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import pickle
+import queue
+import shutil
+import socket
+import tempfile
+import threading
+import traceback
+import uuid
+from typing import Any, Dict, List, Optional
+
+from .wire import decode_message, encode_message, recv_frame, send_frame
+
+_SPAWN = mp.get_context("spawn")      # never fork: jax/threads unsafe
+
+
+# --------------------------------------------------------------------------
+# worker side
+# --------------------------------------------------------------------------
+
+def worker_main(sock_path: str, data_dir: str) -> None:
+    """Entry point of one worker process (spawn target)."""
+    # imports deferred so the module object stays spawn-picklable cheaply
+    from ..buffers import BufferStore
+    from ..dag import Sandbox
+    from ..deanon import KernelZero
+    from .. import zarquet
+
+    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    sock.connect(sock_path)
+    store = BufferStore(backing="file", data_dir=data_dir)
+    kz = KernelZero(store)
+    try:
+        while True:
+            try:
+                req: Dict[str, Any] = pickle.loads(recv_frame(sock))
+            except (ConnectionError, EOFError):
+                return
+            op = req.get("op")
+            if op == "shutdown":
+                send_frame(sock, pickle.dumps({"ok": True}))
+                return
+            if op == "ping":
+                send_frame(sock, pickle.dumps({"ok": True, "pid": os.getpid()}))
+                continue
+            try:
+                reply = _handle(req, store, kz, Sandbox, zarquet)
+            except BaseException as e:  # noqa: BLE001 — report, don't die
+                reply = {"ok": False, "error": repr(e),
+                         "traceback": traceback.format_exc()}
+            send_frame(sock, pickle.dumps(reply))
+            _forget_all(store)
+    finally:
+        sock.close()
+        store.close()
+
+
+def _handle(req, store, kz, Sandbox, zarquet) -> Dict[str, Any]:
+    label = req.get("label", "node")
+    sb = Sandbox(store, kz, label, mode=req.get("mode", "zero"))
+    if req["op"] == "exec":
+        fn = pickle.loads(req["fn"])
+        inputs = [decode_message(b, store, charge=False, label=label)
+                  for b in req["inputs"]]
+        msg = sb.run(fn, inputs, label=label)
+        for m in inputs:
+            m.release()
+    elif req["op"] == "load":
+        table = zarquet.read_table(req["source"],
+                                   dict_columns=tuple(req["dict_columns"]),
+                                   on_buffer=sb.register_anon)
+        msg = sb.write_output(table, label=label)
+    else:
+        raise ValueError(f"unknown worker op {req['op']!r}")
+    out = encode_message(msg, store)
+    msg.release()
+    return {"ok": True, "msg": out, "new_bytes": msg.new_bytes,
+            "reshared_bytes": msg.reshared_bytes}
+
+
+def _forget_all(store) -> None:
+    """Drop every file handle without unlinking: the bytes now belong to
+    the parent (which adopted the paths with ownership)."""
+    for fid in list(store.files):
+        store.files[fid].owns_path = False
+        store.delete_file(fid)
+
+
+# --------------------------------------------------------------------------
+# parent side
+# --------------------------------------------------------------------------
+
+class FlightWorkerError(RuntimeError):
+    """A worker process failed or died mid-request."""
+
+
+class WorkerHandle:
+    """One connected worker process; requests are serialized per handle."""
+
+    def __init__(self, proc, sock: socket.socket):
+        self.proc = proc
+        self.sock = sock
+        self.lock = threading.Lock()
+        self.bytes_sent = 0
+        self.bytes_received = 0
+        self.broken = False      # socket desynced / worker dead: retire
+
+    def request(self, obj: Dict[str, Any], timeout: float) -> Dict[str, Any]:
+        with self.lock:
+            self.sock.settimeout(timeout)
+            try:
+                self.bytes_sent += send_frame(self.sock, pickle.dumps(obj))
+                raw = recv_frame(self.sock)
+            except (ConnectionError, socket.timeout, OSError) as e:
+                # a timed-out socket may still deliver THIS op's reply
+                # later; never reuse it or the next op would read a stale
+                # frame as its own result
+                self.broken = True
+                raise FlightWorkerError(
+                    f"worker pid={getattr(self.proc, 'pid', '?')} failed "
+                    f"during {obj.get('op')!r}: {e!r}") from e
+            self.bytes_received += len(raw) + 8
+        reply = pickle.loads(raw)
+        if not reply.get("ok"):
+            raise FlightWorkerError(
+                f"worker op {obj.get('op')!r} raised {reply.get('error')}\n"
+                f"{reply.get('traceback', '')}")
+        return reply
+
+    def retire(self) -> None:
+        self.broken = True
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+        if self.proc.is_alive():
+            self.proc.terminate()
+
+
+class FlightWorkerPool:
+    """N spawned worker processes behind a Unix-domain socket listener."""
+
+    def __init__(self, workers: int, sipc_mode: str = "zero",
+                 data_root: Optional[str] = None,
+                 connect_timeout: float = 60.0):
+        self.workers = workers
+        self.sipc_mode = sipc_mode
+        self.data_root = data_root or tempfile.mkdtemp(
+            prefix="zerrow-flight-")
+        os.makedirs(self.data_root, exist_ok=True)
+        self._sock_path = os.path.join(
+            self.data_root, f"uds-{uuid.uuid4().hex[:8]}")
+        self._handles: List[WorkerHandle] = []
+        self._idle: "queue.Queue[WorkerHandle]" = queue.Queue()
+        self._closed = False
+
+        listener = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        listener.bind(self._sock_path)
+        listener.listen(workers)
+        listener.settimeout(connect_timeout)
+        procs = []
+        try:
+            for i in range(workers):
+                p = _SPAWN.Process(
+                    target=worker_main,
+                    args=(self._sock_path,
+                          os.path.join(self.data_root, f"w{i}")),
+                    name=f"zerrow-flight-{i}", daemon=True)
+                p.start()
+                procs.append(p)
+            for p in procs:
+                conn, _ = listener.accept()
+                h = WorkerHandle(p, conn)
+                self._handles.append(h)
+                self._idle.put(h)
+        except socket.timeout:
+            for p in procs:
+                p.terminate()
+            raise FlightWorkerError(
+                f"worker pool: only {len(self._handles)}/{workers} workers "
+                "connected before timeout")
+        finally:
+            listener.close()
+
+    # -- request routing ---------------------------------------------------
+    def request(self, obj: Dict[str, Any],
+                timeout: float = 600.0) -> Dict[str, Any]:
+        """Run one request on any idle worker (blocks for a free one).
+
+        A handle that fails (dead worker, timeout) is retired, never
+        requeued — its socket can no longer be trusted to be frame-
+        aligned.  The error propagates to the executor's normal error
+        path; when every worker has died the pool raises immediately."""
+        obj.setdefault("mode", self.sipc_mode)
+        while True:
+            try:
+                h = self._idle.get(timeout=1.0)
+            except queue.Empty:
+                if all(x.broken for x in self._handles):
+                    raise FlightWorkerError("no live workers in the pool")
+                continue
+            if h.broken:
+                continue
+            try:
+                reply = h.request(obj, timeout)
+            except FlightWorkerError:
+                if h.broken:
+                    h.retire()       # transport failure: drop the worker
+                else:
+                    self._idle.put(h)  # op raised in-worker: worker is fine
+                raise
+            self._idle.put(h)
+            return reply
+
+    # -- stats / lifecycle --------------------------------------------------
+    @property
+    def socket_bytes(self) -> int:
+        """Total bytes that crossed the control sockets, both directions —
+        the quantity the zero-copy wire claim is asserted on."""
+        return sum(h.bytes_sent + h.bytes_received for h in self._handles)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for h in self._handles:
+            try:
+                h.request({"op": "shutdown"}, timeout=5.0)
+            except FlightWorkerError:
+                pass
+            try:
+                h.sock.close()
+            except OSError:
+                pass
+        for h in self._handles:
+            h.proc.join(timeout=5.0)
+            if h.proc.is_alive():
+                h.proc.terminate()
+        shutil.rmtree(self.data_root, ignore_errors=True)

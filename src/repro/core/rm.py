@@ -35,11 +35,14 @@ from .decache import DeCache
 from .sipc import SipcMessage
 from .sched.admission import AdmissionController
 from .sched.eviction import (EvictionPolicy, POLICIES, get_eviction)
-from .sched.executor import WorkerPoolExecutor
+from .sched.executor import ProcessWorkerExecutor, WorkerPoolExecutor
 from .sched.policy import SCHEDULES, get_schedule
 
 # historical name: benchmarks/tests/examples construct `Executor(store, rm)`
 Executor = WorkerPoolExecutor
+
+#: executor selection by name (``RMConfig.workers_mode``)
+WORKERS_MODES = ("thread", "process")
 
 
 @dataclass
@@ -55,6 +58,20 @@ class RMConfig:
     #                         # 'depth' (paper: closest-to-finishing first),
     #                         # 'breadth', 'fair', 'deadline'
     workers: int = 1          # executor worker-pool size (1 = sequential)
+    workers_mode: str = "thread"   # 'thread' (in-process pool) or 'process'
+    #                              # (Flight: ops in spawned OS processes;
+    #                              # needs BufferStore(backing='file'))
+
+
+def make_executor(store: BufferStore, rm: "ResourceManager",
+                  workers: Optional[int] = None,
+                  mode: Optional[str] = None) -> WorkerPoolExecutor:
+    """Build the executor selected by ``mode`` (or ``rm.cfg.workers_mode``)."""
+    mode = mode or getattr(rm.cfg, "workers_mode", "thread")
+    assert mode in WORKERS_MODES, f"unknown workers_mode {mode!r}"
+    if mode == "process":
+        return ProcessWorkerExecutor(store, rm, workers)
+    return WorkerPoolExecutor(store, rm, workers)
 
 
 class ResourceManager:

@@ -11,7 +11,7 @@ from .admission import AdmissionController
 from .eviction import (AdaptiveEviction, EvictionPolicy, KswapEviction,
                        LimitDropEviction, NoEviction, POLICIES,
                        RollbackEviction, get_eviction, register_eviction)
-from .executor import WorkerPoolExecutor
+from .executor import ProcessWorkerExecutor, WorkerPoolExecutor
 from .policy import (BreadthFirst, DeadlineAware, DepthFirst, FairShare,
                      SCHEDULES, SchedulePolicy, get_schedule,
                      register_schedule)
@@ -21,7 +21,7 @@ __all__ = [
     "AdaptiveEviction", "EvictionPolicy", "KswapEviction",
     "LimitDropEviction", "NoEviction", "POLICIES", "RollbackEviction",
     "get_eviction", "register_eviction",
-    "WorkerPoolExecutor",
+    "ProcessWorkerExecutor", "WorkerPoolExecutor",
     "BreadthFirst", "DeadlineAware", "DepthFirst", "FairShare",
     "SCHEDULES", "SchedulePolicy", "get_schedule", "register_schedule",
 ]

@@ -35,6 +35,7 @@ scheduling semantics of the seed's sequential loop (same node order, same
 
 from __future__ import annotations
 
+import pickle
 import threading
 import time
 from typing import Dict, List, Optional, Set, Tuple
@@ -244,18 +245,29 @@ class WorkerPoolExecutor:
             self._run_compute(st)
         st.exec_latency = time.perf_counter() - t0
 
+    def _make_sandbox(self, st: NodeState) -> Sandbox:
+        return Sandbox(self.store, self.rm.kz,
+                       f"{st.dag.name}.{st.name}#{st.runs}",
+                       mode=self.rm.cfg.sipc_mode)
+
     def _run_compute(self, st: NodeState) -> None:
-        # user code reads inputs (may fault swapped extents) and writes
-        # output through SIPC — all store-mutating, so inside the critical
-        # section; loader decompression is where the parallelism is
         with self._lock:
-            sb = Sandbox(self.store, self.rm.kz,
-                         f"{st.dag.name}.{st.name}#{st.runs}",
-                         mode=self.rm.cfg.sipc_mode)
+            sb = self._make_sandbox(st)
             st.sandbox = sb
             inputs = [st.dag.nodes[d].output for d in st.spec.deps]
-            st.output = sb.run(st.spec.fn, inputs, label=st.name)
-            st.output_bytes = st.output.new_bytes
+        msg = self._compute_output(st, sb, inputs)
+        with self._lock:
+            st.output = msg
+            st.output_bytes = msg.new_bytes
+
+    def _compute_output(self, st: NodeState, sb: Sandbox, inputs):
+        """Run the node's user function; override point for process-mode
+        execution.  Thread mode: user code reads inputs (may fault swapped
+        extents) and writes output through SIPC — all store-mutating, so
+        inside the critical section; loader decompression is where the
+        thread-pool parallelism is."""
+        with self._lock:
+            return sb.run(st.spec.fn, inputs, label=st.name)
 
     def _run_loader(self, st: NodeState) -> None:
         key = st.decache_key()
@@ -272,27 +284,13 @@ class WorkerPoolExecutor:
                 return
             self._loading.add(key)
             self.load_runs += 1
-            sb = Sandbox(self.store, self.rm.kz,
-                         f"{st.dag.name}.{st.name}#{st.runs}",
-                         mode=self.rm.cfg.sipc_mode)
+            sb = self._make_sandbox(st)
             st.sandbox = sb
         try:
-            # generic loader 'user code' (paper §4.2.4): deserialize
-            # zarquet OUTSIDE the lock — decompression releases the GIL and
-            # overlaps across workers; each fresh buffer re-enters the lock
-            # to register as sandbox anonymous memory
-            lock = self._lock
-
-            def on_buffer(a):
-                with lock:
-                    sb.register_anon(a)
-
-            table = zarquet.read_table(
-                st.spec.source, dict_columns=st.spec.dict_columns,
-                on_buffer=on_buffer)
+            msg = self._load_output(st, sb)
             with self._cond:
-                st.output = sb.write_output(table, label=st.name)
-                st.output_bytes = st.output.new_bytes
+                st.output = msg
+                st.output_bytes = msg.new_bytes
                 if self.rm.decache.enabled:
                     e = self.rm.decache.insert(key, st.output,
                                                time.perf_counter())
@@ -302,6 +300,26 @@ class WorkerPoolExecutor:
             with self._cond:
                 self._loading.discard(key)
                 self._cond.notify_all()
+
+    def _load_output(self, st: NodeState, sb: Sandbox):
+        """Deserialize the node's zarquet source and SIPC-write the table;
+        override point for process-mode execution.
+
+        Generic loader 'user code' (paper §4.2.4): deserialize zarquet
+        OUTSIDE the lock — decompression releases the GIL and overlaps
+        across workers; each fresh buffer re-enters the lock to register
+        as sandbox anonymous memory."""
+        lock = self._lock
+
+        def on_buffer(a):
+            with lock:
+                sb.register_anon(a)
+
+        table = zarquet.read_table(
+            st.spec.source, dict_columns=st.spec.dict_columns,
+            on_buffer=on_buffer)
+        with self._lock:
+            return sb.write_output(table, label=st.name)
 
     # -- completion bookkeeping (RM critical section) ----------------------
     def _complete_locked(self, st: NodeState) -> None:
@@ -332,3 +350,99 @@ class WorkerPoolExecutor:
                 st.sandbox.destroy()
         for e in attachments:
             self.rm.decache.detach(e)
+
+    def close(self) -> None:
+        """Release executor resources (no-op for the thread pool)."""
+
+
+class ProcessWorkerExecutor(WorkerPoolExecutor):
+    """Executor whose node ops run in spawned OS worker processes.
+
+    Same scheduling, admission, eviction and DeCache behaviour as the
+    thread executor — the N scheduler threads still claim nodes under the
+    RM critical section — but ``_compute_output`` / ``_load_output``
+    dispatch to a :class:`~..flight.worker.FlightWorkerPool` instead of
+    running user code inline.  Inputs go out and outputs come back as
+    SIPC wire references (never data), the worker maps the parent's
+    store files, and the parent adopts the worker's output files with
+    ownership, so the RM keeps full accounting, admission and eviction
+    authority over every byte (paper §3.1: the RM owns memory; nodes are
+    untrusted tenants).
+
+    Requires a file-backed store (``BufferStore(backing="file")``) —
+    references must name real files other processes can map.  Node
+    functions must be picklable (module-level functions or
+    ``functools.partial`` over them); unpicklable ops fall back to
+    inline execution (counted in ``fallback_inline``).
+    """
+
+    def __init__(self, store, rm, workers: Optional[int] = None,
+                 data_root: Optional[str] = None):
+        super().__init__(store, rm, workers, force_threads=True)
+        if store.backing != "file":
+            raise ValueError(
+                "ProcessWorkerExecutor needs BufferStore(backing='file'): "
+                "worker processes can only map file-backed extents")
+        self._pool = None
+        self._data_root = data_root
+        self.fallback_inline = 0   # unpicklable fns executed in-parent
+
+    # -- pool lifecycle -----------------------------------------------------
+    def _ensure_pool(self):
+        if self._pool is None:
+            from ..flight.worker import FlightWorkerPool
+            self._pool = FlightWorkerPool(self.workers,
+                                          sipc_mode=self.rm.cfg.sipc_mode,
+                                          data_root=self._data_root)
+        return self._pool
+
+    @property
+    def socket_bytes(self) -> int:
+        return self._pool.socket_bytes if self._pool is not None else 0
+
+    def run(self, dags: List[DAG], deadline_s: float = 3600.0) -> float:
+        self._ensure_pool()
+        return super().run(dags, deadline_s)
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.close()
+            self._pool = None
+
+    # -- remote execution ---------------------------------------------------
+    def _adopt_reply(self, reply: dict, st: NodeState, sb: Sandbox):
+        """Decode a worker reply under the lock: newly created files are
+        adopted with ownership and charged to the node's cgroup (exactly
+        where thread-mode output bytes land), so admission, limitdrop and
+        rollback treat process outputs like any other node output."""
+        from ..flight.wire import decode_message
+        msg = decode_message(reply["msg"], self.store, owner=sb.cgroup,
+                             adopt_owned=True, label=st.name)
+        sb.owned_files.extend(
+            fid for fid in msg.files_referenced()
+            if fid in self.store.files and
+            self.store.files[fid].owner is sb.cgroup)
+        return msg
+
+    def _compute_output(self, st: NodeState, sb: Sandbox, inputs):
+        try:
+            fn_bytes = pickle.dumps(st.spec.fn)
+        except (pickle.PicklingError, TypeError, AttributeError):
+            # closures/bound methods can't cross the process boundary;
+            # run them in-parent (correct, just not parallel)
+            self.fallback_inline += 1
+            return super()._compute_output(st, sb, inputs)
+        from ..flight.wire import encode_message
+        with self._lock:
+            enc = [encode_message(m, self.store) for m in inputs]
+        reply = self._pool.request(
+            {"op": "exec", "label": st.name, "fn": fn_bytes, "inputs": enc})
+        with self._lock:
+            return self._adopt_reply(reply, st, sb)
+
+    def _load_output(self, st: NodeState, sb: Sandbox):
+        reply = self._pool.request(
+            {"op": "load", "label": st.name, "source": st.spec.source,
+             "dict_columns": tuple(st.spec.dict_columns)})
+        with self._lock:
+            return self._adopt_reply(reply, st, sb)

@@ -12,14 +12,16 @@ intermediate memory is governed by the RM's admission + eviction.
 
 from __future__ import annotations
 
+import functools
 import os
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
-from ..core import (BufferStore, DAG, Executor, NodeSpec, RMConfig,
-                    ResourceManager, SipcReader, Table, Column)
+from ..core import (BufferStore, DAG, NodeSpec, RMConfig,
+                    ResourceManager, SipcReader, Table, Column,
+                    make_executor)
 from ..core import ops, zarquet
 
 PAD = 0
@@ -30,6 +32,17 @@ def byte_tokenize(text_col: Column) -> np.ndarray:
     stays PAD)."""
     lo, hi = int(text_col.offsets[0]), int(text_col.offsets[-1])
     return text_col.values[lo:hi].astype(np.int32) + 1
+
+
+def pack_fn(tables: List[Table], batch: int, seq_len: int) -> Table:
+    """Tokenize + pack one shard to a flat id column, truncated to whole
+    (batch, seq_len+1) spans.  Module-level (not a bound method) so a
+    ``functools.partial`` of it pickles across the Flight process
+    boundary in ``workers_mode='process'``."""
+    ids = byte_tokenize(tables[0].combine().batches[0].column("text"))
+    span = batch * (seq_len + 1)
+    n = (len(ids) // span) * span
+    return Table.from_pydict({"ids": ids[:n]})
 
 
 def make_text_shards(root: str, n_shards: int, rows_per_shard: int,
@@ -59,6 +72,10 @@ class PipelineConfig:
     vocab: int = 257            # bytes + PAD
     workers: int = 1            # sched worker-pool size: >1 overlaps shard
     #                           # decompression across loader nodes
+    workers_mode: str = "thread"   # 'process': loader + pack run in
+    #                              # spawned OS processes over the Flight
+    #                              # data plane (compute scales past the
+    #                              # GIL; store becomes file-backed)
 
 
 class ZerrowDataPipeline:
@@ -69,29 +86,31 @@ class ZerrowDataPipeline:
                  rm: Optional[ResourceManager] = None):
         self.paths = list(shard_paths)
         self.cfg = cfg
-        self.store = store or BufferStore()
+        self.store = store or BufferStore(
+            backing="file" if cfg.workers_mode == "process" else "ram")
         self.rm = rm or ResourceManager(
             self.store, RMConfig(memory_limit=cfg.memory_limit,
-                                 policy="adaptive"))
-        self.ex = Executor(self.store, self.rm, workers=cfg.workers)
+                                 policy="adaptive",
+                                 workers=cfg.workers,
+                                 workers_mode=cfg.workers_mode))
+        self.ex = make_executor(self.store, self.rm, workers=cfg.workers)
         self._owned_msgs: List = []
 
     # -- one shard -> packed ids message -----------------------------------
-    def _pack_fn(self, tables: List[Table]) -> Table:
-        ids = byte_tokenize(tables[0].combine().batches[0].column("text"))
-        span = self.cfg.batch * (self.cfg.seq_len + 1)
-        n = (len(ids) // span) * span
-        return Table.from_pydict({"ids": ids[:n]})
+    def _pack_fn(self) -> "functools.partial[Table]":
+        return functools.partial(pack_fn, batch=self.cfg.batch,
+                                 seq_len=self.cfg.seq_len)
 
     def _run_shards(self, paths: List[str]) -> List:
         """One DAG per shard, submitted together: with ``workers > 1`` the
         loader decompressions overlap in the executor's worker pool."""
         dags = []
+        fn = self._pack_fn()
         for path in paths:
             est = max(os.path.getsize(path) * 8, 1 << 20)
             dags.append(DAG([
                 NodeSpec("load", source=path, est_mem=est),
-                NodeSpec("pack", fn=self._pack_fn, deps=["load"],
+                NodeSpec("pack", fn=fn, deps=["load"],
                          est_mem=est // 2, keep_output=True),
             ], name=f"pipe-{os.path.basename(path)}"))
         self.ex.run(dags)
@@ -136,4 +155,5 @@ class ZerrowDataPipeline:
                 **self.store.stats.snapshot()}
 
     def close(self) -> None:
+        self.ex.close()
         self.store.close()

@@ -27,6 +27,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+from .. import compat
 from ..configs import ARCHS, SHAPES_BY_NAME, get_arch, shape_applicable
 from ..models.api import ModelAPI
 from ..sharding.partition import (DEFAULT_RULES, ShardingRules,
@@ -122,7 +123,7 @@ def lower_cell(arch_name: str, shape_name: str, mesh_name: str,
     t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis(compiled)
     print(f"[{arch_name} × {shape_name} × {mesh_name}] "
           f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
     print(" ", mem)

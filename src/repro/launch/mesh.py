@@ -7,15 +7,13 @@ Importing this module never touches jax device state; call the functions.
 
 from __future__ import annotations
 
-import jax
+from ..compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for(devices: int, *, model_parallel: int = 0):
@@ -23,9 +21,7 @@ def make_mesh_for(devices: int, *, model_parallel: int = 0):
     mp = model_parallel or max(1, min(4, devices))
     while devices % mp:
         mp -= 1
-    return jax.make_mesh(
-        (devices // mp, mp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((devices // mp, mp), ("data", "model"))
 
 
 MESH_NAMES = ("single", "multi")

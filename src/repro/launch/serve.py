@@ -5,7 +5,11 @@
 
 With ``--prompt-shards N`` the requests come from zarquet prompt shards
 through the core/sched worker-pool executor (``--workers`` overlaps shard
-decompression) instead of being drawn randomly.
+decompression) instead of being drawn randomly.  ``--workers-mode
+process`` runs the shard loads in spawned OS processes over the Flight
+data plane (file-backed store + SIPC wire references): compute-bound
+stages scale past the GIL, and only tiny reference frames cross the
+worker sockets.
 """
 
 from __future__ import annotations
@@ -41,6 +45,10 @@ def main():
     ap.add_argument("--prompts-per-shard", type=int, default=32)
     ap.add_argument("--workers", type=int, default=1,
                     help="prompt-source worker-pool size")
+    ap.add_argument("--workers-mode", default="thread",
+                    choices=("thread", "process"),
+                    help="run prompt-shard DAG nodes in threads or in "
+                         "spawned Flight worker processes")
     a = ap.parse_args()
 
     arch = get_arch(a.arch)
@@ -59,6 +67,7 @@ def main():
                                    a.prompts_per_shard)
         source = ZerrowPromptSource(paths, batch=a.batch,
                                     max_new=a.max_new, workers=a.workers,
+                                    workers_mode=a.workers_mode,
                                     max_prompt_len=a.max_seq // 2)
         batches = source.batches()
     else:

@@ -32,7 +32,7 @@ def train_loop(arch_name: str, *, steps: int = 100, batch: int = 8,
                ckpt_dir: str = None, ckpt_every: int = 50,
                data_dir: str = None, lr: float = 1e-3,
                log_every: int = 10, resume: bool = False,
-               data_workers: int = 1):
+               data_workers: int = 1, workers_mode: str = "thread"):
     arch = get_arch(arch_name)
     if smoke:
         arch = smoke_variant(arch)
@@ -46,7 +46,8 @@ def train_loop(arch_name: str, *, steps: int = 100, batch: int = 8,
     shards = sorted(os.path.join(data_dir, f)
                     for f in os.listdir(data_dir) if f.endswith(".zq"))
     pipe = ZerrowDataPipeline(shards, PipelineConfig(
-        batch=batch, seq_len=seq_len, workers=data_workers))
+        batch=batch, seq_len=seq_len, workers=data_workers,
+        workers_mode=workers_mode))
 
     state = init_state(api, jax.random.key(0))
     store = None
@@ -103,10 +104,16 @@ def main():
     ap.add_argument("--data-workers", type=int, default=1,
                     help="data-pipeline worker-pool size (overlaps shard "
                          "decompression across loader nodes)")
+    ap.add_argument("--workers-mode", default="thread",
+                    choices=("thread", "process"),
+                    help="run pipeline DAG nodes in threads or in spawned "
+                         "Flight worker processes (tokenize/pack scale "
+                         "past the GIL)")
     a = ap.parse_args()
     train_loop(a.arch, steps=a.steps, batch=a.batch, seq_len=a.seq_len,
                smoke=a.smoke, ckpt_dir=a.ckpt_dir, resume=a.resume,
-               lr=a.lr, data_workers=a.data_workers)
+               lr=a.lr, data_workers=a.data_workers,
+               workers_mode=a.workers_mode)
 
 
 if __name__ == "__main__":

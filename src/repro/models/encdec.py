@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import optimization_barrier
 from ..configs.base import ArchConfig
 from ..sharding.partition import constrain
 from .attention import attn_apply, attn_axes, attn_init
@@ -102,7 +103,7 @@ class EncDecLM:
         x = constrain(x, ("batch", "seq", None))
 
         def body(x, bp):
-            bp = jax.lax.optimization_barrier(bp)  # keep gathers in-loop
+            bp = optimization_barrier(bp)  # keep gathers in-loop
             h = rms_norm(x, bp["ln1"], cfg.norm_eps)
             o, _ = attn_apply(bp["attn"], h, cfg=cfg, mode="train",
                               causal=False)
@@ -143,7 +144,7 @@ class EncDecLM:
         def body(carry, scanned):
             x = carry
             bp, cr, cache = scanned
-            bp = jax.lax.optimization_barrier(bp)  # keep gathers in-loop
+            bp = optimization_barrier(bp)  # keep gathers in-loop
             h = rms_norm(x, bp["ln1"], cfg.norm_eps)
             nc = None
             o, nc = attn_apply(bp["self"], h, cfg=cfg, mode=mode,

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import optimization_barrier
 from ..configs.base import ArchConfig
 from ..sharding.partition import constrain
 from .attention import attn_apply, attn_axes, attn_init
@@ -260,9 +261,9 @@ class DecoderLM:
             # materializes every layer's full weights / an f32 copy of the
             # entire stacked KV cache at once
             if gc is not None:
-                gp, gc = jax.lax.optimization_barrier((gp, gc))
+                gp, gc = optimization_barrier((gp, gc))
             else:
-                gp = jax.lax.optimization_barrier(gp)
+                gp = optimization_barrier(gp)
             new_gc = {} if gc is not None else None
             for i, kind in enumerate(self.kinds):
                 c_i = gc.get(f"b{i}") if gc is not None else None

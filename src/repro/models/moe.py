@@ -21,6 +21,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import shard_map
 from ..sharding.partition import constrain
 from .layers import dense_init, mlp_axes, mlp_init
 
@@ -109,7 +110,7 @@ def _token_path(p, cfg, xt, slot, st_, sw, keep, E, C, d, Tl, dtype):
         return out[None].astype(dtype)
 
     bspec = P(baxes if len(baxes) > 1 else baxes[0])
-    return jax.shard_map(
+    return shard_map(
         block, mesh=mesh,
         in_specs=(P(bspec[0], None, None), P(bspec[0], None),
                   P(bspec[0], None), P(bspec[0], None), P(bspec[0], None),

@@ -23,9 +23,15 @@ import numpy as np
 
 from ..configs.base import ArchConfig, ShapeConfig
 from ..core import (BufferStore, DAG, NodeSpec, RMConfig, ResourceManager,
-                    SipcReader, Table, WorkerPoolExecutor)
+                    SipcReader, Table, make_executor)
 from ..core import zarquet
 from ..models.api import ModelAPI
+
+
+def passthrough_fn(tables: List[Table]) -> Table:
+    """Identity node: every output buffer is reshared (zero-copy).
+    Module-level so it pickles into Flight worker processes."""
+    return tables[0]
 
 
 @dataclasses.dataclass
@@ -57,10 +63,14 @@ class ZerrowPromptSource:
     """Streams ``Request`` batches out of zarquet prompt shards via the
     sched executor.  All shard DAGs are submitted in one ``run`` so loader
     decompression overlaps across the worker pool; prompts are
-    byte-tokenized (ids 1..256, 0 stays PAD) so any vocab ≥ 257 works."""
+    byte-tokenized (ids 1..256, 0 stays PAD) so any vocab ≥ 257 works.
+    With ``workers_mode='process'`` the shard loads run in spawned OS
+    processes over the Flight data plane (file-backed store, SIPC wire
+    references) and scale past the GIL."""
 
     def __init__(self, shard_paths: List[str], *, batch: int,
                  max_new: int = 16, workers: int = 1,
+                 workers_mode: str = "thread",
                  max_prompt_len: Optional[int] = None,
                  memory_limit: Optional[int] = None,
                  store: Optional[BufferStore] = None,
@@ -69,13 +79,13 @@ class ZerrowPromptSource:
         self.batch = batch
         self.max_new = max_new
         self.max_prompt_len = max_prompt_len
-        self.store = store or BufferStore()
+        self.store = store or BufferStore(
+            backing="file" if workers_mode == "process" else "ram")
         self.rm = rm or ResourceManager(
-            self.store, RMConfig(memory_limit=memory_limit))
-        self.ex = WorkerPoolExecutor(self.store, self.rm, workers=workers)
-
-    def _passthrough(self, tables: List[Table]) -> Table:
-        return tables[0]     # zero-copy: every output buffer is reshared
+            self.store, RMConfig(memory_limit=memory_limit,
+                                 workers=workers,
+                                 workers_mode=workers_mode))
+        self.ex = make_executor(self.store, self.rm, workers=workers)
 
     def batches(self) -> Iterator[List[Request]]:
         dags = []
@@ -83,7 +93,7 @@ class ZerrowPromptSource:
             est = max(os.path.getsize(p) * 8, 1 << 20)
             dags.append(DAG([
                 NodeSpec("load", source=p, est_mem=est),
-                NodeSpec("prompts", fn=self._passthrough, deps=["load"],
+                NodeSpec("prompts", fn=passthrough_fn, deps=["load"],
                          est_mem=est // 4, keep_output=True),
             ], name=f"prompts-{os.path.basename(p)}"))
         self.ex.run(dags)
@@ -108,6 +118,7 @@ class ZerrowPromptSource:
             yield pending
 
     def close(self) -> None:
+        self.ex.close()
         self.store.close()
 
 

@@ -14,6 +14,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import optimization_barrier, shard_map
 from ..runtime.compression import compress_grads_psum, init_residual
 from .optimizer import make_optimizer
 from .schedule import warmup_cosine
@@ -60,7 +61,7 @@ def make_train_step(api, *, peak_lr: float = 3e-4, warmup: int = 100,
             g_acc, m_acc = carry
             # loop-varying view of the params: keeps per-layer weight
             # gathers inside the microbatch loop (no LICM hoisting)
-            p_local = jax.lax.optimization_barrier(params)
+            p_local = optimization_barrier(params)
             g, m = grads_of(p_local, mb)
             g_acc = jax.tree.map(
                 lambda a, b: a + b.astype(jnp.float32), g_acc, g)
@@ -116,7 +117,7 @@ def make_train_step(api, *, peak_lr: float = 3e-4, warmup: int = 100,
         step_fn_inner = step_fn
 
         def step_fn(state, batch):  # noqa: F811
-            f = jax.shard_map(
+            f = shard_map(
                 step_fn_inner, mesh=mesh,
                 in_specs=(P(), P("pod")), out_specs=(P(), P()),
                 check_vma=False, axis_names={"pod"})

@@ -104,8 +104,10 @@ def test_grad_compression_unbiased_over_time():
                               .normal(size=(256,)) * 1e-3, jnp.float32)}
     residual = init_residual(grads)
 
+    from repro.compat import shard_map
+
     def step(g, r):
-        f = jax.shard_map(
+        f = shard_map(
             lambda gg, rr: compress_grads_psum(gg, rr, "pod", n_pods=1),
             mesh=jax.make_mesh((1,), ("pod",)),
             in_specs=(jax.sharding.PartitionSpec(),) * 2,

@@ -60,10 +60,10 @@ def test_int8_cache_axes_match_specs():
 def test_rules_mapping_divisibility():
     """FSDP/serve rule sets yield valid specs for awkward shapes."""
     import os
+    from repro.compat import make_mesh
     from repro.sharding.partition import (DEFAULT_RULES, FSDP_RULES,
                                           SERVE_RULES, logical_to_spec)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     for rules in (DEFAULT_RULES, FSDP_RULES, SERVE_RULES):
         spec = logical_to_spec(("fsdp", "heads", None), mesh, rules,
                                shape=(576, 9, 64))
