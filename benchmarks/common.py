@@ -44,13 +44,15 @@ class Env:
 def make_env(**cfg) -> Env:
     tmpdir = tempfile.mkdtemp(prefix="zerrow-bench-")
     backing = cfg.pop("backing", None)
-    if cfg.get("workers_mode") == "process":
-        backing = backing or "file"        # Flight needs real store files
+    cache_root = cfg.get("cache_root")
+    if cfg.get("workers_mode") == "process" or cache_root:
+        backing = backing or "file"        # Flight/durable need real files
     store = BufferStore(swap_dir=os.path.join(tmpdir, "swap"),
                         system_limit=cfg.pop("system_limit", None),
                         backing=backing or "ram",
                         data_dir=os.path.join(tmpdir, "store")
-                        if backing == "file" else None)
+                        if backing == "file" and not cache_root else None,
+                        root=cache_root)
     if "kswap" in cfg:
         store.kswap_enabled = cfg.pop("kswap")
     workers = cfg.pop("workers", 1)        # executor worker-pool size

@@ -12,7 +12,7 @@ import os
 import sys
 
 #: the CI smoke subset: one bench per subsystem family
-SMOKE_FIGURES = ("fig2", "fig6", "concurrency", "flight")
+SMOKE_FIGURES = ("fig2", "fig6", "concurrency", "flight", "diffcache")
 
 
 def main() -> None:
@@ -22,10 +22,10 @@ def main() -> None:
         args = [a for a in args if a != "--smoke"]
         os.environ.setdefault("ZERROW_BENCH_SCALE", "256")
         os.environ["ZERROW_BENCH_SMOKE"] = "1"
-    from . import (bench_concurrency, bench_flight, fig2_copy_latency,
-                   fig4_copy_avoidance, fig5_decache, fig6_resharing,
-                   fig7_depth, fig8_dict_repeats, fig9_dict_norepeats,
-                   fig10_eviction, roofline_table)
+    from . import (bench_concurrency, bench_diffcache, bench_flight,
+                   fig2_copy_latency, fig4_copy_avoidance, fig5_decache,
+                   fig6_resharing, fig7_depth, fig8_dict_repeats,
+                   fig9_dict_norepeats, fig10_eviction, roofline_table)
     figures = {
         "fig2": fig2_copy_latency.main,       # copy-avoidance latency
         "fig4": fig4_copy_avoidance.main,     # KernelZero vs memory limit
@@ -38,6 +38,7 @@ def main() -> None:
         "roofline": roofline_table.main,      # dry-run roofline summary
         "concurrency": bench_concurrency.main,  # worker-pool loader overlap
         "flight": bench_flight.main,          # process vs thread data plane
+        "diffcache": bench_diffcache.main,    # cross-run differential cache
     }
     selected = args or (list(SMOKE_FIGURES) if smoke else list(figures))
     print("name,us_per_call,derived")

@@ -44,13 +44,16 @@ from .arrow import (ArrowType, Column, Field, RecordBatch, Schema, Table,
                     UINT8, UTF8, dict_of, pack_validity, unpack_validity)
 from .buffers import (PAGE, AnonRegion, BufferStore, Cgroup, OOMError,
                       StoreFile, StoreStats, alloc_aligned)
-from .dag import (DAG, InvalidTransition, NodeSpec, NodeState, Sandbox,
-                  VALID_TRANSITIONS)
+from .dag import (CACHED, DAG, InvalidTransition, NodeSpec, NodeState,
+                  Sandbox, VALID_TRANSITIONS)
 from .deanon import KernelZero
 from .decache import DeCache
+from .fingerprint import (code_fingerprint, file_fingerprint,
+                          fingerprint_dag, node_fingerprint)
 from .flight import (FlightClient, FlightError, FlightServer,
-                     FlightWorkerError, FlightWorkerPool, WireError,
-                     decode_message, encode_message)
+                     FlightWorkerError, FlightWorkerLost, FlightWorkerPool,
+                     WireError, decode_message, encode_message, frame_refs)
+from .manifest import Manifest, ManifestEntry
 from .rm import (Executor, POLICIES, RMConfig, ResourceManager,
                  WORKERS_MODES, make_executor)
 from .sched import (AdmissionController, EvictionPolicy,
@@ -64,8 +67,10 @@ __all__ = [
     "BOOL", "FLOAT32", "FLOAT64", "INT8", "INT16", "INT32", "INT64",
     "UINT8", "UTF8", "dict_of", "pack_validity", "unpack_validity",
     "PAGE", "AnonRegion", "BufferStore", "Cgroup", "OOMError", "StoreFile",
-    "StoreStats", "alloc_aligned", "DAG", "InvalidTransition", "NodeSpec",
-    "NodeState", "Sandbox", "VALID_TRANSITIONS",
+    "StoreStats", "alloc_aligned", "CACHED", "DAG", "InvalidTransition",
+    "NodeSpec", "NodeState", "Sandbox", "VALID_TRANSITIONS",
+    "Manifest", "ManifestEntry", "code_fingerprint", "file_fingerprint",
+    "fingerprint_dag", "node_fingerprint",
     "KernelZero", "DeCache", "Executor", "POLICIES", "RMConfig",
     "ResourceManager", "WORKERS_MODES", "make_executor",
     "AdmissionController", "EvictionPolicy", "SCHEDULES",
@@ -74,5 +79,6 @@ __all__ = [
     "register_eviction", "register_schedule",
     "AddressMap", "BufRef", "SipcMessage", "SipcReader", "SipcWriter",
     "FlightClient", "FlightError", "FlightServer", "FlightWorkerError",
-    "FlightWorkerPool", "WireError", "decode_message", "encode_message",
+    "FlightWorkerLost", "FlightWorkerPool", "WireError", "decode_message",
+    "encode_message", "frame_refs",
 ]

@@ -332,8 +332,11 @@ class BufferStore:
 
     def __init__(self, swap_dir: Optional[str] = None,
                  system_limit: Optional[int] = None,
-                 backing: str = "ram", data_dir: Optional[str] = None):
+                 backing: str = "ram", data_dir: Optional[str] = None,
+                 root: Optional[str] = None):
         assert backing in ("ram", "file"), backing
+        if root is not None:
+            backing = "file"      # durable mode implies real backing files
         self.files: Dict[int, StoreFile] = {}
         self._next_id = 1
         self.stats = StoreStats()
@@ -342,12 +345,22 @@ class BufferStore:
         os.makedirs(self.swap_dir, exist_ok=True)
         self.backing = backing
         self.data_dir: Optional[str] = None
+        self.root: Optional[str] = None
+        self.manifest = None                   # set by attach_manifest
         self.path_index: Dict[str, int] = {}   # abs backing path -> file_id
         if backing == "file":
+            if root is not None and data_dir is None:
+                # live (unpublished) files go in a per-instance dir under
+                # the root; publish hard-links them into <root>/objects
+                data_dir = os.path.join(
+                    os.path.abspath(root),
+                    f"live-{os.getpid()}-{uuid.uuid4().hex[:8]}")
             self.data_dir = os.path.abspath(data_dir or os.path.join(
                 os.environ.get("TMPDIR", "/tmp"),
                 f"zerrow-store-{uuid.uuid4().hex[:8]}"))
             os.makedirs(self.data_dir, exist_ok=True)
+        if root is not None:
+            self.attach_manifest(root)
         self.system = Cgroup("system", self, limit=None)
         self.system_limit = system_limit
         self.global_charged = 0
@@ -356,6 +369,38 @@ class BufferStore:
         self.kswap_enabled = True
         self.anon_regions: List["AnonRegion"] = []
         self.on_oom: Optional[Callable[[int], bool]] = None  # returns True if it freed memory
+
+    # -- durability (persistent content-addressed cache) -------------------
+    def attach_manifest(self, root: str) -> None:
+        """Turn this (file-backed) store durable: content-addressed
+        objects + fsync'd publish journal under ``root``."""
+        if self.backing != "file":
+            raise ValueError(
+                "a durable store needs real backing files: construct with "
+                "BufferStore(backing='file', root=...)")
+        from .manifest import Manifest       # deferred: avoids import cycle
+        self.root = os.path.abspath(root)
+        os.makedirs(self.root, exist_ok=True)
+        self.manifest = Manifest(self.root)
+
+    @classmethod
+    def reopen(cls, root: str, **kw) -> "BufferStore":
+        """Remap a durable store root left by earlier runs.
+
+        Zero bytes are copied: the manifest journal is replayed (torn
+        tails discarded, entries with missing objects dropped) and each
+        surviving output is lazily re-mmap'd through ``adopt_file`` the
+        first time a fingerprint hit decodes it."""
+        return cls(backing="file", root=root, **kw)
+
+    def publish(self, fingerprint: str, msg, label: str = "",
+                meta: Optional[dict] = None):
+        """Durably publish a SipcMessage under a node fingerprint."""
+        if self.manifest is None:
+            raise ValueError("publish requires a durable store "
+                             "(BufferStore(root=...))")
+        return self.manifest.publish(self, fingerprint, msg, label=label,
+                                     meta=meta)
 
     @property
     def copied_bytes(self) -> int:
@@ -614,6 +659,10 @@ class BufferStore:
     def close(self) -> None:
         for fid in list(self.files):
             self.delete_file(fid)
+        if self.manifest is not None:
+            # published objects + journal outlive the store: that is the
+            # point of the durable mode.  Only the live dir is removed.
+            self.manifest.close()
         try:
             for p in os.listdir(self.swap_dir):
                 os.unlink(os.path.join(self.swap_dir, p))

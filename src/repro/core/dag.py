@@ -46,18 +46,26 @@ class NodeSpec:
 # node lifecycle — an explicit state machine so the scheduler's claims are
 # verifiable under concurrency (all transitions happen inside the
 # executor's RM critical section; see core/sched/executor.py)
-WAITING, READY, RUNNING, DONE, EVICTED = \
-    "waiting", "ready", "running", "done", "evicted"
+WAITING, READY, RUNNING, DONE, EVICTED, CACHED = \
+    "waiting", "ready", "running", "done", "evicted", "cached"
+
+#: node states that count as complete (outputs available / not needed)
+COMPLETE = (DONE, CACHED)
 
 #: legal lifecycle transitions.  WAITING/EVICTED -> RUNNING is the
 #: scheduler's *claim* (exclusive: only one worker can perform it because
 #: it happens under the executor lock); DONE -> EVICTED is a rollback.
+#: WAITING/EVICTED -> CACHED is a cross-run differential-cache hit: the
+#: output is adopted from the persistent manifest instead of executing;
+#: CACHED -> EVICTED is a rollback of the adopted output (the durable
+#: entry stays on disk, so the node can be re-adopted or re-executed).
 VALID_TRANSITIONS = {
-    WAITING: (READY, RUNNING),
-    READY: (WAITING, RUNNING),
+    WAITING: (READY, RUNNING, CACHED),
+    READY: (WAITING, RUNNING, CACHED),
     RUNNING: (DONE, WAITING),
     DONE: (EVICTED,),
-    EVICTED: (RUNNING,),
+    CACHED: (EVICTED,),
+    EVICTED: (RUNNING, CACHED),
 }
 
 
@@ -76,6 +84,7 @@ class NodeState:
         self.output_bytes = 0
         self.depth = 0
         self.runs = 0                    # re-executions due to rollback
+        self.fingerprint: Optional[str] = None   # cross-run cache identity
 
     @property
     def name(self) -> str:
@@ -86,6 +95,11 @@ class NodeState:
         return self.spec.source is not None
 
     def decache_key(self):
+        # fingerprints are content-addressed (source bytes, not path), so
+        # keying the DeCache on them lets manifest warming serve re-runs;
+        # fall back to the path key when fingerprinting is off/uncacheable
+        if self.fingerprint is not None:
+            return self.fingerprint
         return (self.spec.source, tuple(sorted(self.spec.dict_columns)))
 
     def transition(self, new_status: str) -> None:
@@ -148,13 +162,13 @@ class DAG:
         for st in self.nodes.values():
             if st.status in (WAITING, EVICTED):
                 deps = [self.nodes[d] for d in st.spec.deps]
-                if all(d.status == DONE and d.output is not None
+                if all(d.status in COMPLETE and d.output is not None
                        and not d.output.released for d in deps):
                     out.append(st)
         return out
 
     def all_done(self) -> bool:
-        return all(st.status == DONE for st in self.nodes.values())
+        return all(st.status in COMPLETE for st in self.nodes.values())
 
 
 class Sandbox:

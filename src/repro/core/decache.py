@@ -35,20 +35,47 @@ class DeCacheEntry:
 
 
 class DeCache:
-    def __init__(self, store: BufferStore, enabled: bool = True):
+    def __init__(self, store: BufferStore, enabled: bool = True,
+                 manifest=None):
         self.store = store
         self.enabled = enabled
+        self.manifest = manifest       # persistent cross-run cache (may be
+        #                              # None): misses on fingerprint keys
+        #                              # warm from it instead of reloading
         self.entries: Dict[Key, DeCacheEntry] = {}
         self.loads = 0
         self.hits = 0
+        self.warmed = 0                # entries materialized from manifest
+        self._cgroup = None            # owner of warmed adoptions
 
     # -- lookup/attach --------------------------------------------------------
     def lookup(self, key: Key) -> Optional[DeCacheEntry]:
         if not self.enabled:
             return None
         e = self.entries.get(key)
+        if e is None:
+            e = self._warm(key)
         if e is not None:
             e.last_use = time.monotonic()
+        return e
+
+    def _warm(self, key: Key) -> Optional[DeCacheEntry]:
+        """Materialize a fingerprint key from the persistent manifest: the
+        published output is adopted (mmap'd, zero bytes copied) and pinned
+        like any loader output — deserialization survives the process."""
+        if self.manifest is None or not isinstance(key, str):
+            return None
+        if key not in self.manifest:
+            return None
+        if self._cgroup is None:
+            self._cgroup = self.store.new_cgroup("decache")
+        msg = self.manifest.decode(key, self.store, owner=self._cgroup,
+                                   label="decache")
+        if msg is None:
+            return None
+        self.warmed += 1
+        e = self.insert(key, msg, load_latency=0.0)
+        self.loads -= 1         # a warm adoption is not a deserialization
         return e
 
     def attach(self, e: DeCacheEntry) -> SipcMessage:

@@ -17,13 +17,15 @@ See docs/ARCHITECTURE.md §"Flight data plane".
 
 from .client import FlightClient, FlightError
 from .server import FlightServer
-from .wire import (WireError, decode_message, encode_message, recv_frame,
-                   send_frame)
-from .worker import FlightWorkerError, FlightWorkerPool, worker_main
+from .wire import (WireError, decode_message, encode_message, frame_refs,
+                   recv_frame, send_frame)
+from .worker import (FlightWorkerError, FlightWorkerLost, FlightWorkerPool,
+                     worker_main)
 
 __all__ = [
     "FlightClient", "FlightError", "FlightServer",
-    "WireError", "decode_message", "encode_message",
+    "WireError", "decode_message", "encode_message", "frame_refs",
     "recv_frame", "send_frame",
-    "FlightWorkerError", "FlightWorkerPool", "worker_main",
+    "FlightWorkerError", "FlightWorkerLost", "FlightWorkerPool",
+    "worker_main",
 ]

@@ -92,9 +92,16 @@ class _Cursor:
 # encode
 # --------------------------------------------------------------------------
 
-def encode_message(msg: SipcMessage, store: BufferStore) -> bytes:
+def encode_message(msg: SipcMessage, store: BufferStore,
+                   path_for=None) -> bytes:
     """Serialize ``msg`` to a reference frame.  Requires a file-backed
-    store (references must name real files other processes can map)."""
+    store (references must name real files other processes can map).
+
+    ``path_for(file_id) -> str`` overrides the exported path per file —
+    the manifest publishes frames whose references name the durable
+    content-addressed objects (relative to the manifest root) instead of
+    the live backing files.
+    """
     paths: List[str] = []
     path_idx: Dict[int, int] = {}     # file_id -> index into `paths`
 
@@ -108,7 +115,8 @@ def encode_message(msg: SipcMessage, store: BufferStore) -> bytes:
             # reference, or readers would map a sparse hole
             store.ensure_file_backed(r.file_id)
             i = len(paths)
-            paths.append(store.backing_path(r.file_id))
+            paths.append(path_for(r.file_id) if path_for is not None
+                         else store.backing_path(r.file_id))
             path_idx[r.file_id] = i
         return i
 
@@ -154,14 +162,17 @@ def decode_message(data: bytes, store: BufferStore,
                    owner: Optional[Cgroup] = None,
                    charge: bool = True,
                    adopt_owned: bool = False,
-                   label: str = "wire") -> SipcMessage:
+                   label: str = "wire",
+                   path_base: Optional[str] = None) -> SipcMessage:
     """Reconstruct a SipcMessage, adopting referenced backing files into
     ``store``.  Paths already registered resolve to the existing StoreFile
     (reshared — zero new bytes); fresh paths are mmap'd (adopted).
 
     ``adopt_owned=True`` transfers unlink responsibility for *newly*
     adopted files to this store (parent RM taking ownership of worker
-    output); pre-existing files are untouched.
+    output); pre-existing files are untouched.  ``path_base`` resolves
+    relative references (manifest frames name objects relative to the
+    manifest root so a cache directory can be relocated).
     """
     cur = _Cursor(data)
     magic = cur.data[:4]
@@ -178,6 +189,8 @@ def decode_message(data: bytes, store: BufferStore,
     reshared = 0
     for _ in range(n_paths):
         path = cur.take_bytes("<H").decode()
+        if path_base is not None and not os.path.isabs(path):
+            path = os.path.join(path_base, path)
         pre = store.path_index.get(os.path.abspath(path))
         f = store.adopt_file(path, owner=owner, charge=charge,
                              owns_path=adopt_owned, label=label)
@@ -225,6 +238,45 @@ def decode_message(data: bytes, store: BufferStore,
     store.stats.bytes_reshared += reshared
     msg.pin(store)
     return msg
+
+
+def frame_refs(data: bytes) -> List[Tuple[str, int, int]]:
+    """Parse a frame's buffer references — (path, offset, length) per
+    non-empty buffer — without touching any store.  The manifest uses
+    this to validate that a journaled entry's objects still exist."""
+    cur = _Cursor(data)
+    if cur.data[:4] != MAGIC:
+        raise WireError(f"bad SIPC magic {cur.data[:4]!r}")
+    cur.pos = 4
+    if cur.take("<H") != VERSION:
+        raise WireError("unsupported SIPC version")
+    cur.take_bytes()                              # schema
+    paths = [cur.take_bytes("<H").decode() for _ in range(cur.take("<H"))]
+    out: List[Tuple[str, int, int]] = []
+
+    def take_ref() -> None:
+        idx, off, length, _ = cur.take("<IQQB")
+        if idx != _EMPTY:
+            if idx >= len(paths):
+                raise WireError("path index out of range")
+            out.append((paths[idx], off, length))
+
+    def take_column() -> None:
+        cur.take_bytes("<H")                      # type json
+        _, flags = cur.take("<QB")
+        if flags & _F_VALIDITY:
+            take_ref()
+        if flags & _F_OFFSETS:
+            take_ref()
+        take_ref()
+        if flags & _F_DICT:
+            take_column()
+
+    for _ in range(cur.take("<I")):
+        _, n_cols = cur.take("<QI")
+        for _ in range(n_cols):
+            take_column()
+    return out
 
 
 # --------------------------------------------------------------------------

@@ -57,6 +57,10 @@ def worker_main(sock_path: str, data_dir: str) -> None:
 
     sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
     sock.connect(sock_path)
+    # identify ourselves: accept order is not spawn order, and the parent
+    # must pair each socket with the right Process (retiring a dead
+    # worker must never terminate a healthy one)
+    send_frame(sock, pickle.dumps({"hello": os.getpid()}))
     store = BufferStore(backing="file", data_dir=data_dir)
     kz = KernelZero(store)
     try:
@@ -123,6 +127,12 @@ class FlightWorkerError(RuntimeError):
     """A worker process failed or died mid-request."""
 
 
+class FlightWorkerLost(FlightWorkerError):
+    """Transport failure: the worker died (or its socket desynced)
+    mid-request.  Unlike an in-op exception, the request itself may be
+    perfectly fine — the executor retries it on a surviving worker."""
+
+
 class WorkerHandle:
     """One connected worker process; requests are serialized per handle."""
 
@@ -145,7 +155,7 @@ class WorkerHandle:
                 # later; never reuse it or the next op would read a stale
                 # frame as its own result
                 self.broken = True
-                raise FlightWorkerError(
+                raise FlightWorkerLost(
                     f"worker pid={getattr(self.proc, 'pid', '?')} failed "
                     f"during {obj.get('op')!r}: {e!r}") from e
             self.bytes_received += len(raw) + 8
@@ -197,9 +207,13 @@ class FlightWorkerPool:
                     name=f"zerrow-flight-{i}", daemon=True)
                 p.start()
                 procs.append(p)
-            for p in procs:
+            by_pid = {p.pid: p for p in procs}
+            for _ in procs:
                 conn, _ = listener.accept()
-                h = WorkerHandle(p, conn)
+                conn.settimeout(connect_timeout)
+                hello = pickle.loads(recv_frame(conn))
+                conn.settimeout(None)
+                h = WorkerHandle(by_pid.pop(hello["hello"]), conn)
                 self._handles.append(h)
                 self._idle.put(h)
         except socket.timeout:
@@ -243,6 +257,10 @@ class FlightWorkerPool:
 
     # -- stats / lifecycle --------------------------------------------------
     @property
+    def live_workers(self) -> int:
+        return sum(1 for h in self._handles if not h.broken)
+
+    @property
     def socket_bytes(self) -> int:
         """Total bytes that crossed the control sockets, both directions —
         the quantity the zero-copy wire claim is asserted on."""
@@ -253,10 +271,11 @@ class FlightWorkerPool:
             return
         self._closed = True
         for h in self._handles:
-            try:
-                h.request({"op": "shutdown"}, timeout=5.0)
-            except FlightWorkerError:
-                pass
+            if not h.broken:      # retired handles have dead/closed sockets
+                try:
+                    h.request({"op": "shutdown"}, timeout=5.0)
+                except (FlightWorkerError, OSError):
+                    pass
             try:
                 h.sock.close()
             except OSError:

@@ -61,6 +61,14 @@ class RMConfig:
     workers_mode: str = "thread"   # 'thread' (in-process pool) or 'process'
     #                              # (Flight: ops in spawned OS processes;
     #                              # needs BufferStore(backing='file'))
+    cache_root: Optional[str] = None   # persistent content-addressed cache
+    #                                  # directory: node outputs are
+    #                                  # published under deterministic
+    #                                  # fingerprints and re-runs adopt
+    #                                  # unchanged nodes' outputs (CACHED)
+    #                                  # instead of executing them
+    publish_outputs: bool = True   # durable mode: publish every completed
+    #                              # node output (False: adopt-only reader)
 
 
 def make_executor(store: BufferStore, rm: "ResourceManager",
@@ -84,8 +92,20 @@ class ResourceManager:
         self.store = store
         self.cfg = config
         self.kz = KernelZero(store)
-        self.decache = DeCache(store, enabled=config.decache)
-        self.evictions = {"uncache": 0, "rollback": 0, "limitdrop": 0}
+        self.manifest = getattr(store, "manifest", None)
+        if config.cache_root and self.manifest is None:
+            if store.backing != "file":
+                raise ValueError(
+                    "RMConfig.cache_root needs a file-backed store: "
+                    "construct BufferStore(backing='file', "
+                    "root=cache_root)")
+            store.attach_manifest(config.cache_root)
+            self.manifest = store.manifest
+        self.decache = DeCache(store, enabled=config.decache,
+                               manifest=self.manifest)
+        self.evictions = {"uncache": 0, "rollback": 0, "limitdrop": 0,
+                          "spill": 0}
+        self.cache_stats = {"hits": 0, "published": 0, "adopted_bytes": 0}
         self.completed_nodes: List[NodeState] = []   # eviction candidates
         self.schedule = get_schedule(config.schedule)
         self.admission = AdmissionController(self)
@@ -125,6 +145,47 @@ class ResourceManager:
 
     def limitdrop(self, st: NodeState) -> int:
         return self._limitdrop.evict(st)
+
+    # -- cross-run differential cache (manifest adoption/publication) ------
+    def adopt_cached(self, st: NodeState) -> Optional[SipcMessage]:
+        """Adopt a node's published output from the manifest (zero bytes
+        copied: the objects are mmap'd).  The adopted bytes are charged to
+        a per-node consumer cgroup, exactly where executed-output bytes
+        would land, so admission/eviction govern them.  Returns None on a
+        miss (or when the entry's objects vanished)."""
+        if self.manifest is None or st.fingerprint is None:
+            return None
+        cg = self.store.new_cgroup(f"{st.dag.name}.{st.name}.cached")
+        msg = self.manifest.decode(st.fingerprint, self.store, owner=cg,
+                                   label=st.name)
+        if msg is None:
+            return None
+        st.output = msg
+        st.output_bytes = msg.new_bytes
+        self.cache_stats["hits"] += 1
+        self.cache_stats["adopted_bytes"] += msg.new_bytes
+        if st not in self.completed_nodes:
+            self.completed_nodes.append(st)   # adopted bytes are evictable
+        return msg
+
+    def publish_output(self, st: NodeState) -> None:
+        """Durably publish a completed node's output under its
+        fingerprint (best-effort: a full disk must not fail the run)."""
+        if (self.manifest is None or not self.cfg.publish_outputs
+                or st.fingerprint is None or st.output is None
+                or st.output.released):
+            return
+        try:
+            self.manifest.publish(self.store, st.fingerprint, st.output,
+                                  label=f"{st.dag.name}.{st.name}")
+            self.cache_stats["published"] += 1
+        except OSError:
+            pass
+
+    def is_durable(self, st: NodeState) -> bool:
+        """True when this node's output is recoverable from the manifest,
+        so eviction may spill (drop mappings) instead of discarding."""
+        return self.manifest is not None and st.fingerprint in self.manifest
 
     # -- refcount GC (the share-awareness invariant) -----------------------
     def _resident_of(self, msg: SipcMessage) -> int:

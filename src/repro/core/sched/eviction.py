@@ -22,7 +22,7 @@ from __future__ import annotations
 
 from typing import Dict, FrozenSet, Iterable, List, Optional, Tuple, Type
 
-from ..dag import DONE, EVICTED, NodeState
+from ..dag import COMPLETE, DONE, EVICTED, NodeState
 
 POLICIES: Dict[str, Type["EvictionPolicy"]] = {}
 
@@ -66,13 +66,21 @@ class EvictionPolicy:
                 return freed
             freed += rm.decache.uncache(e)
             rm.evictions["uncache"] += 1
-        # 2) evict outputs of the lowest-priority completed nodes
+        # 2) evict outputs of the lowest-priority completed nodes.  Only
+        # *productive* evictions count toward the storm bound: a victim
+        # that frees nothing (already-spilled durable output, sandbox-
+        # less limitdrop target) must not eat the budget and starve the
+        # reclaimable victims behind it.
         if not self.evicts_outputs:
             return freed
-        for n_evicted, st in enumerate(self.victims(protect, extra_protect)):
+        n_evicted = 0
+        for st in self.victims(protect, extra_protect):
             if freed >= need or n_evicted >= self.MAX_EVICTIONS_PER_ALLOC:
                 break
-            freed += self.evict(st)
+            got = self.evict(st)
+            freed += got
+            if got > 0:
+                n_evicted += 1
         return freed
 
     # -- victim selection --------------------------------------------------
@@ -91,7 +99,7 @@ class EvictionPolicy:
         # un-run children would never be re-executed (data loss) — newly
         # reachable now that consumers submit multi-DAG groups per run
         cands = [st for st in rm.completed_nodes
-                 if st.status == DONE and st.output is not None
+                 if st.status in COMPLETE and st.output is not None
                  and not st.output.released
                  and not st.spec.keep_output
                  and (st.dag.id, st.name) not in protected
@@ -106,7 +114,8 @@ class EvictionPolicy:
         for st in cands:
             d = st.dag
             if d.id not in progress:
-                done = sum(1 for n in d.nodes.values() if n.status == DONE)
+                done = sum(1 for n in d.nodes.values()
+                           if n.status in COMPLETE)
                 progress[d.id] = done / max(len(d.nodes), 1)
         cands.sort(key=lambda st: (progress[st.dag.id], -st.dag.id,
                                    -st.depth))
@@ -116,6 +125,20 @@ class EvictionPolicy:
     def evict(self, st: NodeState) -> int:
         """Apply this policy's mechanism to one victim; return bytes freed."""
         raise NotImplementedError
+
+    def spill(self, st: NodeState) -> int:
+        """Durable outputs (published in / adopted from the manifest) are
+        *spilled*: resident mappings dropped, bytes kept in the content-
+        addressed objects.  The node stays in ``completed_nodes`` — a
+        reader may fault the output back to resident, after which it
+        must be spillable again."""
+        rm = self.rm
+        freed = 0
+        for fid in st.output.files_referenced():
+            freed += rm.store.swap_out_file(fid)
+        if freed > 0:
+            rm.evictions["spill"] += 1
+        return freed
 
 
 @register_eviction
@@ -144,12 +167,20 @@ class KswapEviction(EvictionPolicy):
 class RollbackEviction(EvictionPolicy):
     """RM:rollback — delete a completed node's outputs; re-execute the node
     later if un-run children still need them (cascading up the pipeline if
-    its own inputs were GC'd)."""
+    its own inputs were GC'd).
+
+    Durable outputs (published in — or adopted from — the persistent
+    manifest) are *spilled* instead of discarded: the resident mappings
+    are dropped and the bytes stay in the content-addressed object files,
+    so reclaiming memory never costs a recompute that a disk read can
+    serve (counted separately in ``rm.evictions['spill']``)."""
 
     name = "rollback"
 
     def evict(self, st: NodeState) -> int:
         rm = self.rm
+        if rm.is_durable(st):
+            return self.spill(st)
         freed = rm._resident_of(st.output)
         msg = st.output
         st.output = None
@@ -177,6 +208,14 @@ class LimitDropEviction(EvictionPolicy):
     def evict(self, st: NodeState) -> int:
         rm = self.rm
         if st.sandbox is None:
+            # adopted (CACHED) outputs have no sandbox; durable ones can
+            # still be spilled.  Anything else is unevictable by this
+            # mechanism: drop it from the candidate set so it cannot
+            # clog the victim list forever.
+            if rm.is_durable(st):
+                return self.spill(st)
+            if st in rm.completed_nodes:
+                rm.completed_nodes.remove(st)
             return 0
         swapped = st.sandbox.drop_limit_and_swap()
         rm.evictions["limitdrop"] += 1

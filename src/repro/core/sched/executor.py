@@ -40,7 +40,9 @@ import threading
 import time
 from typing import Dict, List, Optional, Set, Tuple
 
-from ..dag import DAG, DONE, EVICTED, NodeState, RUNNING, Sandbox
+from ..dag import (CACHED, COMPLETE, DAG, DONE, EVICTED, NodeState, RUNNING,
+                   Sandbox, WAITING)
+from ..fingerprint import fingerprint_dag
 from .. import zarquet
 
 #: sentinel: nothing runnable now, but in-flight nodes may unblock us
@@ -68,6 +70,8 @@ class WorkerPoolExecutor:
         self.force_threads = force_threads
         self.node_runs = 0
         self.load_runs = 0
+        self.cache_hits = 0     # nodes satisfied from the persistent
+        #                       # manifest (marked CACHED, never executed)
         self._lock = threading.RLock()
         self._cond = threading.Condition(self._lock)
         self._active: Dict[int, DAG] = {}
@@ -86,6 +90,14 @@ class WorkerPoolExecutor:
         self._inflight = {}
         self._loading = set()
         self._error = None
+        if self.rm.manifest is not None:
+            # differential caching: fingerprint every node (topo order),
+            # then satisfy fingerprint hits straight from the manifest —
+            # whole unchanged sub-DAGs are skipped before any scheduling
+            for d in dags:
+                fingerprint_dag(d)
+                with self._cond:
+                    self._apply_cache_hits(d)
         if self.workers == 1 and not self.force_threads:
             self._run_sequential()
         else:
@@ -107,6 +119,7 @@ class WorkerPoolExecutor:
                 self._inflight.pop((st.dag.id, st.name), None)
                 self.rm.admission.unreserve(st)
                 raise
+            self._publish_output(st)
             with self._cond:
                 self._complete_locked(st)
 
@@ -149,6 +162,7 @@ class WorkerPoolExecutor:
                         self.rm.admission.unreserve(st)
                     self._cond.notify_all()
                 return
+            self._publish_output(st)
             with self._cond:
                 self._complete_locked(st)
                 self._cond.notify_all()
@@ -170,6 +184,16 @@ class WorkerPoolExecutor:
                     return None
                 if self._inflight:
                     return _WAIT
+                # a rolled-back CACHED node can be blocked on skipped
+                # (output-less) CACHED deps that normal candidate repair
+                # never visits; repair every blocked node before
+                # declaring a stall
+                for d in self._active.values():
+                    for st in d.nodes.values():
+                        if st.status in (WAITING, EVICTED):
+                            self._ensure_deps(st)
+                if self._collect():
+                    continue
                 raise RuntimeError("scheduler stall: no runnable node")
             # repair evicted dependencies (cascading rollback) in priority
             # order, then re-plan: the cascade changes runnability
@@ -221,17 +245,61 @@ class WorkerPoolExecutor:
                 prot.add((st.dag.id, d))
         return prot
 
+    # -- cross-run differential cache hits ---------------------------------
+    def _apply_cache_hits(self, dag: DAG) -> None:
+        """Mark fingerprint-hit nodes CACHED before scheduling starts.
+
+        Children first (reverse topo): a hit node's output is *adopted*
+        from the manifest only when someone will read it — it has an
+        executing (non-hit) child or is a keep_output sink; hit nodes in
+        the interior of a fully-hit cone are skipped outright (CACHED with
+        no output, zero bytes touched).  An entry whose objects vanished
+        demotes to a miss and the node executes normally."""
+        man = self.rm.manifest
+        order = dag.topo_order()
+        hit = {name: (dag.nodes[name].fingerprint is not None
+                      and dag.nodes[name].status == WAITING
+                      and man.get(dag.nodes[name].fingerprint) is not None)
+               for name in order}
+        for name in reversed(order):
+            if not hit[name]:
+                continue
+            st = dag.nodes[name]
+            kids = dag.children[name]
+            wanted = st.spec.keep_output or any(not hit[k] for k in kids)
+            if wanted:
+                if self.rm.adopt_cached(st) is None:
+                    hit[name] = False    # vanished underneath us: execute
+                    continue
+                # adopted bytes honor the admission budget like executed
+                # ones: past it, spill earlier adoptions back to disk
+                over = -self.rm.available()
+                if over > 0:
+                    self.rm.free_memory(over, protect=st)
+            st.transition(CACHED)
+            self.cache_hits += 1
+
     # -- cascading rollback repair ----------------------------------------
     def _ensure_deps(self, st: NodeState) -> None:
         for dep_name in st.spec.deps:
             dep = st.dag.nodes[dep_name]
-            if dep.status == DONE and (dep.output is None or
-                                       dep.output.released):
+            if dep.status in COMPLETE and (dep.output is None or
+                                           dep.output.released):
                 if dep.is_loader and self.rm.decache.enabled:
                     e = self.rm.decache.lookup(dep.decache_key())
                     if e is not None:
                         dep.output = self.rm.decache.attach(e)
+                        self._attach[dep.dag.id].append(e)
                         continue
+                # a skipped/evicted durable output can be re-adopted from
+                # the manifest instead of re-executing the dependency;
+                # its own (possibly skipped) ancestors stay untouched —
+                # the adopted output makes them unnecessary
+                if self.rm.adopt_cached(dep) is not None:
+                    if dep.status != CACHED:
+                        dep.transition(EVICTED)
+                        dep.transition(CACHED)
+                    continue
                 dep.transition(EVICTED)
                 dep.output = None
                 self._ensure_deps(dep)
@@ -321,6 +389,32 @@ class WorkerPoolExecutor:
         with self._lock:
             return sb.write_output(table, label=st.name)
 
+    # -- durable publication (outside the RM critical section) -------------
+    def _publish_output(self, st: NodeState) -> None:
+        """Publish a just-executed output under its fingerprint so the
+        next run adopts it instead of re-executing.  Hashing + the four
+        fsyncs are slow, so they run *off* the executor lock: the node is
+        still in-flight (not yet DONE/in completed_nodes), so eviction
+        cannot touch the message, and once its extents are landed in the
+        backing files (done under the lock) the file bytes are immutable
+        — a concurrent swap-out only drops mappings."""
+        rm = self.rm
+        if rm.manifest is None or st.fingerprint is None or \
+                st.output is None:
+            return
+        try:
+            with self._lock:
+                for fid in st.output.files_referenced():
+                    if fid in self.store.files:
+                        self.store.ensure_file_backed(fid)
+            rm.publish_output(st)
+        except Exception:
+            # publication is strictly best-effort: a full disk or a
+            # vanished file must cost a future cache miss, never the run
+            # (an escaped exception here would strand the in-flight node
+            # and hang the pool until the deadline)
+            pass
+
     # -- completion bookkeeping (RM critical section) ----------------------
     def _complete_locked(self, st: NodeState) -> None:
         st.transition(DONE)
@@ -333,6 +427,12 @@ class WorkerPoolExecutor:
         # freeing earlier would defeat rollback and share-aware eviction.
         self._finish_done_dags()
 
+    def _owned_by_decache(self, st: NodeState) -> bool:
+        if not self.rm.decache.enabled or st.output is None:
+            return False
+        e = self.rm.decache.entries.get(st.decache_key())
+        return e is not None and e.msg is st.output
+
     def _finish_done_dags(self) -> None:
         for did in [i for i, d in self._active.items() if d.all_done()]:
             self._finish_dag(self._active.pop(did), self._attach.pop(did))
@@ -344,7 +444,11 @@ class WorkerPoolExecutor:
                 self.rm.completed_nodes.remove(st)
             if st.spec.keep_output:
                 continue   # external consumer owns it (releases the msg)
-            if not (st.is_loader and self.rm.decache.enabled):
+            # release everything except messages the DeCache owns (the
+            # entry's own msg — shared by every DAG keyed on it; this
+            # includes CACHED loaders repaired via a decache attach,
+            # while manifest-adopted CACHED outputs are ours to release)
+            if not self._owned_by_decache(st):
                 self.rm.release_output(st)
             if st.sandbox is not None:
                 st.sandbox.destroy()
@@ -386,6 +490,7 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
         self._pool = None
         self._data_root = data_root
         self.fallback_inline = 0   # unpicklable fns executed in-parent
+        self.worker_retries = 0    # requests re-run after a worker died
 
     # -- pool lifecycle -----------------------------------------------------
     def _ensure_pool(self):
@@ -410,6 +515,25 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
             self._pool = None
 
     # -- remote execution ---------------------------------------------------
+    def _request(self, obj: dict) -> dict:
+        """Pool request with crash recovery: a request that dies with its
+        worker (SIGKILL, OOM, socket desync) is retried on a surviving
+        worker — requests carry only references, so a replay is free and
+        side-effect-safe.  In-op exceptions are never retried (they are
+        deterministic), and when the whole pool is dead the error
+        propagates to the executor's normal failure path, which releases
+        the node's RM reservation."""
+        from ..flight.worker import FlightWorkerLost
+        attempts = 0
+        while True:
+            try:
+                return self._pool.request(obj)
+            except FlightWorkerLost:
+                attempts += 1
+                if self._pool.live_workers == 0 or attempts > self.workers:
+                    raise
+                self.worker_retries += 1
+
     def _adopt_reply(self, reply: dict, st: NodeState, sb: Sandbox):
         """Decode a worker reply under the lock: newly created files are
         adopted with ownership and charged to the node's cgroup (exactly
@@ -435,13 +559,13 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
         from ..flight.wire import encode_message
         with self._lock:
             enc = [encode_message(m, self.store) for m in inputs]
-        reply = self._pool.request(
+        reply = self._request(
             {"op": "exec", "label": st.name, "fn": fn_bytes, "inputs": enc})
         with self._lock:
             return self._adopt_reply(reply, st, sb)
 
     def _load_output(self, st: NodeState, sb: Sandbox):
-        reply = self._pool.request(
+        reply = self._request(
             {"op": "load", "label": st.name, "source": st.spec.source,
              "dict_columns": tuple(st.spec.dict_columns)})
         with self._lock:

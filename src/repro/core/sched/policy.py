@@ -24,7 +24,7 @@ from __future__ import annotations
 import math
 from typing import Dict, Iterable, Tuple, Type
 
-from ..dag import DAG, DONE, NodeState
+from ..dag import COMPLETE, DAG, NodeState
 
 SCHEDULES: Dict[str, Type["SchedulePolicy"]] = {}
 
@@ -88,7 +88,7 @@ class FairShare(SchedulePolicy):
         for d in dags:
             t = d.tenant
             done[t] = done.get(t, 0) + sum(
-                1 for n in d.nodes.values() if n.status == DONE)
+                1 for n in d.nodes.values() if n.status in COMPLETE)
             total[t] = total.get(t, 0) + len(d.nodes)
         self._progress = {t: done[t] / max(total[t], 1) for t in total}
 

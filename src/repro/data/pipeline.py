@@ -76,6 +76,11 @@ class PipelineConfig:
     #                              # spawned OS processes over the Flight
     #                              # data plane (compute scales past the
     #                              # GIL; store becomes file-backed)
+    cache_root: Optional[str] = None   # persistent content-addressed cache
+    #                                  # dir: re-runs adopt unchanged
+    #                                  # shards' load/pack outputs from the
+    #                                  # manifest instead of recomputing
+    #                                  # (store becomes durable/file-backed)
 
 
 class ZerrowDataPipeline:
@@ -86,13 +91,16 @@ class ZerrowDataPipeline:
                  rm: Optional[ResourceManager] = None):
         self.paths = list(shard_paths)
         self.cfg = cfg
-        self.store = store or BufferStore(
-            backing="file" if cfg.workers_mode == "process" else "ram")
+        backing = ("file" if cfg.workers_mode == "process" or cfg.cache_root
+                   else "ram")
+        self.store = store or BufferStore(backing=backing,
+                                          root=cfg.cache_root)
         self.rm = rm or ResourceManager(
             self.store, RMConfig(memory_limit=cfg.memory_limit,
                                  policy="adaptive",
                                  workers=cfg.workers,
-                                 workers_mode=cfg.workers_mode))
+                                 workers_mode=cfg.workers_mode,
+                                 cache_root=cfg.cache_root))
         self.ex = make_executor(self.store, self.rm, workers=cfg.workers)
         self._owned_msgs: List = []
 
@@ -152,6 +160,8 @@ class ZerrowDataPipeline:
     def stats(self) -> dict:
         return {"decache_hits": self.rm.decache.hits,
                 "loads": self.ex.load_runs,
+                "cache_hits": self.ex.cache_hits,
+                **self.rm.cache_stats,
                 **self.store.stats.snapshot()}
 
     def close(self) -> None:

@@ -49,6 +49,11 @@ def main():
                     choices=("thread", "process"),
                     help="run prompt-shard DAG nodes in threads or in "
                          "spawned Flight worker processes")
+    ap.add_argument("--cache-root", default=None,
+                    help="persistent content-addressed cache dir: prompt-"
+                         "shard loads publish under node fingerprints and "
+                         "re-launches adopt unchanged shards (CACHED) "
+                         "instead of re-deserializing them")
     a = ap.parse_args()
 
     arch = get_arch(a.arch)
@@ -68,6 +73,7 @@ def main():
         source = ZerrowPromptSource(paths, batch=a.batch,
                                     max_new=a.max_new, workers=a.workers,
                                     workers_mode=a.workers_mode,
+                                    cache_root=a.cache_root,
                                     max_prompt_len=a.max_seq // 2)
         batches = source.batches()
     else:

@@ -32,7 +32,8 @@ def train_loop(arch_name: str, *, steps: int = 100, batch: int = 8,
                ckpt_dir: str = None, ckpt_every: int = 50,
                data_dir: str = None, lr: float = 1e-3,
                log_every: int = 10, resume: bool = False,
-               data_workers: int = 1, workers_mode: str = "thread"):
+               data_workers: int = 1, workers_mode: str = "thread",
+               cache_root: str = None):
     arch = get_arch(arch_name)
     if smoke:
         arch = smoke_variant(arch)
@@ -47,7 +48,7 @@ def train_loop(arch_name: str, *, steps: int = 100, batch: int = 8,
                     for f in os.listdir(data_dir) if f.endswith(".zq"))
     pipe = ZerrowDataPipeline(shards, PipelineConfig(
         batch=batch, seq_len=seq_len, workers=data_workers,
-        workers_mode=workers_mode))
+        workers_mode=workers_mode, cache_root=cache_root))
 
     state = init_state(api, jax.random.key(0))
     store = None
@@ -109,11 +110,16 @@ def main():
                     help="run pipeline DAG nodes in threads or in spawned "
                          "Flight worker processes (tokenize/pack scale "
                          "past the GIL)")
+    ap.add_argument("--cache-root", default=None,
+                    help="persistent content-addressed cache dir: packed "
+                         "shards publish under node fingerprints and "
+                         "restarts adopt unchanged shards instead of "
+                         "re-tokenizing (differential caching)")
     a = ap.parse_args()
     train_loop(a.arch, steps=a.steps, batch=a.batch, seq_len=a.seq_len,
                smoke=a.smoke, ckpt_dir=a.ckpt_dir, resume=a.resume,
                lr=a.lr, data_workers=a.data_workers,
-               workers_mode=a.workers_mode)
+               workers_mode=a.workers_mode, cache_root=a.cache_root)
 
 
 if __name__ == "__main__":

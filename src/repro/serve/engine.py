@@ -73,18 +73,21 @@ class ZerrowPromptSource:
                  workers_mode: str = "thread",
                  max_prompt_len: Optional[int] = None,
                  memory_limit: Optional[int] = None,
+                 cache_root: Optional[str] = None,
                  store: Optional[BufferStore] = None,
                  rm: Optional[ResourceManager] = None):
         self.paths = list(shard_paths)
         self.batch = batch
         self.max_new = max_new
         self.max_prompt_len = max_prompt_len
-        self.store = store or BufferStore(
-            backing="file" if workers_mode == "process" else "ram")
+        backing = ("file" if workers_mode == "process" or cache_root
+                   else "ram")
+        self.store = store or BufferStore(backing=backing, root=cache_root)
         self.rm = rm or ResourceManager(
             self.store, RMConfig(memory_limit=memory_limit,
                                  workers=workers,
-                                 workers_mode=workers_mode))
+                                 workers_mode=workers_mode,
+                                 cache_root=cache_root))
         self.ex = make_executor(self.store, self.rm, workers=workers)
 
     def batches(self) -> Iterator[List[Request]]:

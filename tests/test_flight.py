@@ -8,7 +8,9 @@ Covers the three zero-copy claims the subsystem makes:
     sequential executor while only tiny control frames cross the socket.
 """
 
+import functools
 import os
+import signal
 import subprocess
 import sys
 import tempfile
@@ -17,10 +19,10 @@ import numpy as np
 import pytest
 
 from repro.core import (BufferStore, DAG, Executor, FlightClient,
-                        FlightServer, KernelZero, NodeSpec,
-                        ProcessWorkerExecutor, RMConfig, ResourceManager,
-                        Sandbox, SipcReader, Table, decode_message,
-                        encode_message, make_executor)
+                        FlightServer, FlightWorkerError, KernelZero,
+                        NodeSpec, ProcessWorkerExecutor, RMConfig,
+                        ResourceManager, Sandbox, SipcReader, Table,
+                        decode_message, encode_message, make_executor)
 from repro.core import ops, zarquet
 
 
@@ -40,6 +42,19 @@ def filter_even_op(tables):
 
 def upper_op(tables):
     return ops.upper(tables[0], "s0")
+
+
+def crash_once_op(tables, marker):
+    """SIGKILL the hosting worker process the first time it runs; the
+    marker file makes the retry succeed."""
+    if not os.path.exists(marker):
+        open(marker, "w").close()
+        os.kill(os.getpid(), signal.SIGKILL)
+    return tables[0]
+
+
+def crash_always_op(tables):
+    os.kill(os.getpid(), signal.SIGKILL)
 
 
 def _make_table(rows=1200):
@@ -315,6 +330,63 @@ def test_process_mode_decache_shares_loads(tmp_path):
         t0 = SipcReader(fstore).read_table(dags[0].nodes["up"].output)
         t1 = SipcReader(fstore).read_table(dags[1].nodes["up"].output)
         assert t0.equals(t1)
+    finally:
+        ex.close()
+        fstore.close()
+
+
+# ---------------------------------------------------------------------------
+# worker-crash fault injection
+# ---------------------------------------------------------------------------
+
+def test_worker_crash_mid_node_is_retried(tmp_path):
+    """A worker SIGKILLed mid-node loses nothing: the request (references
+    only, side-effect free) is replayed on a surviving worker, the node
+    completes, and the RM's admission reservations fully drain."""
+    paths = _write_shards(str(tmp_path), n=1)
+    fstore = _file_store(tmp_path)
+    rm = ResourceManager(fstore, RMConfig(workers=2,
+                                          workers_mode="process"))
+    ex = ProcessWorkerExecutor(fstore, rm, workers=2)
+    marker = os.path.join(str(tmp_path), "crashed-once")
+    dag = DAG([
+        NodeSpec("load", source=paths[0], est_mem=1 << 22),
+        NodeSpec("op", fn=functools.partial(crash_once_op, marker=marker),
+                 deps=["load"], est_mem=1 << 22, keep_output=True),
+    ], name="crash")
+    try:
+        ex.run([dag])
+        assert os.path.exists(marker)          # it really died once
+        assert ex.worker_retries == 1
+        assert ex._pool.live_workers == 1      # the victim stayed retired
+        assert dag.all_done()
+        assert rm.admission.reserved == 0      # reservations released
+        assert ex._inflight == {}
+        t = SipcReader(fstore).read_table(dag.nodes["op"].output)
+        assert t.num_rows > 0
+    finally:
+        ex.close()
+        fstore.close()
+
+
+def test_all_workers_lost_fails_cleanly(tmp_path):
+    """When the whole pool dies the node fails with FlightWorkerError and
+    every RM reservation is released — no stuck in-flight state."""
+    paths = _write_shards(str(tmp_path), n=1)
+    fstore = _file_store(tmp_path)
+    rm = ResourceManager(fstore, RMConfig(workers=1,
+                                          workers_mode="process"))
+    ex = ProcessWorkerExecutor(fstore, rm, workers=1)
+    dag = DAG([
+        NodeSpec("load", source=paths[0], est_mem=1 << 22),
+        NodeSpec("op", fn=crash_always_op, deps=["load"], est_mem=1 << 22),
+    ], name="doomed")
+    try:
+        with pytest.raises(FlightWorkerError):
+            ex.run([dag])
+        assert rm.admission.reserved == 0
+        assert ex._inflight == {}
+        assert ex._pool.live_workers == 0
     finally:
         ex.close()
         fstore.close()

@@ -1,0 +1,217 @@
+"""Crash consistency of the persistent content-addressed store.
+
+A writer subprocess publishes node outputs and is SIGKILLed mid-publish at
+injected fault points (``ZERROW_CRASH=<point>:<n>``, see
+``core/manifest.CRASH_POINTS``).  Invariant: ``BufferStore.reopen``
+recovers *exactly* the journaled complete outputs —
+
+  * every publish the writer acknowledged is present and decodes to the
+    exact bytes it published (the journal fsync is the commit point);
+  * at most the in-flight publish may additionally survive (crash after
+    the journal write), and if it does it too must decode exactly;
+  * a torn tail record is discarded, never surfaced as an entry, and the
+    log stays appendable afterwards.
+
+The default lane kills once per fault point; the ``stress`` lane repeats
+each point at several publish indices (>= 20 kill iterations).
+"""
+
+import os
+import signal
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (BufferStore, KernelZero, Manifest, RMConfig,
+                        ResourceManager, Sandbox, SipcReader, Table)
+from repro.core.manifest import CRASH_POINTS
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def expected_table(i: int) -> Table:
+    rng = np.random.default_rng(1000 + i)
+    return Table.from_pydict({
+        "a": rng.integers(0, 1 << 40, size=300).astype(np.int64),
+        "s": [f"row-{i}-{j}" for j in range(300)],
+    })
+
+
+_WRITER = r"""
+import os, sys
+import numpy as np
+sys.path.insert(0, {src!r})
+from repro.core import BufferStore, KernelZero, Sandbox, Table
+
+root, n_pub = sys.argv[1], int(sys.argv[2])
+
+def expected_table(i):
+    rng = np.random.default_rng(1000 + i)
+    return Table.from_pydict({{
+        "a": rng.integers(0, 1 << 40, size=300).astype(np.int64),
+        "s": [f"row-{{i}}-{{j}}" for j in range(300)],
+    }})
+
+store = BufferStore(backing="file", root=root)
+kz = KernelZero(store)
+for i in range(n_pub):
+    sb = Sandbox(store, kz, f"w{{i}}", mode="zero")
+    msg = sb.write_output(expected_table(i), label=f"t{{i}}")
+    print(f"PUBLISHING fp{{i:04d}}", flush=True)
+    store.publish(f"fp{{i:04d}}", msg, label=f"t{{i}}")
+    print(f"PUBLISHED fp{{i:04d}}", flush=True)
+store.close()
+print("DONE", flush=True)
+"""
+
+
+def _run_writer(root, n_pub=4, crash=None, timeout=120):
+    env = dict(os.environ,
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    if crash is not None:
+        env["ZERROW_CRASH"] = crash
+    else:
+        env.pop("ZERROW_CRASH", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _WRITER.format(src=os.path.abspath(SRC)),
+         str(root), str(n_pub)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    acked = [line.split()[1] for line in out.stdout.splitlines()
+             if line.startswith("PUBLISHED ")]
+    inflight = [line.split()[1] for line in out.stdout.splitlines()
+                if line.startswith("PUBLISHING ")]
+    inflight = [fp for fp in inflight if fp not in acked]
+    return out, acked, inflight
+
+
+def _verify_recovered(root, acked, inflight):
+    """Reopen and check the crash-consistency contract."""
+    store = BufferStore.reopen(str(root))
+    try:
+        man = store.manifest
+        assert man.dropped_torn in (0, 1)
+        recovered = set(man.entries)
+        assert set(acked) <= recovered, \
+            f"acknowledged publish lost: {set(acked) - recovered}"
+        assert recovered <= set(acked) | set(inflight), \
+            f"phantom entries: {recovered - set(acked) - set(inflight)}"
+        for fp in sorted(recovered):
+            i = int(fp[2:])
+            msg = man.decode(fp, store, label=fp)
+            assert msg is not None, f"journaled entry {fp} not decodable"
+            got = SipcReader(store).read_table(msg)
+            assert got.equals(expected_table(i)), f"{fp}: content mismatch"
+        assert store.copied_bytes == 0     # recovery remaps, never copies
+        return recovered
+    finally:
+        store.close()
+
+
+# ---------------------------------------------------------------------------
+# clean path
+# ---------------------------------------------------------------------------
+
+def test_publish_reopen_roundtrip(tmp_path):
+    root = tmp_path / "cache"
+    out, acked, _ = _run_writer(root, n_pub=3)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert len(acked) == 3
+    recovered = _verify_recovered(root, acked, [])
+    assert recovered == set(acked)
+
+
+def test_publish_is_idempotent_and_content_addressed(tmp_path):
+    root = str(tmp_path / "cache")
+    store = BufferStore(backing="file", root=root)
+    kz = KernelZero(store)
+    sb = Sandbox(store, kz, "w", mode="zero")
+    msg = sb.write_output(expected_table(0), label="t")
+    e1 = store.publish("fp0", msg)
+    e2 = store.publish("fp0", msg)          # second publish: no-op
+    assert e1 is e2
+    assert store.manifest.published == 1
+    # identical content published under a second fingerprint dedupes the
+    # object files (content addressing): no new objects appear
+    objs = set(os.listdir(store.manifest.objects_dir))
+    sb2 = Sandbox(store, kz, "w2", mode="zero")
+    msg2 = sb2.write_output(expected_table(0), label="t2")
+    store.publish("fp1", msg2)
+    assert set(os.listdir(store.manifest.objects_dir)) == objs
+    store.close()
+
+
+def test_reopen_drops_entry_with_missing_object(tmp_path):
+    root = tmp_path / "cache"
+    out, acked, _ = _run_writer(root, n_pub=2)
+    assert out.returncode == 0, out.stderr[-2000:]
+    man = Manifest(str(root))
+    victim = sorted(man.entries)[0]
+    from repro.core import frame_refs
+    path = man.resolve(frame_refs(man.entries[victim].frame)[0][0])
+    man.close()
+    os.unlink(path)
+    store = BufferStore.reopen(str(root))
+    assert victim not in store.manifest.entries
+    assert store.manifest.dropped_incomplete >= 1
+    # the other entry is unaffected
+    survivor = [fp for fp in acked if fp != victim]
+    for fp in survivor:
+        assert fp in store.manifest.entries
+    store.close()
+
+
+def test_torn_tail_is_truncated_and_log_stays_appendable(tmp_path):
+    root = str(tmp_path / "cache")
+    out, acked, _ = _run_writer(root, n_pub=2)
+    assert out.returncode == 0, out.stderr[-2000:]
+    log = os.path.join(root, "MANIFEST.log")
+    good = os.path.getsize(log)
+    with open(log, "ab") as fh:
+        fh.write(b"ZMF1\xff\xff")            # torn tail garbage
+    store = BufferStore(backing="file", root=root)   # writer-mode reopen
+    assert store.manifest.dropped_torn == 1
+    assert set(store.manifest.entries) == set(acked)
+    assert os.path.getsize(log) == good      # tail truncated
+    kz = KernelZero(store)
+    sb = Sandbox(store, kz, "w", mode="zero")
+    store.publish("fp9999", sb.write_output(expected_table(9), label="t"))
+    store.close()
+    store2 = BufferStore.reopen(root)        # append after recovery parses
+    assert set(store2.manifest.entries) == set(acked) | {"fp9999"}
+    assert store2.manifest.dropped_torn == 0
+    store2.close()
+
+
+# ---------------------------------------------------------------------------
+# the kill matrix
+# ---------------------------------------------------------------------------
+
+def _kill_matrix(tmp_path, hits):
+    iterations = 0
+    for point in CRASH_POINTS:
+        for hit in hits:
+            root = tmp_path / f"cache-{point}-{hit}"
+            out, acked, inflight = _run_writer(
+                root, n_pub=4, crash=f"{point}:{hit}")
+            assert out.returncode == -signal.SIGKILL, \
+                (point, hit, out.returncode, out.stderr[-1000:])
+            iterations += 1
+            _verify_recovered(root, acked, inflight)
+            # the crash left the store recoverable AND writable: a restart
+            # completes the remaining publishes on the same root
+            out2, acked2, _ = _run_writer(root, n_pub=4)
+            assert out2.returncode == 0, out2.stderr[-2000:]
+            _verify_recovered(root, [f"fp{i:04d}" for i in range(4)], [])
+    return iterations
+
+
+def test_sigkill_mid_publish_recovers_journaled_files(tmp_path):
+    assert _kill_matrix(tmp_path, hits=(2,)) == len(CRASH_POINTS)
+
+
+@pytest.mark.stress
+def test_sigkill_mid_publish_recovers_journaled_files_stress(tmp_path):
+    # every fault point x several publish indices: >= 20 kill iterations
+    assert _kill_matrix(tmp_path, hits=(1, 2, 3, 4)) >= 20

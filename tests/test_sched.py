@@ -1,15 +1,23 @@
 """The layered scheduler subsystem (core/sched/): policies, admission,
 eviction matrix, and the concurrent worker-pool executor."""
+import functools
+
 import numpy as np
 import pytest
 
 from repro.core import (BufferStore, DAG, Executor, InvalidTransition,
-                        NodeSpec, POLICIES, RMConfig, ResourceManager,
-                        SCHEDULES, Table, WorkerPoolExecutor)
+                        NodeSpec, POLICIES, ProcessWorkerExecutor, RMConfig,
+                        ResourceManager, SCHEDULES, Table,
+                        WorkerPoolExecutor)
 from repro.core import ops, zarquet
-from repro.core.dag import DONE, EVICTED, RUNNING, WAITING
+from repro.core.dag import CACHED, DONE, EVICTED, RUNNING, WAITING
 from repro.core.sched.eviction import (AdaptiveEviction, EvictionPolicy,
                                        register_eviction)
+
+
+def add_cols_op(tables, out_name="n0"):
+    """Module-level (picklable) chain op for process-mode stress."""
+    return ops.add_columns_compute(tables[0], "i0", "i1", out_name)
 
 
 @pytest.fixture()
@@ -21,7 +29,8 @@ def source(tmp_path):
 
 
 def make_env(tmp_path, workers=1, tag="", **cfg):
-    store = BufferStore(swap_dir=str(tmp_path / f"swap{tag}"))
+    store = BufferStore(swap_dir=str(tmp_path / f"swap{tag}"),
+                        root=cfg.get("cache_root"))
     rm = ResourceManager(store, RMConfig(**cfg))
     ex = Executor(store, rm, workers=workers)
     return store, rm, ex
@@ -355,6 +364,148 @@ def test_concurrent_eviction_workload(tmp_path):
     assert all(d.all_done() for d in dags)
     assert sum(rm.evictions.values()) > 0
     store.close()
+
+
+# --------------------------------------------------------------------------
+# concurrency stress (the -m stress lane; see pytest.ini)
+# --------------------------------------------------------------------------
+
+def _drain_and_check_accounting(store, rm):
+    """At drain: uncache everything, then every byte is uncharged, no
+    deleted-but-referenced file, no negative refcount."""
+    for f in store.files.values():
+        assert not f.deleted
+        assert f.refcount >= 0
+    for e in list(rm.decache.uncache_candidates()):
+        rm.decache.uncache(e)
+    for fid in list(store.files):     # GC released keep_output files
+        f = store.files[fid]
+        if f.refcount == 0 and not f.decache_pinned:
+            store.delete_file(fid)
+    assert store.global_charged == 0, \
+        f"accounting leak: {store.global_charged} bytes still charged"
+
+
+@pytest.mark.stress
+def test_stress_threads_decache_eviction(tmp_path):
+    """N threads hammering DeCache + eviction under a tight budget: no
+    double-execute (single-flight holds), no use-after-evict (any such
+    read raises), accounting sums to zero at drain."""
+    paths = _multi_source(tmp_path, 4)
+    store, rm, ex = make_env(tmp_path, workers=4, tag="st",
+                             memory_limit=3 << 15, policy="adaptive",
+                             decache=True)
+    dags = [chain_dag(paths[i % 4], 4, f"s{i}") for i in range(12)]
+    ex.run(dags)
+    assert all(d.all_done() for d in dags)
+    assert sum(rm.evictions.values()) > 0      # the budget really bit
+    # single-flight: any load beyond one per source must be explained by
+    # an uncache eviction — nothing else may duplicate a load
+    assert ex.load_runs <= 4 + rm.evictions["uncache"]
+    _drain_and_check_accounting(store, rm)
+    store.close()
+
+
+@pytest.mark.stress
+def test_stress_process_workers_durable_cache(tmp_path):
+    """Scheduler threads x M worker processes x a durable manifest under
+    a tight budget: publishes, adoptions, spills, and single-flight all
+    race.  Round 2 re-runs the same DAGs warm and must come mostly from
+    the cache."""
+    paths = _multi_source(tmp_path, 3)
+    root = str(tmp_path / "cache")
+
+    def build_dags():
+        dags = []
+        for i, p in enumerate(paths):
+            nodes = [NodeSpec("load", source=p, est_mem=1 << 16)]
+            prev = "load"
+            for j in range(3):
+                nodes.append(NodeSpec(
+                    f"add{j}",
+                    fn=functools.partial(add_cols_op, out_name=f"n{j}"),
+                    deps=[prev], est_mem=1 << 15,
+                    keep_output=(j == 2)))
+                prev = f"add{j}"
+            dags.append(DAG(nodes, name=f"p{i}"))
+        return dags
+
+    hits = []
+    for rnd in range(2):
+        store = BufferStore(backing="file", root=root,
+                            swap_dir=str(tmp_path / f"swp{rnd}"))
+        rm = ResourceManager(store, RMConfig(
+            memory_limit=3 << 15, policy="adaptive", workers=3,
+            workers_mode="process", cache_root=root))
+        ex = ProcessWorkerExecutor(store, rm, workers=3)
+        dags = build_dags()
+        ex.run(dags)
+        assert all(d.all_done() for d in dags)
+        assert ex.fallback_inline == 0         # everything crossed the hop
+        hits.append(ex.cache_hits)
+        for d in dags:
+            msg = d.nodes["add2"].output
+            assert msg is not None and not msg.released
+            msg.release()
+        _drain_and_check_accounting(store, rm)
+        ex.close()
+        store.close()
+    assert hits[0] == 0                        # cold: everything executed
+    assert hits[1] >= 3                        # warm: sinks adopted
+
+
+@pytest.mark.stress
+def test_stress_cached_outputs_spill_not_discard(tmp_path):
+    """Under pressure, durable (published/adopted) outputs are spilled —
+    mappings dropped, bytes kept in the content-addressed objects — never
+    rolled back to a recompute, and reads after the spill still see the
+    right data (remapped, not recomputed)."""
+    paths = _multi_source(tmp_path, 3)
+    root = str(tmp_path / "cache")
+
+    def warm_dags(tag, with_tail):
+        dags = []
+        for i, p in enumerate(paths):
+            d = chain_dag(p, 3, f"{tag}{i}")
+            specs = [st.spec for st in d.nodes.values()]
+            if with_tail:
+                # an op the manifest has never seen: forces execution on
+                # top of the adopted chain outputs
+                specs.append(NodeSpec(
+                    "tail", fn=lambda ts: ops.slice_rows(ts[0], 0, 8),
+                    deps=["add2"], est_mem=1 << 15, keep_output=True))
+            dags.append(DAG(specs, name=f"{tag}{i}"))
+        return dags
+
+    # cold run, roomy budget: publish everything
+    store, rm, ex = make_env(tmp_path, tag="cold", cache_root=root)
+    dags = warm_dags("c", with_tail=False)
+    ex.run(dags)
+    assert all(d.all_done() for d in dags)
+    store.close()
+
+    # warm run, tight budget: every chain is adopted (its tail executes),
+    # and admission pressure must spill other DAGs' adopted outputs
+    store2 = BufferStore(backing="file", root=root,
+                         swap_dir=str(tmp_path / "swp2"))
+    rm2 = ResourceManager(store2, RMConfig(memory_limit=3 << 15,
+                                           policy="adaptive",
+                                           cache_root=root))
+    ex2 = Executor(store2, rm2)
+    dags2 = warm_dags("w", with_tail=True)
+    ex2.run(dags2)
+    assert all(d.all_done() for d in dags2)
+    assert ex2.cache_hits > 0
+    assert rm2.evictions["spill"] > 0
+    assert rm2.evictions["rollback"] == 0      # durable: spill, not discard
+    for d in dags2:
+        msg = d.nodes["tail"].output
+        assert msg is not None and not msg.released
+        from repro.core import SipcReader
+        assert SipcReader(store2).read_table(msg).num_rows == 8
+        msg.release()
+    _drain_and_check_accounting(store2, rm2)
+    store2.close()
 
 
 # --------------------------------------------------------------------------

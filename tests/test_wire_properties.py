@@ -1,0 +1,221 @@
+"""Property-based tests of the SIPC wire protocol.
+
+Random Arrow-like tables — mixed dtypes, null runs, dictionary columns,
+zero-row / zero-column / zero-length-string edge cases — must satisfy the
+two structural claims the Flight data plane makes:
+
+  * ``encode_message``/``decode_message`` roundtrip is the identity with
+    ``copied_bytes == 0`` on both sides of the hop (references move, data
+    does not);
+  * the frame size depends only on the table's *structure* (schema,
+    batch/buffer count), never on how many data bytes it describes.
+
+The generator is a plain seeded-numpy implementation so the suite runs
+everywhere; when ``hypothesis`` is installed (the CI stress lane) the
+same properties also run under real strategies.  The default lane runs a
+small example count; the ``stress`` marker runs >= 200 examples.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (BufferStore, KernelZero, Sandbox, SipcReader,
+                        Table, decode_message, encode_message)
+from repro.core.arrow import Column, Field, Schema, pack_validity
+from repro.core.flight.wire import frame_refs
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+PRIM_DTYPES = ("int8", "int16", "int32", "int64", "uint8",
+               "float32", "float64", "bool")
+KINDS = ("prim", "utf8", "dict", "dict_prim")
+
+
+# ---------------------------------------------------------------------------
+# seeded random-table generator
+# ---------------------------------------------------------------------------
+
+def _null_runs(rng, n, forced=None):
+    """Validity bitmap made of alternating valid/null runs (or None).
+    ``forced`` pins presence so two builds of one spec share structure."""
+    present = forced if forced is not None else bool(rng.random() < 0.6)
+    if n == 0 or not present:
+        return None
+    mask = np.ones(n, dtype=bool)
+    pos, valid = 0, bool(rng.integers(0, 2))
+    while pos < n:
+        run = int(rng.integers(1, max(n // 3, 1) + 1))
+        mask[pos:pos + run] = valid
+        valid = not valid
+        pos += run
+    return pack_validity(mask)
+
+
+def _strings(rng, n, min_len=0):
+    """n strings with zero-length and repeated runs mixed in."""
+    out = []
+    for _ in range(n):
+        k = int(rng.integers(min_len, 13))  # 0: the empty-string edge
+        out.append(bytes(rng.integers(97, 123, size=k, dtype=np.uint8)))
+    return out
+
+
+def _build_column(rng, kind, dtype, n, has_validity=None, card=None,
+                  min_str=0):
+    validity = _null_runs(rng, n, forced=has_validity)
+    if kind == "prim":
+        if dtype == "bool":
+            vals = rng.integers(0, 2, size=n).astype(bool)
+        elif dtype.startswith("float"):
+            vals = rng.standard_normal(n).astype(dtype)
+        else:
+            info = np.iinfo(np.dtype(dtype))
+            vals = rng.integers(info.min, int(info.max) + 1, size=n,
+                                dtype=np.int64).astype(dtype)
+        return Column.primitive(vals, validity)
+    if kind == "utf8":
+        return Column.from_strings(_strings(rng, n, min_str), validity)
+    k = card or int(rng.integers(1, 7))     # dictionary cardinality
+    codes = rng.integers(0, k, size=n).astype(np.int32)
+    if kind == "dict":
+        dic = Column.from_strings([bytes([97 + j]) * (j + 1)
+                                   for j in range(k)])
+    else:
+        dic = Column.primitive(
+            rng.integers(0, 1 << 20, size=k).astype(np.int64))
+    return Column.dictionary_encoded(codes, dic, validity)
+
+
+def random_spec(rng):
+    """Per-column (kind, dtype, has_validity, dict_cardinality) — the
+    *structure*, separate from the size, so the frame-size property can
+    build two sizes of one spec with identical buffer layout."""
+    n_cols = int(rng.integers(0, 5))        # 0: the zero-column edge
+    return [(str(rng.choice(KINDS)), str(rng.choice(PRIM_DTYPES)),
+             bool(rng.integers(0, 2)), int(rng.integers(1, 7)))
+            for _ in range(n_cols)]
+
+
+def build_table(rng, spec, n_rows, structural=False):
+    """``structural=True`` pins everything that changes the frame layout
+    (validity presence, empty-buffer edges) so only data sizes vary."""
+    fields, cols = [], []
+    for j, (kind, dtype, has_validity, card) in enumerate(spec):
+        c = _build_column(rng, kind, dtype, n_rows,
+                          has_validity=has_validity if structural else None,
+                          card=card if structural else None,
+                          min_str=1 if structural else 0)
+        fields.append(Field(f"c{j}", c.type))
+        cols.append(c)
+    return Table.from_batch(Schema(fields), cols)
+
+
+def random_table(rng):
+    n = int(rng.choice([0, 1, 2, 7, 33, 128]))
+    return build_table(rng, random_spec(rng), n)
+
+
+# ---------------------------------------------------------------------------
+# the properties
+# ---------------------------------------------------------------------------
+
+def _roundtrip_once(tmp_path, table, tag):
+    store = BufferStore(backing="file",
+                        data_dir=os.path.join(str(tmp_path), f"w{tag}"))
+    reader_store = BufferStore(backing="file",
+                               data_dir=os.path.join(str(tmp_path),
+                                                     f"r{tag}"))
+    try:
+        sb = Sandbox(store, KernelZero(store), "w", mode="zero")
+        msg = sb.write_output(table, label="t")
+        copied_before = store.copied_bytes
+        frame = encode_message(msg, store)
+        got = SipcReader(reader_store).read_table(
+            decode_message(frame, reader_store))
+        assert got.equals(table)
+        # references moved, data did not — on either side of the hop
+        assert store.copied_bytes == copied_before
+        assert reader_store.copied_bytes == 0
+        # every exported reference names a real extent of a real file
+        for path, offset, length in frame_refs(frame):
+            assert os.path.getsize(path) >= offset + length
+        return frame
+    finally:
+        store.close()
+        reader_store.close()
+
+
+def _check_roundtrips(tmp_path, n_examples):
+    rng = np.random.default_rng(20260728)
+    for i in range(n_examples):
+        _roundtrip_once(tmp_path, random_table(rng), i)
+
+
+def _check_frame_size_independence(tmp_path, n_examples):
+    """Same structure, 64x the rows -> byte-identical frame length."""
+    rng = np.random.default_rng(42)
+    for i in range(n_examples):
+        spec = random_spec(rng)
+        small = build_table(rng, spec, 8, structural=True)
+        big = build_table(rng, spec, 8 * 64, structural=True)
+        f_small = _roundtrip_once(tmp_path, small, f"s{i}")
+        f_big = _roundtrip_once(tmp_path, big, f"b{i}")
+        assert len(f_small) == len(f_big), \
+            f"frame grew with data: {len(f_small)} -> {len(f_big)} ({spec})"
+        if big.nbytes:
+            assert len(f_big) < max(big.nbytes, 1)
+
+
+def test_wire_roundtrip_random_tables(tmp_path):
+    _check_roundtrips(tmp_path, 40)
+
+
+def test_wire_frame_size_independent_of_data(tmp_path):
+    _check_frame_size_independence(tmp_path, 10)
+
+
+@pytest.mark.stress
+def test_wire_roundtrip_random_tables_stress(tmp_path):
+    _check_roundtrips(tmp_path, 220)
+
+
+@pytest.mark.stress
+def test_wire_frame_size_independent_of_data_stress(tmp_path):
+    _check_frame_size_independence(tmp_path, 40)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis strategies (CI stress lane; skipped when not installed)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    import shutil
+    import tempfile
+
+    @st.composite
+    def arrow_tables(draw):
+        seed = draw(st.integers(0, 2**32 - 1))
+        rng = np.random.default_rng(seed)
+        n = draw(st.sampled_from([0, 1, 3, 17, 64]))
+        n_cols = draw(st.integers(0, 4))
+        spec = [(draw(st.sampled_from(KINDS)),
+                 draw(st.sampled_from(PRIM_DTYPES)),
+                 draw(st.booleans()), draw(st.integers(1, 6)))
+                for _ in range(n_cols)]
+        return build_table(rng, spec, n)
+
+    @pytest.mark.stress
+    @settings(max_examples=200, deadline=None)
+    @given(arrow_tables())
+    def test_wire_roundtrip_hypothesis(table):
+        d = tempfile.mkdtemp(prefix="zerrow-wireprop-")
+        try:
+            _roundtrip_once(d, table, "h")
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
