@@ -1,0 +1,305 @@
+"""Vectorized columnar kernels: per-kernel before/after + thread scaling.
+
+Three experiments, all ratios against in-file naive baselines (the exact
+per-row loops the vkernels layer replaced):
+
+  1. per-kernel micro: dict-encode (fixed-width and mixed-length),
+     utf8 sort keys, dictionary decode, non-ASCII upper — naive per-row
+     vs vectorized, same inputs;
+  2. zarquet cold decode: the old serial read path (full-size
+     intermediate ``bytes`` per buffer + per-row dictionary encode) vs
+     ``read_table`` with the reader pool and copy-free decompress-into;
+  3. thread scaling: the BENCH_flight dict-encode+filter workload on the
+     thread executor at workers 1/2/4 — per-row loops held the GIL and
+     made workers=4 *slower* than workers=1 (the inversion in
+     BENCH_flight.json); vectorized kernels restore monotone scaling.
+     (``reader_threads=1`` here so executor scaling is not confounded
+     with the in-loader reader pool, which experiment 2 measures.)
+
+    PYTHONPATH=src python -m benchmarks.run kernels
+
+Results land in BENCH_kernels.json.  In ``--smoke`` mode the run asserts
+the thread-scaling sanity condition ``workers=4 wall <= workers=1 wall
+* 1.05`` so the GIL inversion cannot silently return, and leaves the
+checked-in full-size numbers untouched.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import zlib
+
+import numpy as np
+
+from repro.core import DAG, NodeSpec, vkernels
+from repro.core import ops, zarquet
+from repro.core.arrow import Column, Table
+from repro.core.buffers import alloc_aligned
+
+from .common import Csv, gb, make_env, timed, write_source
+
+try:
+    import zstandard
+except ImportError:
+    zstandard = None
+
+N_DAGS = 4
+SMOKE = os.environ.get("ZERROW_BENCH_SMOKE") == "1"
+SCALE_TOL = 1.05        # workers=4 must not be slower than workers=1 x this
+
+
+# --------------------------------------------------------------------------
+# naive per-row baselines (what the compute path did before vkernels)
+# --------------------------------------------------------------------------
+
+def naive_dict_encode(col: Column):
+    arr = np.array([col.get_bytes(i) for i in range(col.length)])
+    uniq, codes = np.unique(arr, return_inverse=True)
+    return codes.astype(np.int32), uniq
+
+
+def naive_sort_keys(col: Column):
+    keys = np.array([col.get_bytes(i) for i in range(col.length)])
+    return np.argsort(keys, kind="stable")
+
+
+def naive_decode_dictionary(col: Column):
+    d = col.dictionary
+    codes = col.values
+    lens = (d.offsets[1:] - d.offsets[:-1])[codes]
+    new_off = np.zeros(len(codes) + 1, dtype=np.int64)
+    np.cumsum(lens, out=new_off[1:])
+    out = np.empty(int(new_off[-1]), dtype=np.uint8)
+    starts = d.offsets[:-1][codes]
+    for i in range(len(codes)):
+        out[new_off[i]:new_off[i + 1]] = d.values[starts[i]:starts[i] + lens[i]]
+    return new_off, out
+
+
+def naive_upper(col: Column):
+    bs = [col.get_bytes(i).decode("utf-8").upper().encode("utf-8")
+          for i in range(col.length)]
+    return Column.from_strings(bs)
+
+
+def naive_read_table(path: str, dict_columns=()):
+    """The pre-reader-pool decode: serial, one full-size intermediate
+    ``bytes`` per buffer, per-row dictionary encode."""
+    meta = zarquet.read_footer(path)
+    codec = meta.get("codec", "zstd")
+    fields, cols = [], []
+    from repro.core.arrow import ArrowType, Field, Schema
+    with open(path, "rb") as fh:
+        for cm in meta["columns"]:
+            bufs = {}
+            for bm in cm["buffers"]:
+                fh.seek(bm["off"])
+                blob = fh.read(bm["clen"])
+                out = alloc_aligned(bm["rlen"])
+                if codec == "zstd":
+                    raw = zstandard.ZstdDecompressor().decompress(
+                        blob, max_output_size=bm["rlen"])
+                else:
+                    raw = zlib.decompress(blob)
+                out[:] = np.frombuffer(raw, dtype=np.uint8)
+                bufs[bm["name"]] = out.view(np.dtype(bm["np"]))
+            t = ArrowType.from_json(cm["type"])
+            validity = bufs.get("validity")
+            if t.is_utf8:
+                col = Column.utf8(bufs["offsets"].view(np.int64),
+                                  bufs["values"].view(np.uint8), validity)
+                if cm["name"] in set(dict_columns):
+                    codes, uniq = naive_dict_encode(col)
+                    dic = Column.from_strings(list(uniq))
+                    col = Column.dictionary_encoded(codes, dic,
+                                                    validity=col.validity)
+            else:
+                col = Column(t, cm["nrows"],
+                             bufs["values"].view(np.dtype(t.np_dtype)),
+                             validity=validity)
+            fields.append(Field(cm["name"], col.type))
+            cols.append(col)
+    return Table.from_batch(Schema(fields), cols)
+
+
+# --------------------------------------------------------------------------
+# experiment 1: per-kernel micro benchmarks
+# --------------------------------------------------------------------------
+
+def _mixed_col(nbytes: int, seed: int = 0) -> Column:
+    rng = np.random.default_rng(seed)
+    strs, total = [], 0
+    while total < nbytes:
+        ln = int(rng.integers(0, 24))
+        strs.append(bytes(rng.integers(97, 123, size=ln, dtype=np.uint8)))
+        total += ln
+    return Column.from_strings(strs)
+
+
+def _bench_pair(name: str, rows: int, naive, fast, results: dict) -> None:
+    with timed() as tn:
+        naive()
+    with timed() as tf:
+        fast()
+    speedup = tn[1] / max(tf[1], 1e-9)
+    results["kernels"][name] = {"rows": rows, "naive_s": tn[1],
+                                "vectorized_s": tf[1], "speedup": speedup}
+    Csv.add(f"kernel_{name}_naive", tn[1], f"rows={rows}")
+    Csv.add(f"kernel_{name}_vectorized", tf[1], f"{speedup:.1f}x_faster")
+
+
+def bench_kernels_micro(results: dict) -> None:
+    size = gb(0.001) if SMOKE else gb(0.05)
+    fixed = zarquet.gen_str_table(1, size, str_len=16,
+                                  repeats=4).batches[0].column("s0")
+    mixed = _mixed_col(size)
+    _bench_pair("dict_encode_fixed", fixed.length,
+                lambda: naive_dict_encode(fixed),
+                lambda: vkernels.dict_encode_var(fixed.offsets, fixed.values),
+                results)
+    _bench_pair("dict_encode_mixed", mixed.length,
+                lambda: naive_dict_encode(mixed),
+                lambda: vkernels.dict_encode_var(mixed.offsets, mixed.values),
+                results)
+    _bench_pair("utf8_sort", mixed.length,
+                lambda: naive_sort_keys(mixed),
+                lambda: vkernels.sort_order_var(mixed.offsets, mixed.values),
+                results)
+    codes, uoff, uvals = vkernels.dict_encode_var(fixed.offsets, fixed.values)
+    dcol = Column.dictionary_encoded(codes, Column.utf8(uoff, uvals))
+    _bench_pair("decode_dictionary", dcol.length,
+                lambda: naive_decode_dictionary(dcol),
+                lambda: dcol.decode_dictionary(),
+                results)
+    # non-ASCII payload: forces the general (length-changing) upper path
+    rng = np.random.default_rng(1)
+    n = max(1, size // 8)
+    strs = ["straße" if r < 0.2 else "payload" for r in rng.random(n)]
+    ucol = Column.from_strings(strs)
+    _bench_pair("upper_non_ascii", ucol.length,
+                lambda: naive_upper(ucol),
+                lambda: vkernels.upper_var(ucol.offsets, ucol.values),
+                results)
+
+
+# --------------------------------------------------------------------------
+# experiment 2: zarquet cold decode
+# --------------------------------------------------------------------------
+
+def bench_zarquet_decode(results: dict, tmpdir: str) -> None:
+    size = gb(0.002) if SMOKE else gb(0.05)
+    t = zarquet.gen_str_table(2, size, str_len=16, repeats=4)
+    path = os.path.join(tmpdir, "decode.zq")
+    zarquet.write_table(path, t)
+    dict_cols = ("s0", "s1")
+    with timed() as tn:
+        naive_read_table(path, dict_columns=dict_cols)
+    with timed() as tf:
+        zarquet.read_table(path, dict_columns=dict_cols)
+    with timed() as tp:
+        zarquet.read_table(path)         # decode-only (no dict encode)
+    with timed() as ts:
+        zarquet.read_table(path, reader_threads=1)
+    results["zarquet_decode"] = {
+        "input_bytes": t.nbytes,
+        "dict_columns": list(dict_cols),
+        "naive_s": tn[1], "fast_s": tf[1],
+        "speedup": tn[1] / max(tf[1], 1e-9),
+        "plain_pool_s": tp[1], "plain_serial_s": ts[1],
+        "reader_threads": zarquet._default_readers(),
+    }
+    Csv.add("zarquet_cold_decode_naive", tn[1], f"bytes={t.nbytes}")
+    Csv.add("zarquet_cold_decode_fast", tf[1],
+            f"{tn[1] / max(tf[1], 1e-9):.1f}x_faster")
+    Csv.add("zarquet_plain_decode_pool", tp[1],
+            f"{ts[1] / max(tp[1], 1e-9):.2f}x_of_serial")
+
+
+# --------------------------------------------------------------------------
+# experiment 3: thread scaling on the BENCH_flight workload
+# --------------------------------------------------------------------------
+
+def encode_op(tables):
+    return ops.dict_encode(tables[0], ["s0"])
+
+
+def filter_op(tables):
+    t = tables[0]
+    mask = np.arange(t.num_rows) % 3 != 0
+    return ops.filter_rows(t, mask)
+
+
+def _scaling_run(workers: int, tables) -> float:
+    env = make_env(workers=workers, workers_mode="thread", decache=False,
+                   reader_threads=1)
+    est = int(tables[0].nbytes * 4)
+    paths = [write_source(env.tmpdir, f"src{i}.zq", t)
+             for i, t in enumerate(tables)]
+    dags = [DAG([
+        NodeSpec("load", source=p, est_mem=est),
+        NodeSpec("enc", fn=encode_op, deps=["load"], est_mem=est),
+        NodeSpec("filt", fn=filter_op, deps=["enc"], est_mem=est,
+                 keep_output=True),
+    ], name=f"job{i}") for i, p in enumerate(paths)]
+    with timed() as t:
+        env.ex.run(dags)
+    assert all(d.all_done() for d in dags)
+    env.close()
+    return t[1]
+
+
+def bench_thread_scaling(results: dict) -> None:
+    # even in smoke the scaling lane needs walls well past scheduler
+    # overhead (~tens of ms), or the assert measures noise, not scaling
+    size = max(gb(0.02), 2 << 20) if SMOKE else gb(0.1)
+    tables = [zarquet.gen_str_table(1, size, str_len=16, repeats=4, seed=i)
+              for i in range(N_DAGS)]
+    walls = {}
+    for w in (1, 2, 4):
+        # min of two reps: a real GIL inversion is systematic and fails
+        # both, while a missed worker wakeup / CI noise spike fails one
+        walls[w] = min(_scaling_run(w, tables) for _ in range(2))
+        results["thread_scaling"].append({"workers": w, "wall_s": walls[w]})
+        Csv.add(f"kernels_thread_workers{w}", walls[w],
+                f"{walls[w] / walls[1]:.2f}x_of_seq")
+    results["flight_inversion"] = {
+        "workers1_s": walls[1], "workers4_s": walls[4],
+        "ratio_w4_over_w1": walls[4] / walls[1],
+        "inversion_fixed": walls[4] <= walls[1] * SCALE_TOL,
+    }
+    if SMOKE and walls[4] > walls[1] * SCALE_TOL:
+        raise AssertionError(
+            f"thread-scaling inversion returned: workers=4 took "
+            f"{walls[4]:.3f}s vs workers=1 {walls[1]:.3f}s "
+            f"(> {SCALE_TOL}x) — per-row loops back on the compute path?")
+
+
+def main() -> None:
+    import tempfile
+    results = {"smoke": SMOKE, "kernels": {}, "thread_scaling": []}
+    tmpdir = tempfile.mkdtemp(prefix="zerrow-kernels-")
+    try:
+        bench_kernels_micro(results)
+        bench_zarquet_decode(results, tmpdir)
+        bench_thread_scaling(results)
+    finally:
+        import shutil
+        shutil.rmtree(tmpdir, ignore_errors=True)
+    if SMOKE:
+        print("# smoke: scaling sanity ok; BENCH_kernels.json left untouched")
+        return
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_kernels.json")
+    with open(out, "w") as fh:
+        json.dump(results, fh, indent=2)
+    inv = results["flight_inversion"]
+    print(f"# wrote {out}: dict-encode "
+          f"{results['kernels']['dict_encode_fixed']['speedup']:.1f}x, "
+          f"sort {results['kernels']['utf8_sort']['speedup']:.1f}x, "
+          f"decode {results['zarquet_decode']['speedup']:.1f}x; "
+          f"workers4/workers1 = {inv['ratio_w4_over_w1']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,12 @@ Data-plane subsystems (paper §4.2):
   sipc     — Shared IPC: reference-passing streams, IPC inspection,
              resharing, dictionary sharing
   zarquet  — on-disk compressed columnar source format (Parquet stand-in;
-             zstd with stdlib-zlib fallback, codec recorded per file)
+             zstd with stdlib-zlib fallback, codec recorded per file;
+             reader-pool parallel, copy-free decompression into
+             allocator-provided buffers)
+  vkernels — vectorized columnar kernels: GIL-releasing numpy bulk ops
+             over raw (offsets, values, validity) buffers (var-length
+             gather, dictionary encode, utf8 sort keys, bulk upper)
   decache  — shared deserialization cache
   dag      — DAGs, node lifecycle state machine, sandboxes, share wrapper
 
@@ -39,6 +44,7 @@ Register a new policy by subclassing ``EvictionPolicy`` (decorate with
 and selecting it by name in ``RMConfig``.
 """
 
+from . import vkernels
 from .arrow import (ArrowType, Column, Field, RecordBatch, Schema, Table,
                     BOOL, FLOAT32, FLOAT64, INT8, INT16, INT32, INT64,
                     UINT8, UTF8, dict_of, pack_validity, unpack_validity)
@@ -80,5 +86,5 @@ __all__ = [
     "AddressMap", "BufRef", "SipcMessage", "SipcReader", "SipcWriter",
     "FlightClient", "FlightError", "FlightServer", "FlightWorkerError",
     "FlightWorkerLost", "FlightWorkerPool", "WireError", "decode_message",
-    "encode_message", "frame_refs",
+    "encode_message", "frame_refs", "vkernels",
 ]

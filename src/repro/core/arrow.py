@@ -22,6 +22,9 @@ from typing import Dict, Iterable, List, Optional, Sequence, Union
 
 import numpy as np
 
+from . import vkernels
+from .vkernels import ranges as _ranges  # noqa: F401  (back-compat export)
+
 # --------------------------------------------------------------------------
 # types
 # --------------------------------------------------------------------------
@@ -228,16 +231,8 @@ class Column:
         d = self.dictionary
         if d.type.is_primitive:
             return Column.primitive(d.values[self.values], self.validity)
-        # utf8 dictionary: gather strings via offsets
-        codes = self.values
-        lens = (d.offsets[1:] - d.offsets[:-1])[codes]
-        new_off = np.zeros(len(codes) + 1, dtype=np.int64)
-        np.cumsum(lens, out=new_off[1:])
-        out = np.empty(int(new_off[-1]), dtype=np.uint8)
-        starts = d.offsets[:-1][codes]
-        for i in range(len(codes)):   # hot loop avoided in kernels/take_gather
-            out[new_off[i]:new_off[i + 1]] = \
-                d.values[starts[i]:starts[i] + lens[i]]
+        # utf8 dictionary: vectorized var-length gather (vkernels.take_var)
+        new_off, out = vkernels.take_var(d.offsets, d.values, self.values)
         return Column.utf8(new_off, out, self.validity)
 
     # -- slicing (pure views / lazy subranges; the reshare-friendly path) ---
@@ -276,13 +271,9 @@ class Column:
             return Column(self.type, len(indices), self.values[indices],
                           validity=validity, dictionary=self.dictionary)
         if self.type.is_utf8:
-            lens = (self.offsets[1:] - self.offsets[:-1])[indices]
-            new_off = np.zeros(len(indices) + 1, dtype=np.int64)
-            np.cumsum(lens, out=new_off[1:])
-            out = np.empty(int(new_off[-1]), dtype=np.uint8)
-            starts = self.offsets[:-1][indices]
             # vectorized gather of variable-length rows
-            _gather_var(self.values, starts, lens, new_off, out)
+            new_off, out = vkernels.take_var(self.offsets, self.values,
+                                             indices)
             return Column.utf8(new_off, out, validity)
         return Column(self.type, len(indices), self.values[indices],
                       validity=validity)
@@ -301,10 +292,11 @@ class Column:
         if self._kindof() != other._kindof():
             return False
         if self._kindof() == "utf8":
-            for i in np.nonzero(ms)[0]:
-                if self._get_logical_bytes(int(i)) != other._get_logical_bytes(int(i)):
-                    return False
-            return True
+            idx = np.nonzero(ms)[0]
+            off_a, val_a = self._logical_var(idx)
+            off_b, val_b = other._logical_var(idx)
+            return bool(np.array_equal(off_a, off_b) and
+                        np.array_equal(val_a, val_b))
         return bool(np.array_equal(a[ms], b[mo]))
 
     def _kindof(self) -> str:
@@ -324,24 +316,14 @@ class Column:
         assert self.type.is_dict and self.dictionary.type.is_utf8
         return self.dictionary.get_bytes(int(self.values[i]))
 
-
-def _gather_var(values: np.ndarray, starts: np.ndarray, lens: np.ndarray,
-                new_off: np.ndarray, out: np.ndarray) -> None:
-    """Gather variable-length rows: out[new_off[i]:new_off[i+1]] =
-    values[starts[i]:starts[i]+lens[i]] — vectorized with repeat/arange."""
-    if len(starts) == 0 or out.nbytes == 0:
-        return
-    idx = np.repeat(starts, lens) + _ranges(lens)
-    np.take(values, idx, out=out)
-
-
-def _ranges(lens: np.ndarray) -> np.ndarray:
-    """[0..lens[0]), [0..lens[1]), ... concatenated."""
-    total = int(lens.sum())
-    if total == 0:
-        return np.empty(0, dtype=np.int64)
-    excl = np.cumsum(lens) - lens           # exclusive prefix sums
-    return np.arange(total, dtype=np.int64) - np.repeat(excl, lens)
+    def _logical_var(self, indices: np.ndarray):
+        """(offsets, flat bytes) of the selected rows' logical byte
+        strings — one var-gather, no per-row Python."""
+        if self.type.is_utf8:
+            return vkernels.take_var(self.offsets, self.values, indices)
+        assert self.type.is_dict and self.dictionary.type.is_utf8
+        d = self.dictionary
+        return vkernels.take_var(d.offsets, d.values, self.values[indices])
 
 
 # --------------------------------------------------------------------------

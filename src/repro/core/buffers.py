@@ -695,10 +695,11 @@ class LazyBuf:
     """
 
     __slots__ = ("store", "file_id", "offset", "length", "np_dtype",
-                 "_arr", "on_force")
+                 "_arr", "on_force", "fault_lock")
 
     def __init__(self, store: "BufferStore", file_id: int, offset: int,
-                 length: int, np_dtype: str = "uint8", on_force=None):
+                 length: int, np_dtype: str = "uint8", on_force=None,
+                 fault_lock=None):
         self.store = store
         self.file_id = file_id
         self.offset = offset
@@ -706,6 +707,10 @@ class LazyBuf:
         self.np_dtype = np_dtype
         self._arr: Optional[np.ndarray] = None
         self.on_force = on_force
+        # executor critical-section guard: when user code running *outside*
+        # the RM lock faults this mapping, the store-mutating read re-enters
+        # the lock (see sched/executor.py "Concurrency model")
+        self.fault_lock = fault_lock
 
     @property
     def forced(self) -> bool:
@@ -717,18 +722,29 @@ class LazyBuf:
 
     def force(self) -> np.ndarray:
         if self._arr is None:
-            raw = self.store.get(self.file_id).read(self.offset, self.length)
-            self._arr = raw.view(np.dtype(self.np_dtype))
-            if self.on_force is not None:
-                self.on_force(raw, self.file_id, self.offset)
+            if self.fault_lock is not None:
+                with self.fault_lock:
+                    self._force_locked()
+            else:
+                self._force_locked()
         return self._arr
+
+    def _force_locked(self) -> None:
+        if self._arr is not None:
+            return
+        raw = self.store.get(self.file_id).read(self.offset, self.length)
+        arr = raw.view(np.dtype(self.np_dtype))
+        if self.on_force is not None:
+            self.on_force(raw, self.file_id, self.offset)
+        self._arr = arr
 
     def subrange(self, byte_off: int, byte_len: int,
                  np_dtype: Optional[str] = None) -> "LazyBuf":
         """Lazy slice: adjust provenance, no fault."""
         assert byte_off + byte_len <= self.length
         return LazyBuf(self.store, self.file_id, self.offset + byte_off,
-                       byte_len, np_dtype or self.np_dtype, self.on_force)
+                       byte_len, np_dtype or self.np_dtype, self.on_force,
+                       fault_lock=self.fault_lock)
 
 
 def force_buf(b) -> np.ndarray:

@@ -201,11 +201,24 @@ class Sandbox:
 
     # -- the share wrapper ---------------------------------------------------
     def run(self, fn: UserFn, inputs: List[SipcMessage],
-            label: str = "") -> SipcMessage:
-        reader = SipcReader(self.store, self.mode, record_map=self.input_map)
-        tables = [reader.read_table(m) for m in inputs]
+            label: str = "", lock=None) -> SipcMessage:
+        """SIPC-read inputs, invoke the user function, SIPC-write the
+        result.  With ``lock`` (the executor's RM critical section), the
+        store-mutating phases — input reads, output write, and any
+        LazyBuf fault the user code triggers — run *inside* the lock
+        while the user function itself runs outside it, so vectorized
+        (GIL-releasing) compute overlaps across executor workers."""
+        reader = SipcReader(self.store, self.mode, record_map=self.input_map,
+                            fault_lock=lock)
+        if lock is None:
+            tables = [reader.read_table(m) for m in inputs]
+            out_table = fn(tables)
+            return self.write_output(out_table, label)
+        with lock:
+            tables = [reader.read_table(m) for m in inputs]
         out_table = fn(tables)
-        return self.write_output(out_table, label)
+        with lock:
+            return self.write_output(out_table, label)
 
     def write_output(self, table: Table, label: str = "") -> SipcMessage:
         writer = SipcWriter(self.store, self.kz, self.cgroup, self.mode,

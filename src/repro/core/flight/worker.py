@@ -101,7 +101,8 @@ def _handle(req, store, kz, Sandbox, zarquet) -> Dict[str, Any]:
     elif req["op"] == "load":
         table = zarquet.read_table(req["source"],
                                    dict_columns=tuple(req["dict_columns"]),
-                                   on_buffer=sb.register_anon)
+                                   on_buffer=sb.register_anon,
+                                   reader_threads=req.get("reader_threads"))
         msg = sb.write_output(table, label=label)
     else:
         raise ValueError(f"unknown worker op {req['op']!r}")

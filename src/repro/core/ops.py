@@ -21,6 +21,7 @@ from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
 
+from . import vkernels
 from .arrow import (Column, Field, RecordBatch, Schema, Table, UTF8,
                     pack_validity, type_for_np)
 
@@ -114,13 +115,11 @@ def sort_by(table: Table, name: str, descending: bool = False) -> Table:
     t = table.combine()
     col = t.batches[0].column(name)
     if col.type.is_utf8:
-        keys = np.array([col.get_bytes(i) for i in range(col.length)])
-        order = np.argsort(keys, kind="stable")
+        # direct stable bytes sort replaces the per-row bytes-object keys
+        order = vkernels.sort_order_var(col.offsets, col.values)
     elif col.type.is_dict and col.dictionary.type.is_utf8:
         d = col.dictionary
-        dk = np.array([d.get_bytes(i) for i in range(d.length)])
-        rank = np.empty(d.length, np.int64)
-        rank[np.argsort(dk, kind="stable")] = np.arange(d.length)
+        rank = vkernels.sort_keys_var(d.offsets, d.values)
         order = np.argsort(rank[col.values], kind="stable")
     else:
         order = np.argsort(col._logical(), kind="stable")
@@ -162,9 +161,8 @@ def upper(table: Table, name: str, assume_ascii: Optional[bool] = None) -> Table
                 new = Column(UTF8, col.length, vals,
                              offsets=col.offsets - lo, validity=col.validity)
         else:
-            bs = [col.get_bytes(i).decode("utf-8").upper().encode("utf-8")
-                  for i in range(col.length)]
-            new = Column.from_strings(bs, validity=col.validity)
+            new_off, vals = vkernels.upper_var(col.offsets, col.values)
+            new = Column.utf8(new_off, vals, validity=col.validity)
         cols = list(b.columns)
         cols[j] = new
         out.append(RecordBatch(b.schema, cols))
@@ -190,9 +188,9 @@ def add_columns_compute(table: Table, a: str, b: str, out_name: str,
                         repeat: int = 1) -> Table:
     """The Fig 7/10 'column-adding function': out = f(col_a, col_b) with a
     tunable amount of compute (``repeat`` additions)."""
-    t0 = table
-    ca = t0.combine().batches[0].column(a).to_numpy()
-    cb = t0.combine().batches[0].column(b).to_numpy()
+    t0 = table.combine()
+    ca = t0.batches[0].column(a).to_numpy()
+    cb = t0.batches[0].column(b).to_numpy()
     acc = ca + cb
     for _ in range(repeat - 1):
         acc = acc + cb
@@ -207,10 +205,10 @@ def dict_encode(table: Table, names: Sequence[str]) -> Table:
         cols = []
         for f, c in zip(b.schema.fields, b.columns):
             if f.name in name_set and c.type.is_utf8:
-                arr = np.array([c.get_bytes(i) for i in range(c.length)])
-                uniq, codes = np.unique(arr, return_inverse=True)
-                dic = Column.from_strings(list(uniq))
-                c = Column.dictionary_encoded(codes.astype(np.int32), dic,
+                codes, uoff, uvals = vkernels.dict_encode_var(c.offsets,
+                                                              c.values)
+                dic = Column.utf8(uoff, uvals)
+                c = Column.dictionary_encoded(codes, dic,
                                               validity=c.validity)
             cols.append(c)
         schema = Schema([Field(f.name, c.type)

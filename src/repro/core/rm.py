@@ -58,6 +58,12 @@ class RMConfig:
     #                         # 'depth' (paper: closest-to-finishing first),
     #                         # 'breadth', 'fair', 'deadline'
     workers: int = 1          # executor worker-pool size (1 = sequential)
+    reader_threads: Optional[int] = None   # per-loader zarquet reader pool:
+    #                                      # fan column-chunk decompression
+    #                                      # across this many threads inside
+    #                                      # one read_table (None = auto:
+    #                                      # ZERROW_READER_THREADS env, else
+    #                                      # min(4, cpu count); 1 = serial)
     workers_mode: str = "thread"   # 'thread' (in-process pool) or 'process'
     #                              # (Flight: ops in spawned OS processes;
     #                              # needs BufferStore(backing='file'))

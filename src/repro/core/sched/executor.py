@@ -20,6 +20,11 @@ Concurrency model (``workers > 1``):
     drops the GIL (zstd/zlib), so deserialization overlaps across workers
     — the parallelism the paper notes in Fig 2.  Each decompressed buffer
     re-enters the lock briefly to register as sandbox anonymous memory.
+  * Compute nodes release the lock around the user function: SIPC reads
+    the inputs under the lock, the fn runs outside it (the vkernels bulk
+    numpy ops release the GIL), and the SIPC output write re-enters it.
+    A LazyBuf the fn faults mid-compute re-acquires the lock for the
+    store-mutating read (``LazyBuf.fault_lock``).
   * Loads are single-flight per DeCache key: a worker that finds another
     worker already deserializing the same ``(source, dict_columns)`` waits
     and attaches to the cached entry instead of duplicating the load.
@@ -330,12 +335,13 @@ class WorkerPoolExecutor:
 
     def _compute_output(self, st: NodeState, sb: Sandbox, inputs):
         """Run the node's user function; override point for process-mode
-        execution.  Thread mode: user code reads inputs (may fault swapped
-        extents) and writes output through SIPC — all store-mutating, so
-        inside the critical section; loader decompression is where the
-        thread-pool parallelism is."""
-        with self._lock:
-            return sb.run(st.spec.fn, inputs, label=st.name)
+        execution.  Thread mode: the SIPC input reads, the output write
+        and any LazyBuf fault user code triggers are store-mutating and
+        run inside the critical section (``lock=``), but the user
+        function itself runs outside it — vectorized kernels release the
+        GIL, so computes overlap across workers alongside loader
+        decompression."""
+        return sb.run(st.spec.fn, inputs, label=st.name, lock=self._lock)
 
     def _run_loader(self, st: NodeState) -> None:
         key = st.decache_key()
@@ -385,7 +391,8 @@ class WorkerPoolExecutor:
 
         table = zarquet.read_table(
             st.spec.source, dict_columns=st.spec.dict_columns,
-            on_buffer=on_buffer)
+            on_buffer=on_buffer,
+            reader_threads=getattr(self.rm.cfg, "reader_threads", None))
         with self._lock:
             return sb.write_output(table, label=st.name)
 
@@ -567,6 +574,8 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
     def _load_output(self, st: NodeState, sb: Sandbox):
         reply = self._request(
             {"op": "load", "label": st.name, "source": st.spec.source,
-             "dict_columns": tuple(st.spec.dict_columns)})
+             "dict_columns": tuple(st.spec.dict_columns),
+             "reader_threads": getattr(self.rm.cfg, "reader_threads",
+                                       None)})
         with self._lock:
             return self._adopt_reply(reply, st, sb)

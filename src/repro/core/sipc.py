@@ -261,11 +261,15 @@ class SipcWriter:
 
 class SipcReader:
     def __init__(self, store: BufferStore, mode: str = "zero",
-                 record_map: Optional[AddressMap] = None):
+                 record_map: Optional[AddressMap] = None,
+                 fault_lock=None):
         assert mode in MODES, mode
         self.store = store
         self.mode = mode
         self.map = record_map if record_map is not None else AddressMap()
+        # lock that LazyBuf faults must hold (the executor critical
+        # section) when user code runs outside it
+        self.fault_lock = fault_lock
 
     def read_table(self, msg: SipcMessage) -> Table:
         schema = Schema.from_json_bytes(msg.schema_bytes)
@@ -299,7 +303,8 @@ class SipcReader:
         # lazy mapping: data faults in only when compute touches it; on
         # fault, record the mapped range for later resharing by address
         return LazyBuf(self.store, ref.file_id, ref.offset, ref.length,
-                       np_dtype, on_force=self._on_force)
+                       np_dtype, on_force=self._on_force,
+                       fault_lock=self.fault_lock)
 
     def _on_force(self, raw: np.ndarray, file_id: int, offset: int) -> None:
         self.map.add(raw, file_id, offset)

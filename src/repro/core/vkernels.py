@@ -1,0 +1,289 @@
+"""Vectorized columnar kernels — GIL-releasing bulk ops over Arrow buffers.
+
+Every kernel here works directly on the raw (offsets, values, validity)
+buffers of the Arrow computational format and replaces a per-row Python
+loop somewhere in the compute path:
+
+  ``ranges`` / ``gather_var`` / ``take_var``
+      variable-length row materializer: gathers N byte-ranges in three
+      numpy bulk ops (repeat / arange / take).  Used by ``Column.take``,
+      ``Column.decode_dictionary`` and the utf8 ``Column.equals`` branch.
+  ``dict_encode_var``
+      vectorized dictionary-encode of a variable-length byte column.
+      Fixed-width fast path (all rows the same length, as produced by
+      ``zarquet.gen_str_table``): rows are viewed as an ``np.void``
+      record array and deduplicated with one ``np.unique`` (memcmp order
+      == bytes-lexicographic order for equal-width rows).  General path:
+      rows are zero-padded into an (n, max_len) byte matrix and sorted
+      lexicographically with ``np.lexsort`` using the true length as the
+      final tiebreaker — zero-padding plus a length tiebreak reproduces
+      bytes comparison exactly (a prefix sorts before its extensions).
+      Replaces the object-array loops in ``ops.dict_encode``,
+      ``ops.sort_by`` and ``zarquet._dict_encode_col``.  Unlike the old
+      ``np.array([... bytes ...])`` path (numpy 'S' dtype), trailing NUL
+      bytes are significant, matching real bytes equality.
+  ``sort_keys_var``
+      utf8 sort-key builder: dense int32 lexicographic ranks (equal
+      strings share a rank), so ``np.argsort(keys, kind='stable')``
+      reproduces a stable per-row bytes sort.
+  ``upper_var``
+      bulk non-ASCII utf8 upper-case.  One whole-buffer decode, a
+      per-*alphabet* (not per-row) uppercase table, then the var-gather
+      kernel re-assembles the output bytes; row boundaries are carried
+      through as character offsets.  Handles length-changing mappings
+      ('ß' -> 'SS') without touching Python per row.
+
+Kernels take and return plain numpy arrays (no Column/Table types), so
+this module sits below ``arrow.py`` with no import cycle, and the big
+array ops release the GIL — which is what lets the worker-pool executor
+actually overlap compute-adjacent work across threads (see
+docs/ARCHITECTURE.md "Compute kernels & the GIL").
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+__all__ = [
+    "ranges", "gather_var", "take_var", "dict_encode_var",
+    "sort_keys_var", "sort_order_var", "upper_var",
+]
+
+
+# --------------------------------------------------------------------------
+# variable-length gather
+# --------------------------------------------------------------------------
+
+def ranges(lens: np.ndarray) -> np.ndarray:
+    """[0..lens[0]), [0..lens[1]), ... concatenated."""
+    total = int(lens.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64)
+    excl = np.cumsum(lens) - lens           # exclusive prefix sums
+    return np.arange(total, dtype=np.int64) - np.repeat(excl, lens)
+
+
+def gather_var(values: np.ndarray, starts: np.ndarray, lens: np.ndarray
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Gather ``len(starts)`` byte-ranges out of ``values``.
+
+    Returns ``(new_offsets, out)`` with
+    ``out[new_offsets[i]:new_offsets[i+1]] == values[starts[i]:starts[i]+lens[i]]``.
+    """
+    new_off = np.zeros(len(starts) + 1, dtype=np.int64)
+    np.cumsum(lens, out=new_off[1:])
+    out = np.empty(int(new_off[-1]), dtype=np.uint8)
+    if len(starts) and out.nbytes:
+        idx = np.repeat(starts, lens) + ranges(lens)
+        np.take(values, idx, out=out)
+    return new_off, out
+
+
+def take_var(offsets: np.ndarray, values: np.ndarray, indices: np.ndarray
+             ) -> Tuple[np.ndarray, np.ndarray]:
+    """Row-gather on a var-length column: select rows ``indices`` from
+    ``(offsets, values)``.  Returns ``(new_offsets, new_values)``."""
+    lens = (offsets[1:] - offsets[:-1])[indices]
+    starts = offsets[:-1][indices]
+    return gather_var(values, starts, lens)
+
+
+# --------------------------------------------------------------------------
+# dictionary encode
+# --------------------------------------------------------------------------
+
+def _empty_encode(n: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    if n == 0:
+        return (np.empty(0, np.int32), np.zeros(1, np.int64),
+                np.empty(0, np.uint8))
+    # n rows, all of them the empty string: one dictionary entry
+    return (np.zeros(n, np.int32), np.zeros(2, np.int64),
+            np.empty(0, np.uint8))
+
+
+#: the padded matrix costs ~2 * n_rows * pad(max_len) bytes; on a
+#: length-skewed column (many short rows, one huge outlier) that can
+#: dwarf the actual data.  Past BOTH limits the kernels fall back to the
+#: per-row path rather than OOM: padded bytes > _SKEW_RATIO x data bytes
+#: and > _SKEW_FLOOR absolute.
+_SKEW_RATIO = 32
+_SKEW_FLOOR = 64 << 20
+
+
+def _skewed(n: int, lens: np.ndarray) -> bool:
+    padded = n * (-(-int(lens.max()) // 8) * 8)
+    return padded > _SKEW_FLOOR and \
+        padded > _SKEW_RATIO * max(int(lens.sum()), 1)
+
+
+def _row_bytes(offsets: np.ndarray, values: np.ndarray) -> list:
+    """Per-row bytes objects — the skew-fallback reader."""
+    return [values[offsets[i]:offsets[i + 1]].tobytes()
+            for i in range(len(offsets) - 1)]
+
+
+def _padded_chunks(offsets: np.ndarray, values: np.ndarray,
+                   lens: np.ndarray) -> np.ndarray:
+    """Rows zero-padded to a multiple of 8 bytes and packed into
+    big-endian uint64 chunks: chunk-tuple comparison == memcmp of the
+    padded bytes == bytes-lexicographic order, except that rows
+    differing only in trailing NUL padding tie (the caller breaks ties
+    with the true length)."""
+    n = len(offsets) - 1
+    lo, hi = int(offsets[0]), int(offsets[-1])
+    window = np.ascontiguousarray(values[lo:hi])
+    w = int(lens.max())
+    w8 = -(-w // 8) * 8
+    mat = np.zeros((n, w8), dtype=np.uint8)
+    # rows are adjacent in the values window (offsets are cumulative), so
+    # the window itself is already the concatenated row bytes
+    if int(lens.min()) == w:
+        mat[:, :w] = window.reshape(n, w)
+    else:
+        mat[np.repeat(np.arange(n, dtype=np.int64), lens),
+            ranges(lens)] = window
+    return mat.view(">u8").astype(np.uint64)    # native ints, same order
+
+
+def _lex_order(chunks: np.ndarray, lens: np.ndarray,
+               tiebreak: bool) -> np.ndarray:
+    """Stable bytes-lexicographic sort permutation from padded chunks;
+    ~w/8 integer sort keys instead of w byte keys."""
+    keys = [chunks[:, j] for j in range(chunks.shape[1] - 1, -1, -1)]
+    if tiebreak:
+        keys = [lens] + keys
+    return np.lexsort(keys)
+
+
+def dict_encode_var(offsets: np.ndarray, values: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Dictionary-encode a var-length byte column.
+
+    Returns ``(codes int32, uniq_offsets int64, uniq_values uint8)`` where
+    the unique values are in bytes-lexicographic order and
+    ``uniq[codes[i]] == row i`` — exactly ``np.unique(rows,
+    return_inverse=True)`` over the row byte-strings, without building a
+    Python object per row.
+    """
+    offsets = np.asarray(offsets)
+    n = len(offsets) - 1
+    lens = offsets[1:] - offsets[:-1]
+    if n == 0 or int(lens.max(initial=0)) == 0:
+        return _empty_encode(n)
+    lo, hi = int(offsets[0]), int(offsets[-1])
+    window = values[lo:hi]
+
+    if int(lens.min()) == int(lens.max()):
+        # fixed-width fast path: rows as an np.void record array; memcmp
+        # order == lexicographic order at equal width — one np.unique
+        w = int(lens[0])
+        mat = np.ascontiguousarray(window).reshape(n, w)
+        rows = mat.view(np.dtype((np.void, w))).ravel()
+        uniq, codes = np.unique(rows, return_inverse=True)
+        uvals = uniq.view(np.uint8).reshape(len(uniq), w).reshape(-1).copy()
+        uoff = np.arange(0, (len(uniq) + 1) * w, w, dtype=np.int64)
+        return codes.astype(np.int32), uoff, uvals
+
+    if _skewed(n, lens):
+        # length-skewed column: the padded matrix would dwarf the data
+        rows = _row_bytes(offsets, values)
+        uniq = sorted(set(rows))
+        index = {s: i for i, s in enumerate(uniq)}
+        codes = np.fromiter((index[r] for r in rows), dtype=np.int32,
+                            count=n)
+        ulens = np.fromiter((len(u) for u in uniq), dtype=np.int64,
+                            count=len(uniq))
+        uoff = np.zeros(len(uniq) + 1, dtype=np.int64)
+        np.cumsum(ulens, out=uoff[1:])
+        uvals = np.frombuffer(b"".join(uniq), dtype=np.uint8)
+        return codes, uoff, uvals
+    # general path: padded big-endian chunks, stable lexicographic sort
+    # (prefixes sort before extensions; true length breaks pad ties)
+    chunks = _padded_chunks(offsets, values, lens)
+    order = _lex_order(chunks, lens, tiebreak=True)
+    schunks, slens = chunks[order], lens[order]
+    new_group = np.empty(n, dtype=bool)
+    new_group[0] = True
+    new_group[1:] = (schunks[1:] != schunks[:-1]).any(axis=1) | \
+                    (slens[1:] != slens[:-1])
+    group = np.cumsum(new_group) - 1
+    codes = np.empty(n, dtype=np.int32)
+    codes[order] = group.astype(np.int32)
+    firsts = order[new_group]           # representative row per unique
+    uoff, uvals = gather_var(values, offsets[:-1][firsts], lens[firsts])
+    return codes, uoff, uvals
+
+
+def sort_keys_var(offsets: np.ndarray, values: np.ndarray) -> np.ndarray:
+    """Dense int32 lexicographic ranks of a var-length byte column:
+    ``np.argsort(sort_keys_var(...), kind='stable')`` == a stable sort by
+    row bytes.  Use for *rank* lookups (e.g. dictionary-rank sorting);
+    for a direct row sort, ``sort_order_var`` skips the second argsort."""
+    codes, _, _ = dict_encode_var(offsets, values)
+    return codes
+
+
+def sort_order_var(offsets: np.ndarray, values: np.ndarray) -> np.ndarray:
+    """Stable bytes-lexicographic sort permutation of a var-length byte
+    column — one lexsort over packed chunks, no per-row keys and no
+    second argsort over ranks."""
+    offsets = np.asarray(offsets)
+    n = len(offsets) - 1
+    lens = offsets[1:] - offsets[:-1]
+    if n == 0 or int(lens.max(initial=0)) == 0:
+        return np.arange(n, dtype=np.int64)
+    if _skewed(n, lens):
+        return np.argsort(np.array(_row_bytes(offsets, values),
+                                   dtype=object), kind="stable")
+    chunks = _padded_chunks(offsets, values, lens)
+    fixed = int(lens.min()) == int(lens.max())
+    return _lex_order(chunks, lens, tiebreak=not fixed)
+
+
+# --------------------------------------------------------------------------
+# bulk utf8 upper-case
+# --------------------------------------------------------------------------
+
+def upper_var(offsets: np.ndarray, values: np.ndarray
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    """Upper-case every row of a utf8 column in bulk.
+
+    Handles the general (non-ASCII) case where byte lengths change
+    ('ß' -> 'SS'): the whole values window is decoded once, the uppercase
+    mapping is computed per *unique code point* (alphabet-sized, not
+    row-sized), and the output bytes are re-assembled with the var-gather
+    kernel.  Returns ``(new_offsets, new_values)`` with zero-based
+    offsets.  Raises ``UnicodeDecodeError`` on invalid utf8, like the
+    per-row decode it replaces.
+    """
+    offsets = np.asarray(offsets)
+    n = len(offsets) - 1
+    lo, hi = int(offsets[0]), int(offsets[-1])
+    window = np.ascontiguousarray(values[lo:hi])
+    if window.size == 0:
+        return offsets - lo, np.empty(0, np.uint8)
+    text = window.tobytes().decode("utf-8")
+    cps = np.frombuffer(text.encode("utf-32-le"), dtype=np.uint32)
+    # character index of every byte -> row boundaries in character space
+    is_start = (window & 0xC0) != 0x80
+    nchars = np.zeros(len(window) + 1, dtype=np.int64)
+    np.cumsum(is_start, out=nchars[1:])
+    char_off = nchars[offsets - lo]               # (n+1,) char boundaries
+    # per-unique-codepoint uppercase expansion (alphabet-sized loop)
+    uniq_cp, inv = np.unique(cps, return_inverse=True)
+    upper_bytes = [chr(int(c)).upper().encode("utf-8") for c in uniq_cp]
+    ulens = np.fromiter((len(b) for b in upper_bytes), dtype=np.int64,
+                        count=len(upper_bytes))
+    uoff = np.zeros(len(upper_bytes) + 1, dtype=np.int64)
+    np.cumsum(ulens, out=uoff[1:])
+    uvals = np.frombuffer(b"".join(upper_bytes), dtype=np.uint8) \
+        if upper_bytes else np.empty(0, np.uint8)
+    # per-input-character output lengths -> new row offsets + one gather
+    clens = ulens[inv]
+    ccum = np.zeros(len(cps) + 1, dtype=np.int64)
+    np.cumsum(clens, out=ccum[1:])
+    new_off = ccum[char_off]
+    _, out = gather_var(uvals, uoff[:-1][inv], clens)
+    return new_off, out

@@ -72,6 +72,10 @@ class PipelineConfig:
     vocab: int = 257            # bytes + PAD
     workers: int = 1            # sched worker-pool size: >1 overlaps shard
     #                           # decompression across loader nodes
+    reader_threads: Optional[int] = None   # per-shard zarquet reader pool:
+    #                                      # column-chunk decompression
+    #                                      # fan-out inside one load (None =
+    #                                      # auto; 1 = serial)
     workers_mode: str = "thread"   # 'process': loader + pack run in
     #                              # spawned OS processes over the Flight
     #                              # data plane (compute scales past the
@@ -100,6 +104,7 @@ class ZerrowDataPipeline:
                                  policy="adaptive",
                                  workers=cfg.workers,
                                  workers_mode=cfg.workers_mode,
+                                 reader_threads=cfg.reader_threads,
                                  cache_root=cfg.cache_root))
         self.ex = make_executor(self.store, self.rm, workers=cfg.workers)
         self._owned_msgs: List = []

@@ -49,6 +49,9 @@ def main():
                     choices=("thread", "process"),
                     help="run prompt-shard DAG nodes in threads or in "
                          "spawned Flight worker processes")
+    ap.add_argument("--reader-threads", type=int, default=None,
+                    help="zarquet reader-pool width inside each shard "
+                         "load (default auto; 1 = serial)")
     ap.add_argument("--cache-root", default=None,
                     help="persistent content-addressed cache dir: prompt-"
                          "shard loads publish under node fingerprints and "
@@ -73,6 +76,7 @@ def main():
         source = ZerrowPromptSource(paths, batch=a.batch,
                                     max_new=a.max_new, workers=a.workers,
                                     workers_mode=a.workers_mode,
+                                    reader_threads=a.reader_threads,
                                     cache_root=a.cache_root,
                                     max_prompt_len=a.max_seq // 2)
         batches = source.batches()

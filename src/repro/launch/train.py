@@ -33,7 +33,7 @@ def train_loop(arch_name: str, *, steps: int = 100, batch: int = 8,
                data_dir: str = None, lr: float = 1e-3,
                log_every: int = 10, resume: bool = False,
                data_workers: int = 1, workers_mode: str = "thread",
-               cache_root: str = None):
+               reader_threads: int = None, cache_root: str = None):
     arch = get_arch(arch_name)
     if smoke:
         arch = smoke_variant(arch)
@@ -48,7 +48,8 @@ def train_loop(arch_name: str, *, steps: int = 100, batch: int = 8,
                     for f in os.listdir(data_dir) if f.endswith(".zq"))
     pipe = ZerrowDataPipeline(shards, PipelineConfig(
         batch=batch, seq_len=seq_len, workers=data_workers,
-        workers_mode=workers_mode, cache_root=cache_root))
+        workers_mode=workers_mode, reader_threads=reader_threads,
+        cache_root=cache_root))
 
     state = init_state(api, jax.random.key(0))
     store = None
@@ -110,6 +111,10 @@ def main():
                     help="run pipeline DAG nodes in threads or in spawned "
                          "Flight worker processes (tokenize/pack scale "
                          "past the GIL)")
+    ap.add_argument("--reader-threads", type=int, default=None,
+                    help="zarquet reader-pool width: fan column-chunk "
+                         "decompression across this many threads inside "
+                         "each shard load (default auto; 1 = serial)")
     ap.add_argument("--cache-root", default=None,
                     help="persistent content-addressed cache dir: packed "
                          "shards publish under node fingerprints and "
@@ -119,7 +124,8 @@ def main():
     train_loop(a.arch, steps=a.steps, batch=a.batch, seq_len=a.seq_len,
                smoke=a.smoke, ckpt_dir=a.ckpt_dir, resume=a.resume,
                lr=a.lr, data_workers=a.data_workers,
-               workers_mode=a.workers_mode, cache_root=a.cache_root)
+               workers_mode=a.workers_mode,
+               reader_threads=a.reader_threads, cache_root=a.cache_root)
 
 
 if __name__ == "__main__":

@@ -71,6 +71,7 @@ class ZerrowPromptSource:
     def __init__(self, shard_paths: List[str], *, batch: int,
                  max_new: int = 16, workers: int = 1,
                  workers_mode: str = "thread",
+                 reader_threads: Optional[int] = None,
                  max_prompt_len: Optional[int] = None,
                  memory_limit: Optional[int] = None,
                  cache_root: Optional[str] = None,
@@ -87,6 +88,7 @@ class ZerrowPromptSource:
             self.store, RMConfig(memory_limit=memory_limit,
                                  workers=workers,
                                  workers_mode=workers_mode,
+                                 reader_threads=reader_threads,
                                  cache_root=cache_root))
         self.ex = make_executor(self.store, self.rm, workers=workers)
 

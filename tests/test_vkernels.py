@@ -1,0 +1,383 @@
+"""Property suite: every vectorized kernel is bit-identical to a naive
+per-row reference on seeded random tables — mixed string lengths, null
+runs, empty strings, non-ASCII ('ß' -> 'SS' changes byte length),
+zero-row columns and dict columns."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import arrow as A
+from repro.core import ops, vkernels as vk, zarquet
+
+MIXED = ["", "a", "zz", "abc", "ß", "日本", "Σσ", "a\x00b", "same", "same",
+         "longer-string-row", "é"]
+
+
+def rand_strings(rng, n, *, fixed_len=None, ascii_only=False):
+    """Random strings with empty runs, repeats and non-ASCII chars."""
+    alpha = list("abcxyz") if ascii_only else list("abcxyzß日éΣσ\x00 ")
+    out = []
+    for _ in range(n):
+        if fixed_len is None:
+            ln = int(rng.integers(0, 9))
+            if rng.random() < 0.15:
+                ln = 0                       # empty-string runs
+        else:
+            ln = fixed_len
+        out.append("".join(rng.choice(alpha, size=ln)))
+    return out
+
+
+def utf8_col(rng, strs, null_frac=0.0):
+    validity = None
+    if null_frac > 0 and strs:
+        mask = rng.random(len(strs)) >= null_frac
+        validity = A.pack_validity(mask)
+    return A.Column.from_strings(strs, validity=validity)
+
+
+# -- naive per-row references (the loops the kernels replaced) --------------
+
+def ref_dict_encode(strs_b):
+    uniq = sorted(set(strs_b))
+    index = {s: i for i, s in enumerate(uniq)}
+    return [index[s] for s in strs_b], uniq
+
+
+def ref_upper(strs):
+    return [s.upper() for s in strs]
+
+
+def ref_sort_order(strs_b):
+    return np.argsort(np.array(strs_b, dtype=object), kind="stable")
+
+
+def col_rows(col):
+    """Per-row bytes via the naive accessor (the reference reader)."""
+    return [col.get_bytes(i) for i in range(col.length)]
+
+
+# ---------------------------------------------------------------------------
+# gather / take
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_take_var_matches_per_row(seed):
+    rng = np.random.default_rng(seed)
+    strs = [s.encode() for s in rand_strings(rng, 60)]
+    c = A.Column.from_strings(strs)
+    idx = rng.integers(0, len(strs), size=40)
+    new_off, out = vk.take_var(c.offsets, c.values, idx)
+    got = [bytes(out[new_off[i]:new_off[i + 1]]) for i in range(len(idx))]
+    assert got == [strs[i] for i in idx]
+
+
+def test_take_var_zero_rows_and_empty():
+    c = A.Column.from_strings([])
+    new_off, out = vk.take_var(c.offsets, c.values, np.empty(0, np.int64))
+    assert list(new_off) == [0] and out.size == 0
+    c = A.Column.from_strings(["", "", ""])
+    new_off, out = vk.take_var(c.offsets, c.values, np.array([2, 0]))
+    assert list(new_off) == [0, 0, 0] and out.size == 0
+
+
+def test_take_var_on_slice_offsets():
+    """Non-zero-based offsets (row-slice views) gather correctly."""
+    c = A.Column.from_strings([b"aa", b"bbb", b"c", b"dd"]).slice(1, 4)
+    new_off, out = vk.take_var(c.offsets, c.values, np.array([2, 0]))
+    assert [bytes(out[new_off[i]:new_off[i + 1]]) for i in range(2)] == \
+        [b"dd", b"bbb"]
+
+
+# ---------------------------------------------------------------------------
+# dictionary encode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("fixed_len", [None, 5])
+def test_dict_encode_var_matches_reference(seed, fixed_len):
+    rng = np.random.default_rng(seed)
+    strs = [s.encode()
+            for s in rand_strings(rng, 80, fixed_len=fixed_len)]
+    c = A.Column.from_strings(strs)
+    codes, uoff, uvals = vk.dict_encode_var(c.offsets, c.values)
+    ref_codes, ref_uniq = ref_dict_encode(strs)
+    got_uniq = [bytes(uvals[uoff[i]:uoff[i + 1]])
+                for i in range(len(uoff) - 1)]
+    assert got_uniq == ref_uniq
+    assert codes.dtype == np.int32 and list(codes) == ref_codes
+
+
+def test_dict_encode_var_trailing_nul_distinct():
+    """Unlike numpy 'S'-dtype keys, trailing NUL bytes are significant."""
+    strs = [b"ab", b"ab\x00", b"ab", b"ab\x00\x00"]
+    c = A.Column.from_strings(strs)
+    codes, uoff, uvals = vk.dict_encode_var(c.offsets, c.values)
+    assert len(uoff) - 1 == 3
+    assert list(codes) == [0, 1, 0, 2]
+
+
+def test_dict_encode_var_edges():
+    # zero rows
+    c = A.Column.from_strings([])
+    codes, uoff, uvals = vk.dict_encode_var(c.offsets, c.values)
+    assert codes.size == 0 and list(uoff) == [0] and uvals.size == 0
+    # all-empty rows: one dictionary entry
+    c = A.Column.from_strings(["", "", ""])
+    codes, uoff, uvals = vk.dict_encode_var(c.offsets, c.values)
+    assert list(codes) == [0, 0, 0] and list(uoff) == [0, 0]
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_ops_dict_encode_table(seed):
+    rng = np.random.default_rng(seed)
+    strs = rand_strings(rng, 50)
+    t = A.Table.from_pydict({"s": strs, "i": np.arange(50)})
+    enc = ops.dict_encode(t, ["s"])
+    c = enc.batches[0].column("s")
+    assert c.type.is_dict
+    assert col_rows(c.decode_dictionary()) == [s.encode() for s in strs]
+    # dict column with nulls: codes computed for every slot, validity rides
+    col = utf8_col(rng, strs, null_frac=0.3)
+    t2 = A.Table.from_batch(A.Schema([A.Field("s", col.type)]), [col])
+    c2 = ops.dict_encode(t2, ["s"]).batches[0].column("s")
+    assert np.array_equal(c2.valid_mask(), col.valid_mask())
+    assert col_rows(c2.decode_dictionary()) == [s.encode() for s in strs]
+
+
+def test_dict_encode_skew_fallback_identical(monkeypatch):
+    """Length-skewed columns take the per-row fallback (no padded-matrix
+    blowup) with bit-identical results."""
+    rng = np.random.default_rng(5)
+    strs = [s.encode() for s in rand_strings(rng, 60)] + [b"x" * 500]
+    c = A.Column.from_strings(strs)
+    want = vk.dict_encode_var(c.offsets, c.values)
+    want_order = vk.sort_order_var(c.offsets, c.values)
+    monkeypatch.setattr(vk, "_SKEW_FLOOR", 0)
+    monkeypatch.setattr(vk, "_SKEW_RATIO", 1)
+    assert vk._skewed(len(strs), c.offsets[1:] - c.offsets[:-1])
+    codes, uoff, uvals = vk.dict_encode_var(c.offsets, c.values)
+    assert np.array_equal(codes, want[0]) and codes.dtype == np.int32
+    assert np.array_equal(uoff, want[1])
+    assert np.array_equal(uvals, want[2])
+    assert list(vk.sort_order_var(c.offsets, c.values)) == list(want_order)
+
+
+# ---------------------------------------------------------------------------
+# sort keys
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_sort_keys_var_stable_order(seed):
+    rng = np.random.default_rng(seed)
+    strs = [s.encode() for s in rand_strings(rng, 120)]
+    c = A.Column.from_strings(strs)
+    keys = vk.sort_keys_var(c.offsets, c.values)
+    order = np.argsort(keys, kind="stable")
+    assert list(order) == list(ref_sort_order(strs))
+    # the direct permutation kernel agrees with argsort-over-ranks
+    assert list(vk.sort_order_var(c.offsets, c.values)) == list(order)
+
+
+@pytest.mark.parametrize("fixed_len", [None, 6])
+def test_sort_order_var_edges(fixed_len):
+    rng = np.random.default_rng(9)
+    strs = [s.encode() for s in rand_strings(rng, 40, fixed_len=fixed_len)]
+    c = A.Column.from_strings(strs)
+    order = vk.sort_order_var(c.offsets, c.values)
+    assert list(order) == list(ref_sort_order(strs))
+    c0 = A.Column.from_strings([])
+    assert list(vk.sort_order_var(c0.offsets, c0.values)) == []
+    ce = A.Column.from_strings(["", "", ""])
+    assert list(vk.sort_order_var(ce.offsets, ce.values)) == [0, 1, 2]
+
+
+@pytest.mark.parametrize("col_kind", ["utf8", "dict"])
+def test_ops_sort_by(col_kind):
+    rng = np.random.default_rng(7)
+    strs = rand_strings(rng, 60)
+    t = A.Table.from_pydict({"s": strs, "i": np.arange(60)})
+    if col_kind == "dict":
+        t = ops.dict_encode(t, ["s"])
+    got = ops.sort_by(t, "s")
+    want_i = sorted(range(60), key=lambda i: (strs[i].encode(), i))
+    assert got.to_pydict()["i"] == want_i
+    gd = ops.sort_by(t, "s", descending=True).to_pydict()["i"]
+    assert gd == want_i[::-1]
+
+
+# ---------------------------------------------------------------------------
+# upper
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_upper_var_matches_per_row(seed):
+    rng = np.random.default_rng(seed)
+    strs = rand_strings(rng, 60).__add__(MIXED)
+    strs = [s.replace("\x00", "n") for s in strs]    # valid printable rows
+    c = A.Column.from_strings(strs)
+    new_off, out = vk.upper_var(c.offsets, c.values)
+    got = [bytes(out[new_off[i]:new_off[i + 1]]).decode()
+           for i in range(len(strs))]
+    assert got == ref_upper(strs)
+
+
+def test_upper_var_eszett_changes_lengths():
+    c = A.Column.from_strings(["straße", "ß", "", "aß"])
+    new_off, out = vk.upper_var(c.offsets, c.values)
+    got = [bytes(out[new_off[i]:new_off[i + 1]]).decode() for i in range(4)]
+    assert got == ["STRASSE", "SS", "", "ASS"]
+
+
+def test_upper_var_slice_offsets_and_zero_rows():
+    c = A.Column.from_strings(["xx", "mixedß", "yy"]).slice(1, 2)
+    new_off, out = vk.upper_var(c.offsets, c.values)
+    assert new_off[0] == 0
+    assert bytes(out[new_off[0]:new_off[1]]).decode() == "MIXEDSS"
+    c0 = A.Column.from_strings([])
+    new_off, out = vk.upper_var(c0.offsets, c0.values)
+    assert list(new_off) == [0] and out.size == 0
+
+
+def test_ops_upper_table_non_ascii_with_nulls():
+    rng = np.random.default_rng(3)
+    strs = ["straße", "ok", "", "Σσ", "ßß"]
+    col = utf8_col(rng, strs, null_frac=0.0)
+    mask = np.array([True, False, True, True, True])
+    col = A.Column.from_strings(strs, validity=A.pack_validity(mask))
+    t = A.Table.from_batch(A.Schema([A.Field("s", col.type)]), [col])
+    up = ops.upper(t, "s").batches[0].column("s")
+    assert np.array_equal(up.valid_mask(), mask)
+    assert col_rows(up) == [s.upper().encode() for s in strs]
+
+
+# ---------------------------------------------------------------------------
+# decode_dictionary / equals
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(3))
+def test_decode_dictionary_matches_per_row(seed):
+    rng = np.random.default_rng(seed)
+    uniq = sorted({s.encode() for s in rand_strings(rng, 30)})
+    dic = A.Column.from_strings(uniq)
+    codes = rng.integers(0, len(uniq), size=70).astype(np.int32)
+    mask = rng.random(70) >= 0.2
+    col = A.Column.dictionary_encoded(codes, dic,
+                                      validity=A.pack_validity(mask))
+    dec = col.decode_dictionary()
+    assert col_rows(dec) == [uniq[c] for c in codes]
+    assert np.array_equal(dec.valid_mask(), mask)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_equals_utf8_vectorized(seed):
+    rng = np.random.default_rng(seed)
+    strs = rand_strings(rng, 50)
+    a = utf8_col(rng, strs, null_frac=0.25)
+    b = A.Column.from_strings(strs, validity=a.validity)
+    assert a.equals(b)
+    # null slots may hold different bytes and still compare equal
+    mask = a.valid_mask()
+    if not mask.all():
+        j = int(np.nonzero(~mask)[0][0])
+        strs2 = list(strs)
+        strs2[j] = strs2[j] + "DIFFERENT"
+        assert a.equals(A.Column.from_strings(strs2, validity=a.validity))
+    # a single valid-row difference is detected
+    j = int(np.nonzero(mask)[0][0])
+    strs3 = list(strs)
+    strs3[j] = strs3[j] + "x"
+    assert not a.equals(A.Column.from_strings(strs3, validity=a.validity))
+
+
+def test_equals_dict_vs_plain_utf8():
+    """A dict column logically equals the plain column it encodes."""
+    strs = ["b", "a", "b", "", "a"]
+    t = ops.dict_encode(A.Table.from_pydict({"s": strs}), ["s"])
+    dc = t.batches[0].column("s")
+    pc = A.Column.from_strings(strs)
+    assert dc.equals(pc) and pc.equals(dc)
+
+
+# ---------------------------------------------------------------------------
+# zarquet parallel copy-free decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("threads", [1, 4])
+def test_zarquet_parallel_decode_identical(tmp_path, threads):
+    rng = np.random.default_rng(11)
+    strs = rand_strings(rng, 300)
+    t = A.Table.from_pydict({
+        "s0": strs,
+        "s1": rand_strings(rng, 300, fixed_len=7),
+        "i": rng.integers(0, 1 << 30, 300)})
+    p = os.path.join(tmp_path, "t.zq")
+    zarquet.write_table(p, t)
+    r = zarquet.read_table(p, dict_columns=("s1",), reader_threads=threads)
+    want = t.combine().batches[0]
+    for name in ("s0", "s1", "i"):
+        c = r.batches[0].column(name)
+        if c.type.is_dict:
+            assert name == "s1"
+            c = c.decode_dictionary()
+        assert c.equals(want.column(name))
+
+
+def test_zarquet_decode_respects_allocator_contract(tmp_path):
+    """Buffers land in allocator-provided memory; on_buffer sees each
+    fresh buffer exactly once (decompress-into, no replacement array)."""
+    t = zarquet.gen_str_table(2, 1 << 14, str_len=8, repeats=2)
+    p = os.path.join(tmp_path, "t.zq")
+    zarquet.write_table(p, t)
+    handed, seen = [], []
+
+    def allocator(n):
+        a = np.zeros(n, dtype=np.uint8)
+        handed.append(a)
+        return a
+
+    def on_buffer(a):
+        seen.append(a)
+
+    r = zarquet.read_table(p, allocator=allocator, on_buffer=on_buffer,
+                           reader_threads=4)
+    assert len(seen) == len(handed)
+    for h, s in zip(handed, seen):
+        assert s.base is h or s is h    # the very memory we allocated
+    assert r.equals(t)
+
+
+def test_zarquet_zstd_decomp_into(tmp_path):
+    """zstd copy-free branch (runs in CI, where zstandard is installed):
+    roundtrip through _decomp_into plus wrong-size detection."""
+    zstandard = pytest.importorskip("zstandard")
+    rng = np.random.default_rng(2)
+    t = A.Table.from_pydict({
+        "s": rand_strings(rng, 400), "i": rng.integers(0, 1 << 30, 400)})
+    p = os.path.join(tmp_path, "t.zq")
+    zarquet.write_table(p, t, codec="zstd")
+    assert zarquet.read_footer(p)["codec"] == "zstd"
+    r = zarquet.read_table(p, reader_threads=2)
+    assert r.equals(t)
+    blob = zstandard.ZstdCompressor().compress(b"x" * 4096)
+    with pytest.raises(ValueError):
+        zarquet._decomp_into(blob, np.empty(2048, np.uint8), "zstd")
+    with pytest.raises(ValueError):
+        zarquet._decomp_into(blob, np.empty(8192, np.uint8), "zstd")
+
+
+def test_zarquet_truncated_buffer_detected(tmp_path):
+    t = A.Table.from_pydict({"i": np.arange(1000, dtype=np.int64)})
+    p = os.path.join(tmp_path, "t.zq")
+    zarquet.write_table(p, t)
+    meta = zarquet.read_footer(p)
+    bm = meta["columns"][0]["buffers"][0]
+    with open(p, "rb") as fh:
+        raw = bytearray(fh.read())
+    # corrupt the recorded uncompressed length: decode must notice
+    blob = bytes(raw[bm["off"]:bm["off"] + bm["clen"]])
+    dest = np.empty(bm["rlen"] // 2, dtype=np.uint8)
+    with pytest.raises(ValueError):
+        zarquet._decomp_into(blob, dest, meta["codec"])
