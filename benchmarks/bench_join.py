@@ -1,0 +1,157 @@
+"""Relational engine: hash join + group-by under the zero-copy data plane.
+
+Each DAG is a star-schema job over its own sources:
+
+    load orders (fact: cust id + amount)  ─┐
+                                           ├─> join (left, on cust)
+    load customers (dim: cust id +        ─┘      │
+         dict-encoded country)                    └─> group_by country:
+                                                      sum/count(amount)
+
+The join *reshuffles rows across tables* — the op class the copy-
+avoidance machinery had never been exercised on: payload gathers are new
+bytes, but the dimension table's ``country`` dictionary must ride
+through the join and the aggregation **by reference** (SIPC reshare
+hits, no re-deanonymization).  The benchmark runs the workload on the
+thread executor at workers=1 and 4 and the Flight process executor at
+workers=4, and records per run:
+
+  * wall-clock,
+  * ``copied_bytes`` (page-edge deanon tax only — any full-buffer copy
+    is a regression),
+  * the SIPC reshare hit-rate ``hits / (hits + misses)`` from
+    ``executor.reshare_stats()``, which folds in worker-process-side
+    writes in process mode.
+
+    PYTHONPATH=src python -m benchmarks.run join
+
+Results land in BENCH_join.json.  In ``--smoke`` mode the run asserts
+the aggregate outputs are bit-identical across every mode/worker
+combination and that the dictionary reshare path got hits, then leaves
+the checked-in full-size numbers untouched.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+
+import numpy as np
+
+from repro.core import DAG, NodeSpec, SipcReader
+from repro.core import ops, zarquet
+from repro.core.arrow import Table
+
+from .common import Csv, gb, make_env, timed, write_source
+
+N_DAGS = 4
+WORKERS = 4
+N_COUNTRIES = 64
+SMOKE = os.environ.get("ZERROW_BENCH_SMOKE") == "1"
+
+
+def gen_star(orders_bytes: int, seed: int = 0):
+    """(orders, customers) tables: ~orders_bytes of fact rows against a
+    dimension 1/8 the size with a low-cardinality dict-encodable tag."""
+    rng = np.random.default_rng(seed)
+    n_orders = max(orders_bytes // 16, 64)        # cust + amount = 16 B/row
+    n_cust = max(n_orders // 8, 8)
+    orders = Table.from_pydict({
+        "cust": rng.integers(0, int(n_cust * 1.1), size=n_orders).astype(
+            np.int64),                            # ~10% misses -> left join
+        "amount": rng.random(n_orders),
+    })
+    customers = Table.from_pydict({
+        "cust": np.arange(n_cust, dtype=np.int64),
+        "country": [f"country{i % N_COUNTRIES:03d}" for i in range(n_cust)],
+    })
+    return orders, customers
+
+
+def _build(paths, est):
+    join = functools.partial(ops.join_node, on="cust", how="left")
+    agg = functools.partial(
+        ops.group_by_node, keys="country",
+        aggs={"total": ("amount", "sum"), "n": ("amount", "count")})
+    return [DAG([
+        NodeSpec("orders", source=po, est_mem=est),
+        NodeSpec("cust", source=pc, est_mem=est,
+                 dict_columns=("country",)),
+        NodeSpec("join", fn=join, deps=["orders", "cust"], est_mem=est),
+        NodeSpec("agg", fn=agg, deps=["join"], est_mem=est,
+                 keep_output=True),
+    ], name=f"star{i}") for i, (po, pc) in enumerate(paths)]
+
+
+def _run(mode: str, workers: int, tables, results: dict):
+    env = make_env(workers=workers, workers_mode=mode, decache=False)
+    est = int(tables[0][0].nbytes * 4)
+    paths = [(write_source(env.tmpdir, f"orders{i}.zq", o),
+              write_source(env.tmpdir, f"cust{i}.zq", c))
+             for i, (o, c) in enumerate(tables)]
+    dags = _build(paths, est)
+    if mode == "process":
+        env.ex._ensure_pool()   # warm workers (spawn is not the data plane)
+    with timed() as t:
+        env.ex.run(dags)
+    assert all(d.all_done() for d in dags)
+    aggs = [SipcReader(env.store).read_table(d.nodes["agg"].output)
+            .to_pydict() for d in dags]
+    rs = env.ex.reshare_stats()
+    hit_rate = rs["reshare_hits"] / max(
+        rs["reshare_hits"] + rs["reshare_misses"], 1)
+    row = {"mode": mode, "workers": workers, "wall_s": t[1],
+           "copied_bytes": rs["bytes_copied"],
+           "reshared_bytes": rs["bytes_reshared"],
+           "reshare_hits": rs["reshare_hits"],
+           "reshare_misses": rs["reshare_misses"],
+           "reshare_hit_rate": hit_rate}
+    if mode == "process":
+        row["socket_bytes"] = env.ex.socket_bytes
+    results["runs"].append(row)
+    env.close()
+    return t[1], aggs, row
+
+
+def main() -> None:
+    size = gb(0.01) if SMOKE else gb(0.08)
+    tables = [gen_star(size, seed=i) for i in range(N_DAGS)]
+    results = {"n_dags": N_DAGS, "smoke": SMOKE,
+               "orders_bytes": sum(o.nbytes for o, _ in tables),
+               "runs": []}
+
+    t_seq, a_seq, r_seq = _run("thread", 1, tables, results)
+    Csv.add("join_thread_workers1", t_seq,
+            f"hit_rate={r_seq['reshare_hit_rate']:.2f}")
+    t_thr, a_thr, r_thr = _run("thread", WORKERS, tables, results)
+    Csv.add(f"join_thread_workers{WORKERS}", t_thr,
+            f"{t_thr / t_seq:.2f}x_of_seq")
+    t_proc, a_proc, r_proc = _run("process", WORKERS, tables, results)
+    Csv.add(f"join_process_workers{WORKERS}", t_proc,
+            f"{t_proc / t_seq:.2f}x_of_seq;"
+            f"hit_rate={r_proc['reshare_hit_rate']:.2f}")
+
+    # correctness gates (run in smoke too): every mode/worker combination
+    # must agree bit-for-bit, and the dictionary path must reshare
+    assert a_seq == a_thr == a_proc, "join workload differs across modes"
+    for row in results["runs"]:
+        assert row["reshare_hits"] > 0, \
+            f"no reshare hits in {row['mode']}/w{row['workers']} — " \
+            "join payload dictionaries are being re-deanonymized?"
+    results["speedup_process_over_thread"] = t_thr / t_proc
+    if SMOKE:
+        print(f"# smoke: modes agree, reshare hits on every run; "
+              "BENCH_join.json left untouched")
+        return
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_join.json")
+    with open(out, "w") as fh:
+        json.dump(results, fh, indent=2)
+    print(f"# wrote {out}: thread w1 {t_seq:.2f}s, w{WORKERS} {t_thr:.2f}s, "
+          f"process w{WORKERS} {t_proc:.2f}s; hit_rate "
+          f"{r_seq['reshare_hit_rate']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -278,6 +278,23 @@ class Column:
         return Column(self.type, len(indices), self.values[indices],
                       validity=validity)
 
+    def take_nullable(self, indices: np.ndarray) -> "Column":
+        """Row gather where ``indices`` may contain -1: those output rows
+        are null (the left-join miss gather).  Dictionary buffers still
+        pass through by reference."""
+        indices = np.asarray(indices, dtype=np.int64)
+        miss = indices < 0
+        if not miss.any():
+            return self.take(indices)
+        if self.length == 0:
+            return _null_column(self.type, len(indices), self.dictionary)
+        out = self.take(np.where(miss, 0, indices))
+        vm = out.valid_mask()
+        vm[miss] = False
+        return Column(out.type, out.length, out._values,
+                      offsets=out._offsets, validity=pack_validity(vm),
+                      dictionary=out.dictionary)
+
     # -- equality (logical, for tests) --------------------------------------
     def equals(self, other: "Column") -> bool:
         if self.length != other.length:
@@ -324,6 +341,26 @@ class Column:
         assert self.type.is_dict and self.dictionary.type.is_utf8
         d = self.dictionary
         return vkernels.take_var(d.offsets, d.values, self.values[indices])
+
+
+def _null_column(t: ArrowType, n: int,
+                 dictionary: Optional[Column] = None) -> Column:
+    """An all-null column of ``n`` rows (every left-join miss against an
+    empty build side).  Values are zeros; the validity bitmap is all 0."""
+    validity = pack_validity(np.zeros(n, dtype=bool))
+    if t.is_utf8:
+        return Column.utf8(np.zeros(n + 1, np.int64),
+                           np.empty(0, np.uint8), validity)
+    values = np.zeros(n, dtype=np.dtype(t.np_dtype))
+    if t.is_dict:
+        if dictionary is None or dictionary.length == 0:
+            # codes must index a real dictionary row even when never read
+            dictionary = Column.from_strings([b""]) \
+                if t.value_type.is_utf8 else \
+                Column.primitive(np.zeros(1, np.dtype(t.value_type.np_dtype)))
+        return Column(t, n, values, validity=validity,
+                      dictionary=dictionary)
+    return Column(t, n, values, validity=validity)
 
 
 # --------------------------------------------------------------------------

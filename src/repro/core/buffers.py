@@ -121,6 +121,10 @@ class StoreStats:
     bytes_copied: int = 0            # real memcpys into store files
     bytes_deanon: int = 0            # zero-copy ownership transfers
     bytes_reshared: int = 0          # output refs that reused input files
+    reshare_hits: int = 0            # output buffers emitted as references
+    #                                # (lazy pass-through or AddressMap hit)
+    reshare_misses: int = 0          # output buffers that had to be
+    #                                # de-anonymized/copied in zero mode
     bytes_file_ingest: int = 0       # anon bytes written into backing files
     #                                # (file mode's deanon tax; not a SIPC
     #                                # wire/reader/writer copy)

@@ -21,7 +21,10 @@ or address, so an identical lambda re-created next run fingerprints
 identically, while editing the op body (or a value it closes over, or a
 helper it calls by name) invalidates it.  Attributes reached *through a
 module object* (``ops.dict_encode``) are not chased — bump
-``FP_VERSION`` after editing shared library code.  Ops that expose
+``FP_VERSION`` after editing shared library code, or have the op
+declare its module-attr dependencies in ``__fp_includes__`` (a tuple of
+callables folded into the op's identity — how ``ops.join`` binds itself
+to the relational vkernels).  Ops that expose
 neither code nor stable state (builtins, callables with ``__dict__`` we
 cannot canonicalize) fingerprint as None and are simply never cached —
 correctness over coverage.
@@ -157,6 +160,15 @@ def _code_fingerprint(fn, _seen=None) -> Optional[str]:
             if isinstance(v, types.ModuleType):
                 continue                # module-attr chains: FP_VERSION
             parts.append(f"g:{name}={_stable(_canon_value(v, _seen))}")
+    # explicit dependency declaration: callables reached through a module
+    # attribute (``vkernels.hash_keys``) are invisible to the direct-
+    # global scan above; an op can declare them in ``__fp_includes__`` so
+    # editing the kernel invalidates the op's cached outputs
+    for i, dep in enumerate(getattr(fn, "__fp_includes__", ()) or ()):
+        inner = _code_fingerprint(dep, _seen)
+        if inner is None:
+            return None
+        parts.append(f"inc{i}:{inner}")
     return hashlib.sha256("|".join(parts).encode()).hexdigest()
 
 

@@ -88,8 +88,16 @@ def worker_main(sock_path: str, data_dir: str) -> None:
         store.close()
 
 
+#: worker-side StoreStats counters echoed back per request so the parent
+#: executor can aggregate data-plane behaviour that happens entirely
+#: inside workers (e.g. a join reshare-hitting on payload dictionaries)
+_ECHO_STATS = ("bytes_copied", "bytes_reshared", "reshare_hits",
+               "reshare_misses")
+
+
 def _handle(req, store, kz, Sandbox, zarquet) -> Dict[str, Any]:
     label = req.get("label", "node")
+    before = store.stats.snapshot()
     sb = Sandbox(store, kz, label, mode=req.get("mode", "zero"))
     if req["op"] == "exec":
         fn = pickle.loads(req["fn"])
@@ -108,8 +116,10 @@ def _handle(req, store, kz, Sandbox, zarquet) -> Dict[str, Any]:
         raise ValueError(f"unknown worker op {req['op']!r}")
     out = encode_message(msg, store)
     msg.release()
+    after = store.stats.snapshot()
     return {"ok": True, "msg": out, "new_bytes": msg.new_bytes,
-            "reshared_bytes": msg.reshared_bytes}
+            "reshared_bytes": msg.reshared_bytes,
+            "stats": {k: after[k] - before[k] for k in _ECHO_STATS}}
 
 
 def _forget_all(store) -> None:

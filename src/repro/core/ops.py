@@ -6,18 +6,45 @@ wherever the semantics allow, *views* of the input buffers.  Whether those
 views are reshared (references) or copied is decided downstream by SIPC's
 IPC inspection — the op itself is unmodified, ordinary code (Goal G5).
 
-Op classes, matching paper Fig 6:
-  subtractive: drop_columns / select_columns, slice_rows  -> pure views
-  additive:    add_column, concat_tables                  -> new data only
-  fine-grained: filter_rows, sort_by                      -> copies, except
-               dictionaries (dictionary sharing) and reshare-friendly cases
-  rewriting:   upper (UTF-8 changes byte lengths; ASCII fast path can
-               reshare offsets — the paper's UTF-16 observation, applied)
+Every public op, with its one-line contract (classes match paper Fig 6):
+
+Subtractive (pure views — zero new bytes):
+  ``select_columns(t, names)``   keep the named columns, by reference.
+  ``drop_columns(t, names)``     drop the named columns; rest by reference.
+  ``slice_rows(t, start, stop)`` row-slice across batches; every buffer a
+      view (utf8 offsets need not start at zero).
+
+Additive (new data only — inputs ride through by reference):
+  ``add_column(t, name, col)``   append one column.
+  ``concat_tables(ts)``          row concat == batch concat; no new bytes.
+
+Fine-grained (row granularity — codes/values copy, dictionaries reshare):
+  ``take(t, idx)``               global row gather (dictionary sharing).
+  ``filter_rows(t, mask)``       keep mask-true rows, per batch.
+  ``sort_by(t, name, descending=False)``  stable sort by one column
+      (vectorized bytes sort for utf8; dict ranks for dict-of-utf8).
+
+Rewriting:
+  ``upper(t, name)``             utf8 upper-case; the ASCII fast path
+      reshares the offsets buffer (the paper's UTF-16 observation).
+  ``dict_encode(t, names)``      dictionary-encode utf8 columns.
+
+Relational (reshuffle rows across tables — hash-join engine, PR 5):
+  ``join(left, right, on, how='inner'|'left')``  multi-key hash
+      equi-join; null keys never match (SQL); output is left-major with
+      build matches ascending; payload dictionaries reshare by reference.
+  ``group_by(t, keys, aggs)``    hash-free exact group-by (dense key
+      codes + segment reducers): one row per distinct key tuple (nulls
+      form one group, sorted last), aggs from sum/min/max/count/mean.
+
+Compute helpers (paper workloads):
+  ``sum_all_ints(t)``            Fig 2 reader-node reduction.
+  ``add_columns_compute(t, a, b, out, repeat=1)``  Fig 7/10 column math.
 """
 
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -167,6 +194,238 @@ def upper(table: Table, name: str, assume_ascii: Optional[bool] = None) -> Table
         cols[j] = new
         out.append(RecordBatch(b.schema, cols))
     return Table(out)
+
+
+# --------------------------------------------------------------------------
+# relational ops: hash join + group-by (reshuffle rows across tables)
+# --------------------------------------------------------------------------
+
+def _key_hashes(batch: RecordBatch, keys: Sequence[str],
+                cast: Dict[str, np.dtype]):
+    """(uint64 row hashes, all-keys-valid mask) for one table's key
+    columns.  Hashes depend only on logical values, never representation:
+    a dict-of-utf8 key hashes its dictionary once and scatters through
+    the codes, landing on exactly ``hash_var`` of the decoded rows, so
+    it matches a plain utf8 key on the other side; primitive keys hash
+    through the two sides' common dtype (``cast``), so an int64 -1
+    matches an int32 -1; float zeros are canonicalized inside the
+    kernels."""
+    n = batch.num_rows
+    parts: List[np.ndarray] = []
+    valid = np.ones(n, dtype=bool)
+    for name in keys:
+        c = batch.column(name)
+        valid &= c.valid_mask()
+        if c.type.is_utf8:
+            parts.append(vkernels.hash_var(c.offsets, c.values))
+        elif c.type.is_dict:
+            d = c.dictionary
+            hd = vkernels.hash_var(d.offsets, d.values) \
+                if d.type.is_utf8 else vkernels.hash_fixed(
+                    d.values.astype(cast[name], copy=False))
+            parts.append(hd[c.values])
+        else:
+            parts.append(vkernels.hash_fixed(
+                c.values.astype(cast[name], copy=False)))
+    return vkernels.combine_hashes(parts, n), valid
+
+
+def _key_cast_map(lb: RecordBatch, rb: RecordBatch,
+                  keys: Sequence[str]) -> Dict[str, np.dtype]:
+    """Common hash dtype per primitive-kind key column: both sides hash
+    through ``np.result_type`` of their logical dtypes, so bit patterns
+    agree whenever ``==`` would.  Joining a utf8-kind key against a
+    primitive-kind key is a type error, not an empty result."""
+    def prim_dtype(c: Column) -> np.dtype:
+        t = c.type.value_type if c.type.is_dict else c.type
+        return np.dtype(t.np_dtype)
+
+    cast: Dict[str, np.dtype] = {}
+    for name in keys:
+        lc, rc = lb.column(name), rb.column(name)
+        if lc._kindof() != rc._kindof():
+            raise TypeError(f"join key {name!r}: {lc._kindof()} vs "
+                            f"{rc._kindof()} columns")
+        if lc._kindof() == "prim":
+            cast[name] = np.result_type(prim_dtype(lc), prim_dtype(rc))
+    return cast
+
+
+def _key_pairs_equal(lcol: Column, li: np.ndarray,
+                     rcol: Column, ri: np.ndarray) -> np.ndarray:
+    """Confirm candidate pairs: bool per pair, left row li[p] == right
+    row ri[p] on this key column (the hash-collision filter)."""
+    if lcol._kindof() == "utf8":
+        off_a, val_a = lcol._logical_var(li)
+        off_b, val_b = rcol._logical_var(ri)
+        return vkernels.bytes_rows_equal(off_a, val_a, off_b, val_b)
+    return lcol._logical()[li] == rcol._logical()[ri]
+
+
+def join(left: Table, right: Table, on: Union[str, Sequence[str]],
+         how: str = "inner", suffix: str = "_right") -> Table:
+    """Multi-key hash equi-join (probe = left, build = right).
+
+    ``on`` names key columns present in both tables (same logical kind:
+    utf8 and dict-of-utf8 mix freely; primitives must compare with
+    ``==``).  Null keys never match (SQL semantics): inner drops them,
+    left preserves the row with all-null right payloads.  Output rows
+    are left-major (left row order preserved) with matching right rows
+    ascending; columns are the left table's, then right's non-key
+    columns (name collisions get ``suffix``).  Left payloads are
+    take-gathers, right payloads nullable take-gathers — dictionary
+    buffers of dict-encoded payloads pass through by reference, so SIPC
+    reshares them on the output (no re-deanonymization).
+    """
+    assert how in ("inner", "left"), how
+    keys = [on] if isinstance(on, str) else list(on)
+    lb = left.combine().batches[0]
+    rb = right.combine().batches[0]
+    cast = _key_cast_map(lb, rb, keys)
+    lh, lvalid = _key_hashes(lb, keys, cast)
+    rh, rvalid = _key_hashes(rb, keys, cast)
+    # null keys never match: probe/build over the valid-key subsets only
+    pidx = np.nonzero(lvalid)[0]
+    bidx = np.nonzero(rvalid)[0]
+    pi, bi = vkernels.hash_join_probe(rh[bidx], lh[pidx])
+    li, ri = pidx[pi], bidx[bi]
+    keep = np.ones(len(li), dtype=bool)
+    for k in keys:
+        keep &= _key_pairs_equal(lb.column(k), li, rb.column(k), ri)
+    li, ri = li[keep], ri[keep]
+    if how == "left":
+        matched = np.zeros(lb.num_rows, dtype=bool)
+        matched[li] = True
+        miss = np.nonzero(~matched)[0]
+        li = np.concatenate([li, miss])
+        ri = np.concatenate([ri, np.full(len(miss), -1, dtype=np.int64)])
+        order = np.argsort(li, kind="stable")   # restore left-major order
+        li, ri = li[order], ri[order]
+    fields: List[Field] = []
+    cols: List[Column] = []
+    rkeys = set(keys)
+    lnames = set(lb.schema.names())
+    for f, c in zip(lb.schema.fields, lb.columns):
+        fields.append(f)
+        cols.append(c.take(li))
+    for f, c in zip(rb.schema.fields, rb.columns):
+        if f.name in rkeys:
+            continue                 # equal to the left key by definition
+        name = f.name + suffix if f.name in lnames else f.name
+        fields.append(Field(name, c.type))
+        cols.append(c.take_nullable(ri))
+    return Table.from_batch(Schema(fields), cols)
+
+
+def _group_codes(col: Column) -> np.ndarray:
+    """Dense int64 group codes for one key column: equal logical rows
+    share a code, codes ascend in value order (bytes order for utf8),
+    float NaNs collapse into one group after the real values, and null
+    rows share the single largest code (SQL: nulls group together)."""
+    valid = col.valid_mask()
+    if col._kindof() == "utf8":
+        if col.type.is_dict:
+            d = col.dictionary
+            ranks = vkernels.sort_keys_var(d.offsets,
+                                           d.values).astype(np.int64)
+            codes = ranks[col.values.astype(np.int64)] \
+                if col.length else np.empty(0, np.int64)
+            ncodes = int(ranks.max(initial=-1)) + 1
+        else:
+            c32, uoff, _ = vkernels.dict_encode_var(col.offsets, col.values)
+            codes, ncodes = c32.astype(np.int64), len(uoff) - 1
+    else:
+        v = col._logical()
+        nan = None
+        if np.issubdtype(v.dtype, np.floating):
+            nan = np.isnan(v)
+            v = np.where(nan | (v == 0), 0, v)   # -0.0 == +0.0; NaN later
+        uniq, inv = np.unique(v, return_inverse=True)
+        codes, ncodes = inv.astype(np.int64).reshape(-1), len(uniq)
+        if nan is not None and nan.any():
+            codes = np.where(nan, ncodes, codes)
+            ncodes += 1
+    if not valid.all():
+        codes = np.where(valid, codes, ncodes)
+    return codes
+
+
+#: agg spec: {out_name: (column_name, how)} with how one of
+#: vkernels.GROUPED_REDUCERS — 'sum', 'min', 'max', 'count', 'mean'
+AggSpec = Dict[str, Tuple[str, str]]
+
+
+def group_by(table: Table, keys: Union[str, Sequence[str]],
+             aggs: AggSpec) -> Table:
+    """Group by key columns and reduce payload columns.
+
+    Exact (no hashing): per-key dense codes + one lexsort find the
+    groups, segment reducers aggregate.  One output row per distinct key
+    tuple, sorted by key values ascending (float NaNs after real values,
+    the null group last); key columns come first (dictionary-encoded
+    keys keep their dictionary by reference), then one column per agg in
+    ``aggs`` order.  Nulls are excluded from every aggregate; a group
+    whose payload is all-null aggregates to null (count: 0).
+    """
+    keys = [keys] if isinstance(keys, str) else list(keys)
+    b = table.combine().batches[0]
+    order, starts = vkernels.group_ranges(
+        [_group_codes(b.column(k)) for k in keys])
+    reps = order[starts]
+    fields: List[Field] = []
+    cols: List[Column] = []
+    for k in keys:
+        c = b.column(k).take(reps)
+        fields.append(Field(k, c.type))
+        cols.append(c)
+    for out_name, (col_name, how) in aggs.items():
+        reducer = vkernels.GROUPED_REDUCERS[how]
+        c = b.column(col_name)
+        if how == "count":
+            v = np.empty(c.length, dtype=np.int64)    # values unused
+        else:
+            assert c._kindof() == "prim", \
+                f"{how}({col_name}): non-numeric column"
+            v = c._logical()
+        valid = None if c.validity is None else c.valid_mask()
+        vals, counts = reducer(v, order, starts, valid)
+        if how in ("min", "max") and v.dtype == np.bool_:
+            vals = vals.astype(bool)
+        validity = None
+        if how != "count" and (counts == 0).any():
+            validity = pack_validity(counts > 0)      # all-null group
+        fields.append(Field(out_name, type_for_np(vals.dtype)))
+        cols.append(Column.primitive(vals, validity=validity))
+    return Table.from_batch(Schema(fields), cols)
+
+
+def join_node(tables: Sequence[Table], on, how: str = "inner",
+              suffix: str = "_right") -> Table:
+    """DAG-node form of ``join``: ``tables == [left, right]``.  Module-
+    level so a ``functools.partial`` over it pickles across the Flight
+    process boundary and fingerprints deterministically."""
+    return join(tables[0], tables[1], on=on, how=how, suffix=suffix)
+
+
+def group_by_node(tables: Sequence[Table], keys, aggs: AggSpec) -> Table:
+    """DAG-node form of ``group_by`` (see ``join_node``)."""
+    return group_by(tables[0], keys, aggs)
+
+
+#: the relational ops reach their kernels through the ``vkernels`` module
+#: attribute, which the fingerprint's direct-global scan does not chase;
+#: declaring them here makes a kernel edit invalidate every cached
+#: join/group-by output (differential reruns recompute the affected side)
+join.__fp_includes__ = (
+    vkernels.hash_keys, vkernels.combine_hashes, vkernels.hash_fixed,
+    vkernels.hash_var, vkernels.hash_join_probe,
+    vkernels.bytes_rows_equal)
+group_by.__fp_includes__ = (
+    vkernels.group_ranges, vkernels.grouped_count, vkernels.grouped_sum,
+    vkernels.grouped_min, vkernels.grouped_max, vkernels.grouped_mean,
+    vkernels.dict_encode_var, vkernels.sort_keys_var)
+join_node.__fp_includes__ = join.__fp_includes__
+group_by_node.__fp_includes__ = group_by.__fp_includes__
 
 
 # --------------------------------------------------------------------------

@@ -462,6 +462,20 @@ class WorkerPoolExecutor:
         for e in attachments:
             self.rm.decache.detach(e)
 
+    def reshare_stats(self) -> Dict[str, int]:
+        """Writer-side copy-avoidance counters for every SIPC write this
+        executor's nodes performed: reshare hits (buffers emitted as
+        references) vs misses (buffers de-anonymized), bytes reshared,
+        and real copied bytes.  ``ProcessWorkerExecutor`` folds in the
+        counters echoed back from its worker processes, so the view is
+        uniform across ``workers_mode`` (what ``benchmarks/bench_join.py``
+        records as the reshare hit-rate)."""
+        s = self.store.stats
+        return {"reshare_hits": s.reshare_hits,
+                "reshare_misses": s.reshare_misses,
+                "bytes_reshared": s.bytes_reshared,
+                "bytes_copied": s.bytes_copied}
+
     def close(self) -> None:
         """Release executor resources (no-op for the thread pool)."""
 
@@ -498,6 +512,11 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
         self._data_root = data_root
         self.fallback_inline = 0   # unpicklable fns executed in-parent
         self.worker_retries = 0    # requests re-run after a worker died
+        # data-plane counters from inside the workers (each reply echoes
+        # its store-stats delta): without these, a reshare hit on a join
+        # payload dictionary that happens wholly in a worker process
+        # would be invisible to the parent's accounting
+        self.worker_stats: Dict[str, int] = {}
 
     # -- pool lifecycle -----------------------------------------------------
     def _ensure_pool(self):
@@ -547,6 +566,8 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
         where thread-mode output bytes land), so admission, limitdrop and
         rollback treat process outputs like any other node output."""
         from ..flight.wire import decode_message
+        for k, v in (reply.get("stats") or {}).items():
+            self.worker_stats[k] = self.worker_stats.get(k, 0) + v
         msg = decode_message(reply["msg"], self.store, owner=sb.cgroup,
                              adopt_owned=True, label=st.name)
         sb.owned_files.extend(
@@ -579,3 +600,9 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
                                        None)})
         with self._lock:
             return self._adopt_reply(reply, st, sb)
+
+    def reshare_stats(self) -> Dict[str, int]:
+        out = super().reshare_stats()
+        for k in out:
+            out[k] += self.worker_stats.get(k, 0)
+        return out

@@ -22,6 +22,12 @@ Degrees of copy avoidance (paper Fig 1) are selectable for benchmarking:
     mode='writer_copy'  -> C: writer memcpy, reader mmap (views)
     mode='zero'         -> D: de-anonymization + resharing (Zerrow)
     mode='zero_noreshare' -> ablation: deanon without IPC inspection
+
+In zero mode every emitted output buffer counts toward
+``StoreStats.reshare_hits`` (emitted as a reference — lazy pass-through
+or AddressMap hit) or ``reshare_misses`` (de-anonymized); the hit-rate
+is the per-buffer copy-avoidance score benchmarks report (e.g. the join
+payload-dictionary path in ``benchmarks/bench_join.py``).
 """
 
 from __future__ import annotations
@@ -228,6 +234,7 @@ class SipcWriter:
                 # pass-through of an unfaulted mapping: reshare straight from
                 # provenance — no data is ever touched (true zero copy)
                 self.store.stats.bytes_reshared += arr.length
+                self.store.stats.reshare_hits += 1
                 msg.reshared_bytes += arr.length
                 return BufRef(arr.file_id, arr.offset, arr.length,
                               reshared=True)
@@ -243,8 +250,10 @@ class SipcWriter:
                 if hit is not None:
                     fid, foff = hit
                     self.store.stats.bytes_reshared += n
+                    self.store.stats.reshare_hits += 1
                     msg.reshared_bytes += n
                     return BufRef(fid, foff, n, reshared=True)
+                self.store.stats.reshare_misses += 1
             off, _ = self.kz.deanon(file, arr)
             self._emitted.add(arr, file.file_id, off)
             msg.new_bytes += n

@@ -1,37 +1,67 @@
 """Vectorized columnar kernels — GIL-releasing bulk ops over Arrow buffers.
 
-Every kernel here works directly on the raw (offsets, values, validity)
-buffers of the Arrow computational format and replaces a per-row Python
-loop somewhere in the compute path:
+Every kernel works directly on raw (offsets, values, validity) buffers of
+the Arrow computational format and replaces a per-row Python loop on the
+compute path.  One-line contracts for every public kernel:
 
-  ``ranges`` / ``gather_var`` / ``take_var``
-      variable-length row materializer: gathers N byte-ranges in three
-      numpy bulk ops (repeat / arange / take).  Used by ``Column.take``,
+Var-length gather:
+  ``ranges(lens)``            [0..lens[0]) .. [0..lens[n-1]) concatenated.
+  ``gather_var(v, starts, lens)``  gather N byte-ranges out of ``v`` ->
+      (new_offsets, out) in three bulk ops (repeat / arange / take).
+  ``take_var(off, v, idx)``   row-gather on a var-length column: select
+      rows ``idx`` -> (new_offsets, new_values).  Used by ``Column.take``,
       ``Column.decode_dictionary`` and the utf8 ``Column.equals`` branch.
-  ``dict_encode_var``
-      vectorized dictionary-encode of a variable-length byte column.
-      Fixed-width fast path (all rows the same length, as produced by
-      ``zarquet.gen_str_table``): rows are viewed as an ``np.void``
-      record array and deduplicated with one ``np.unique`` (memcmp order
-      == bytes-lexicographic order for equal-width rows).  General path:
-      rows are zero-padded into an (n, max_len) byte matrix and sorted
-      lexicographically with ``np.lexsort`` using the true length as the
-      final tiebreaker — zero-padding plus a length tiebreak reproduces
-      bytes comparison exactly (a prefix sorts before its extensions).
-      Replaces the object-array loops in ``ops.dict_encode``,
-      ``ops.sort_by`` and ``zarquet._dict_encode_col``.  Unlike the old
-      ``np.array([... bytes ...])`` path (numpy 'S' dtype), trailing NUL
-      bytes are significant, matching real bytes equality.
-  ``sort_keys_var``
-      utf8 sort-key builder: dense int32 lexicographic ranks (equal
-      strings share a rank), so ``np.argsort(keys, kind='stable')``
-      reproduces a stable per-row bytes sort.
-  ``upper_var``
-      bulk non-ASCII utf8 upper-case.  One whole-buffer decode, a
-      per-*alphabet* (not per-row) uppercase table, then the var-gather
-      kernel re-assembles the output bytes; row boundaries are carried
-      through as character offsets.  Handles length-changing mappings
-      ('ß' -> 'SS') without touching Python per row.
+
+Dictionary encode / sort:
+  ``dict_encode_var(off, v)`` -> (codes i32, uniq_offsets, uniq_values):
+      exactly ``np.unique`` over the row byte-strings (uniques in
+      bytes-lexicographic order) without a Python object per row.
+      Fixed-width fast path: rows viewed as an ``np.void`` record array,
+      one ``np.unique`` (memcmp order == bytes order at equal width).
+      General path: rows zero-padded into big-endian uint64 chunks +
+      ``np.lexsort`` with the true length as final tiebreaker (a prefix
+      sorts before its extensions; trailing NULs are significant).
+      Length-skewed columns (padded matrix > 32x data and > 64 MiB) fall
+      back to a per-row path instead of OOMing.
+  ``sort_keys_var(off, v)``   dense int32 lexicographic ranks (equal rows
+      share a rank): ``np.argsort(keys, kind='stable')`` == stable bytes
+      sort.  Also the var-length group-code builder for ``group_ranges``.
+  ``sort_order_var(off, v)``  direct stable bytes-sort permutation (one
+      lexsort over packed chunks, no second argsort over ranks).
+
+Rewriting:
+  ``upper_var(off, v)``       bulk non-ASCII utf8 upper-case: one
+      whole-window decode, a per-*alphabet* (not per-row) uppercase
+      table, one var-gather.  Handles length changes ('ß' -> 'SS').
+
+Relational (hash join + group-by, the zero-copy relational engine):
+  ``hash_fixed(v)``           uint64 splitmix64 hash of a fixed-width
+      array's bit patterns (float -0.0 canonicalized to +0.0).
+  ``hash_var(off, v)``        uint64 hash of each var-length row: XOR of
+      position-salted mixed chunks over the row's own ceil(len/8)
+      big-endian uint64 chunks, length-seeded — a pure function of the
+      row bytes (identical across column widths, slices, and the
+      per-row skew fallback), so equal bytes always hash equal.
+  ``hash_keys(keys, n)``      combine raw key buffers (ndarray = fixed
+      width, (offsets, values) tuple = var-length) into one order-
+      sensitive uint64 row hash per table row.
+  ``combine_hashes(hs, n)``   the representation-free combiner under
+      ``hash_keys``: fold precomputed per-column uint64 hashes (how a
+      dict key hashes its dictionary once yet matches a plain utf8 key).
+  ``hash_join_probe(bh, ph)`` hash-equality candidate pairs: sort the
+      build hashes once, searchsorted every probe hash -> (probe_idx,
+      build_idx) index arrays, probe-major, build ascending within a
+      probe row.  Collisions survive; the caller confirms key equality.
+  ``bytes_rows_equal(off_a, v_a, off_b, v_b)``  per-row bool: row i of A
+      == row i of B (length compare + one flat gather-and-compare).
+  ``group_ranges(codes)``     group boundary detection over per-column
+      dense codes: (order, starts) with ``order`` a stable lexsort
+      permutation and ``starts`` each group's first sorted position.
+  ``grouped_count / grouped_sum / grouped_min / grouped_max /
+  grouped_mean(values, order, starts, valid=None)``  segment reducers
+      over ``group_ranges`` boundaries; nulls are excluded and each
+      returns per-group ``(values, counts)`` (count of non-null rows) so
+      the caller can null out empty (all-null) groups.
 
 Kernels take and return plain numpy arrays (no Column/Table types), so
 this module sits below ``arrow.py`` with no import cycle, and the big
@@ -42,13 +72,17 @@ docs/ARCHITECTURE.md "Compute kernels & the GIL").
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Sequence, Tuple, Union
 
 import numpy as np
 
 __all__ = [
     "ranges", "gather_var", "take_var", "dict_encode_var",
     "sort_keys_var", "sort_order_var", "upper_var",
+    "hash_fixed", "hash_var", "hash_keys", "combine_hashes",
+    "hash_join_probe",
+    "bytes_rows_equal", "group_ranges", "grouped_count", "grouped_sum",
+    "grouped_min", "grouped_max", "grouped_mean",
 ]
 
 
@@ -287,3 +321,276 @@ def upper_var(offsets: np.ndarray, values: np.ndarray
     new_off = ccum[char_off]
     _, out = gather_var(uvals, uoff[:-1][inv], clens)
     return new_off, out
+
+
+# --------------------------------------------------------------------------
+# bulk hashing (the hash-join key path)
+# --------------------------------------------------------------------------
+
+#: one key spec for ``hash_keys``: a fixed-width array, or the
+#: (offsets, values) buffer pair of a var-length column
+KeyBuf = Union[np.ndarray, Tuple[np.ndarray, np.ndarray]]
+
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+
+
+def _mix64(h: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer, elementwise over a uint64 array."""
+    with np.errstate(over="ignore"):
+        h = h ^ (h >> np.uint64(30))
+        h = h * np.uint64(0xBF58476D1CE4E5B9)
+        h = h ^ (h >> np.uint64(27))
+        h = h * np.uint64(0x94D049BB133111EB)
+        return h ^ (h >> np.uint64(31))
+
+
+def hash_fixed(values: np.ndarray) -> np.ndarray:
+    """uint64 hash per element of a fixed-width array, from the bit
+    pattern.  Float ``-0.0`` is canonicalized to ``+0.0`` first so equal
+    values (under ``==``) always hash equal; NaNs hash by bit pattern,
+    which is fine because NaN never equals anything."""
+    values = np.ascontiguousarray(values)
+    if np.issubdtype(values.dtype, np.floating):
+        values = np.where(values == 0, 0, values)
+    w = values.dtype.itemsize
+    bits = np.ascontiguousarray(values).view(f"u{w}").astype(np.uint64) \
+        if w < 8 else np.ascontiguousarray(values).view(np.uint64)
+    return _mix64(bits ^ _GOLDEN)
+
+
+def _chunk_salts(m: int) -> np.ndarray:
+    """Per-position uint64 salts for the chunk hash (position-keyed, so
+    'ab'+'cd' cannot collide with 'cd'+'ab')."""
+    with np.errstate(over="ignore"):
+        return _mix64((np.arange(m, dtype=np.uint64) + np.uint64(1))
+                      * _GOLDEN)
+
+
+def hash_var(offsets: np.ndarray, values: np.ndarray) -> np.ndarray:
+    """uint64 hash per row of a var-length byte column.
+
+    A pure function of the row's bytes: ``mix(mix(len) ^ XOR_j
+    mix(chunk_j ^ salt_j))`` over the row's *own* zero-padded big-endian
+    uint64 chunks — the XOR runs over exactly ``ceil(len/8)`` positions,
+    so the hash is identical across columns of different widths, across
+    slices, and across the length-skewed fallback (which computes the
+    same formula row by row).  The length seed keeps strings that differ
+    only in trailing NULs distinct."""
+    offsets = np.asarray(offsets)
+    n = len(offsets) - 1
+    lens = offsets[1:] - offsets[:-1]
+    h = _mix64(lens.astype(np.uint64) ^ _GOLDEN)
+    if n == 0 or int(lens.max(initial=0)) == 0:
+        return h
+    if _skewed(n, lens):
+        acc = np.fromiter(
+            (_row_chunk_acc(r) for r in _row_bytes(offsets, values)),
+            dtype=np.uint64, count=n)
+        return _mix64(h ^ acc)
+    chunks = _padded_chunks(offsets, values, lens)
+    salts = _chunk_salts(chunks.shape[1])
+    nchunks = (lens + 7) // 8
+    acc = np.zeros(n, dtype=np.uint64)
+    for j in range(chunks.shape[1]):
+        term = _mix64(chunks[:, j] ^ salts[j])
+        acc ^= np.where(j < nchunks, term, np.uint64(0))
+    return _mix64(h ^ acc)
+
+
+def _row_chunk_acc(row: bytes) -> np.uint64:
+    """One row's chunk accumulator (the skew fallback), same formula as
+    the vectorized path but over a single row's chunk array."""
+    m = -(-len(row) // 8)
+    if m == 0:
+        return np.uint64(0)
+    arr = np.frombuffer(row.ljust(m * 8, b"\0"), dtype=">u8") \
+        .astype(np.uint64)
+    return np.bitwise_xor.reduce(_mix64(arr ^ _chunk_salts(m)))
+
+
+def combine_hashes(col_hashes: Sequence[np.ndarray], n: int) -> np.ndarray:
+    """Fold per-column uint64 hash arrays into one row hash.
+    Order-sensitive: the same columns in a different order hash
+    differently.  This is the representation-free half of ``hash_keys``:
+    a dict-encoded key column can hash its dictionary once, scatter
+    through its codes, and still combine identically to the plain utf8
+    column it decodes to."""
+    h = np.full(n, _GOLDEN, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        for hk in col_hashes:
+            h = _mix64(h * _GOLDEN ^ hk)
+    return h
+
+
+def hash_keys(keys: Sequence[KeyBuf], n: int) -> np.ndarray:
+    """Combine raw key buffers into one uint64 row hash.  Each key is a
+    fixed-width ndarray or an ``(offsets, values)`` pair; ``n`` is the
+    row count (needed for the zero-key edge)."""
+    return combine_hashes(
+        [hash_var(*k) if isinstance(k, tuple) else hash_fixed(k)
+         for k in keys], n)
+
+
+def hash_join_probe(build_hash: np.ndarray, probe_hash: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Hash-equality candidate pairs between a build and a probe side.
+
+    Sorts the build hashes once (the 'build' phase), then binary-searches
+    every probe hash into the sorted order and expands the equal-hash
+    runs: returns ``(probe_idx, build_idx)`` int64 index arrays, one
+    entry per candidate pair, probe-major with build indices ascending
+    within each probe row.  Distinct keys that collide on the 64-bit
+    hash survive as candidates — the caller confirms real key equality.
+    """
+    order = np.argsort(build_hash, kind="stable")
+    sh = build_hash[order]
+    lo = np.searchsorted(sh, probe_hash, side="left")
+    hi = np.searchsorted(sh, probe_hash, side="right")
+    counts = hi - lo
+    probe_idx = np.repeat(np.arange(len(probe_hash), dtype=np.int64),
+                          counts)
+    build_pos = np.repeat(lo, counts) + ranges(counts)
+    return probe_idx, order[build_pos]
+
+
+def bytes_rows_equal(off_a: np.ndarray, val_a: np.ndarray,
+                     off_b: np.ndarray, val_b: np.ndarray) -> np.ndarray:
+    """Per-row equality of two equally-long var-length columns: bool[i]
+    == (row i of A == row i of B).  Lengths first, then one flat
+    gather-and-compare of the equal-length rows (cumulative-sum segment
+    reduction, so zero-length rows are handled exactly)."""
+    off_a, off_b = np.asarray(off_a), np.asarray(off_b)
+    lens_a = off_a[1:] - off_a[:-1]
+    eq = lens_a == (off_b[1:] - off_b[:-1])
+    idx = np.nonzero(eq)[0]
+    if len(idx) == 0:
+        return eq
+    ga_off, ga = take_var(off_a, val_a, idx)
+    _, gb = take_var(off_b, val_b, idx)
+    diff = ga != gb
+    if diff.any():
+        cs = np.zeros(len(diff) + 1, dtype=np.int64)
+        np.cumsum(diff, out=cs[1:])
+        eq[idx] &= (cs[ga_off[1:]] - cs[ga_off[:-1]]) == 0
+    return eq
+
+
+# --------------------------------------------------------------------------
+# group-by: boundary detection + segment reducers
+# --------------------------------------------------------------------------
+
+def group_ranges(codes: Sequence[np.ndarray]
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Group boundary detection over per-column dense codes.
+
+    ``codes`` is one int array per key column; rows with equal code
+    tuples form a group.  Returns ``(order, starts)``: ``order`` is a
+    stable sort permutation that makes groups contiguous (primary key =
+    ``codes[0]``, so groups come out in ascending code order), and
+    ``starts`` marks each group's first position in the sorted order
+    (``starts[0] == 0``; group g spans ``order[starts[g]:starts[g+1]]``).
+    """
+    n = len(codes[0])
+    if n == 0:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    order = np.lexsort(tuple(reversed([np.asarray(c) for c in codes])))
+    new_group = np.zeros(n, dtype=bool)
+    new_group[0] = True
+    for c in codes:
+        sc = np.asarray(c)[order]
+        new_group[1:] |= sc[1:] != sc[:-1]
+    return order, np.nonzero(new_group)[0]
+
+
+def _group_ends(starts: np.ndarray, n: int) -> np.ndarray:
+    return np.append(starts[1:], n)
+
+
+def grouped_count(values: np.ndarray, order: np.ndarray,
+                  starts: np.ndarray, valid=None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-group count of non-null rows (``values`` is ignored — the
+    signature matches the other reducers for uniform dispatch)."""
+    ends = _group_ends(starts, len(order))
+    if valid is None:
+        counts = (ends - starts).astype(np.int64)
+        return counts, counts
+    cs = np.zeros(len(order) + 1, dtype=np.int64)
+    np.cumsum(valid[order].astype(np.int64), out=cs[1:])
+    counts = cs[ends] - cs[starts]
+    return counts, counts
+
+
+def grouped_sum(values: np.ndarray, order: np.ndarray,
+                starts: np.ndarray, valid=None
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-group sum over non-null rows -> (sums, counts).  Integer and
+    bool inputs widen to int64 (SQL-style, no narrow-dtype wraparound)
+    and reduce with ``reduceat`` (integer addition is exact in any
+    order); float inputs widen to float64 and accumulate with
+    ``np.bincount``, whose C loop adds row by row in *original row
+    order* — bit-identical to a naive left-to-right per-row loop, unlike
+    ``reduceat``'s position-dependent SIMD accumulation.  A zero-count
+    (all-null) group's sum is meaningless and should be nulled by the
+    caller."""
+    _, counts = grouped_count(values, order, starts, valid)
+    n_groups = len(starts)
+    if values.dtype == np.bool_ or np.issubdtype(values.dtype, np.integer):
+        if n_groups == 0:
+            return np.empty(0, np.int64), counts
+        v = values[order].astype(np.int64)
+        if valid is not None:
+            v = np.where(valid[order], v, 0)
+        return np.add.reduceat(v, starts), counts
+    gid = np.empty(len(order), dtype=np.int64)
+    gid[order] = np.repeat(np.arange(n_groups, dtype=np.int64),
+                           _group_ends(starts, len(order)) - starts)
+    w = values.astype(np.float64, copy=False)
+    if valid is not None:
+        w = np.where(valid, w, 0.0)
+    return np.bincount(gid, weights=w, minlength=n_groups), counts
+
+
+def _grouped_extreme(values, order, starts, valid, ufunc, sentinel):
+    v = values[order]
+    if v.dtype == np.bool_:
+        v = v.astype(np.uint8)
+    if valid is not None:
+        v = np.where(valid[order], v, sentinel(v.dtype))
+    _, counts = grouped_count(values, order, starts, valid)
+    return ufunc.reduceat(v, starts), counts
+
+
+def _dtype_max(dt):
+    return np.inf if np.issubdtype(dt, np.floating) else np.iinfo(dt).max
+
+
+def _dtype_min(dt):
+    return -np.inf if np.issubdtype(dt, np.floating) else np.iinfo(dt).min
+
+
+def grouped_min(values, order, starts, valid=None):
+    """Per-group min over non-null rows -> (mins, counts)."""
+    return _grouped_extreme(values, order, starts, valid,
+                            np.minimum, _dtype_max)
+
+
+def grouped_max(values, order, starts, valid=None):
+    """Per-group max over non-null rows -> (maxs, counts)."""
+    return _grouped_extreme(values, order, starts, valid,
+                            np.maximum, _dtype_min)
+
+
+def grouped_mean(values, order, starts, valid=None):
+    """Per-group float64 mean over non-null rows -> (means, counts);
+    zero-count groups produce NaN (the caller nulls them)."""
+    sums, counts = grouped_sum(values, order, starts, valid)
+    with np.errstate(invalid="ignore", divide="ignore"):
+        return sums.astype(np.float64) / counts, counts
+
+
+#: reducer dispatch for ``ops.group_by`` (all share one signature)
+GROUPED_REDUCERS = {
+    "count": grouped_count, "sum": grouped_sum, "min": grouped_min,
+    "max": grouped_max, "mean": grouped_mean,
+}

@@ -2,6 +2,9 @@
 the paper's system and the LM framework.
 
 Per epoch, per shard:   loader node (zarquet -> Arrow, DeCache-shared)
+                    [-> join+filter node against the corpus metadata
+                        table when ``meta_path`` is set (the metadata
+                        loader deserializes once for every shard DAG)]
                      -> pack node (tokenize + pack to a flat id column)
 and per step a *zero-copy row-slice* of the packed column is reshared out
 of the pipeline (paper Fig 6 'slice': no new bytes) and handed to
@@ -45,9 +48,32 @@ def pack_fn(tables: List[Table], batch: int, seq_len: int) -> Table:
     return Table.from_pydict({"ids": ids[:n]})
 
 
+def join_filter_fn(tables: List[Table], on: str = "doc",
+                   keep_col: str = "keep") -> Table:
+    """The pipeline's join-shaped stage: inner-join a text shard
+    (``tables[0]``) with the corpus metadata table (``tables[1]``) on the
+    document id and keep only rows whose ``keep_col`` is nonzero — the
+    metadata-driven corpus filter every curated training set runs.
+    Metadata payloads (e.g. the dict-encoded ``lang``) ride through the
+    join with their dictionaries reshared by reference.  Module-level so
+    a partial of it crosses the Flight process boundary."""
+    joined = ops.join(tables[0], tables[1], on=on, how="inner")
+    keep = joined.combine().batches[0].column(keep_col).to_numpy() != 0
+    return ops.filter_rows(joined, keep)
+
+
+#: ops.join/filter_rows are reached through the ``ops`` module attribute,
+#: which node fingerprints do not chase — declare them (join chains to
+#: its relational vkernels) so a join/kernel edit invalidates cached
+#: 'joinf' outputs instead of serving stale filtered tables
+join_filter_fn.__fp_includes__ = (ops.join, ops.filter_rows)
+
+
 def make_text_shards(root: str, n_shards: int, rows_per_shard: int,
                      seed: int = 0) -> List[str]:
-    """Synthetic corpus shards (zarquet files with a 'text' column)."""
+    """Synthetic corpus shards (zarquet files with 'doc' id + 'text'
+    columns; doc ids are globally unique across shards so a metadata
+    table written by ``make_doc_meta`` joins against every shard)."""
     rng = np.random.default_rng(seed)
     words = ["the", "quick", "brown", "fox", "jumps", "over", "lazy",
              "dog", "zero", "copy", "arrow", "pipeline", "kernel",
@@ -57,11 +83,33 @@ def make_text_shards(root: str, n_shards: int, rows_per_shard: int,
     for s in range(n_shards):
         texts = [" ".join(rng.choice(words, size=rng.integers(8, 24)))
                  for _ in range(rows_per_shard)]
-        t = Table.from_pydict({"text": texts})
+        base = s * rows_per_shard
+        t = Table.from_pydict({
+            "doc": np.arange(base, base + rows_per_shard, dtype=np.int64),
+            "text": texts})
         p = os.path.join(root, f"shard-{s:04d}.zq")
         zarquet.write_table(p, t)
         paths.append(p)
     return paths
+
+
+def make_doc_meta(root: str, n_docs: int, keep_frac: float = 0.75,
+                  seed: int = 1) -> str:
+    """Write the corpus metadata table (doc id, keep flag, language tag)
+    the join-shaped pipeline stage filters against.  ``lang`` is low-
+    cardinality on purpose: loaded with ``dict_columns=('lang',)`` its
+    dictionary reshares through every per-shard join."""
+    rng = np.random.default_rng(seed)
+    langs = np.array(["en", "de", "fr", "ja"])
+    t = Table.from_pydict({
+        "doc": np.arange(n_docs, dtype=np.int64),
+        "keep": (rng.random(n_docs) < keep_frac).astype(np.int64),
+        "lang": list(langs[rng.integers(0, len(langs), size=n_docs)]),
+    })
+    os.makedirs(root, exist_ok=True)
+    p = os.path.join(root, "meta.zq")
+    zarquet.write_table(p, t)
+    return p
 
 
 @dataclass
@@ -85,6 +133,13 @@ class PipelineConfig:
     #                                  # shards' load/pack outputs from the
     #                                  # manifest instead of recomputing
     #                                  # (store becomes durable/file-backed)
+    meta_path: Optional[str] = None    # corpus metadata table (see
+    #                                  # make_doc_meta): adds a join-shaped
+    #                                  # stage per shard — inner-join on
+    #                                  # 'doc', keep rows with keep != 0 —
+    #                                  # before packing; the metadata
+    #                                  # loader is DeCache-shared across
+    #                                  # every shard DAG
 
 
 class ZerrowDataPipeline:
@@ -116,16 +171,28 @@ class ZerrowDataPipeline:
 
     def _run_shards(self, paths: List[str]) -> List:
         """One DAG per shard, submitted together: with ``workers > 1`` the
-        loader decompressions overlap in the executor's worker pool."""
+        loader decompressions overlap in the executor's worker pool.
+        With ``meta_path`` each DAG grows a metadata loader (one DeCache-
+        shared deserialization for all shards) and a join+filter stage
+        between load and pack."""
         dags = []
         fn = self._pack_fn()
+        meta = self.cfg.meta_path
         for path in paths:
             est = max(os.path.getsize(path) * 8, 1 << 20)
-            dags.append(DAG([
-                NodeSpec("load", source=path, est_mem=est),
-                NodeSpec("pack", fn=fn, deps=["load"],
-                         est_mem=est // 2, keep_output=True),
-            ], name=f"pipe-{os.path.basename(path)}"))
+            nodes = [NodeSpec("load", source=path, est_mem=est)]
+            pack_dep = "load"
+            if meta:
+                nodes.append(NodeSpec(
+                    "meta", source=meta, dict_columns=("lang",),
+                    est_mem=max(os.path.getsize(meta) * 8, 1 << 20)))
+                nodes.append(NodeSpec(
+                    "joinf", fn=join_filter_fn,
+                    deps=["load", "meta"], est_mem=est))
+                pack_dep = "joinf"
+            nodes.append(NodeSpec("pack", fn=fn, deps=[pack_dep],
+                                  est_mem=est // 2, keep_output=True))
+            dags.append(DAG(nodes, name=f"pipe-{os.path.basename(path)}"))
         self.ex.run(dags)
         # keep_output=True: the packed messages survive DAG completion;
         # we own their release

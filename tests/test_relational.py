@@ -1,0 +1,523 @@
+"""Property suite: ``ops.join`` / ``ops.group_by`` bit-identical to naive
+per-row references on seeded random tables — mixed dtypes, null keys,
+duplicate keys, empty build/probe sides, dict-encoded keys — plus the
+zero-copy invariants the relational engine claims:
+
+  * join payload dictionaries ride through as SIPC *reshares* (every
+    dictionary BufRef on the join output has ``reshared=True``; the only
+    copied bytes anywhere are the page-edge de-anonymization tax on
+    genuinely-new buffers — never a data copy);
+  * thread and Flight process workers produce bit-identical results,
+    with worker-side reshare stats propagated to the parent;
+  * differential reruns over a join recompute only the affected side.
+
+References are plain Python loops over ``to_pydict`` rows.  Seeded-numpy
+generation runs everywhere; when ``hypothesis`` is installed the join
+property also runs under real strategies.
+"""
+import functools
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import (BufferStore, DAG, Executor, NodeSpec, RMConfig,
+                        ResourceManager, SipcReader, make_executor)
+from repro.core import ops, zarquet
+from repro.core.arrow import Column, Table, pack_validity
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# random-table generation
+# ---------------------------------------------------------------------------
+
+def _key_column(rng, n, kind, card=4, null_frac=0.0):
+    """A key column of small cardinality (duplicates on purpose)."""
+    validity = None
+    if null_frac > 0 and n:
+        validity = pack_validity(rng.random(n) >= null_frac)
+    if kind == "int":
+        return Column.primitive(
+            rng.integers(0, card, size=n).astype(np.int64), validity)
+    if kind == "float":
+        vals = rng.integers(0, card, size=n).astype(np.float64) / 2
+        return Column(Column.primitive(vals).type, n, vals,
+                      validity=validity)
+    strs = [f"k{int(v)}" for v in rng.integers(0, card, size=n)]
+    c = Column.from_strings(strs, validity=validity)
+    if kind == "dict":
+        from repro.core import vkernels
+        codes, uoff, uvals = vkernels.dict_encode_var(c.offsets, c.values)
+        return Column.dictionary_encoded(codes, Column.utf8(uoff, uvals),
+                                         validity=validity)
+    return c
+
+
+def _payload_column(rng, n, kind, null_frac=0.2):
+    validity = None
+    if null_frac > 0 and n:
+        validity = pack_validity(rng.random(n) >= null_frac)
+    if kind == "int":
+        return Column.primitive(
+            rng.integers(-50, 50, size=n).astype(np.int64), validity)
+    if kind == "float":
+        vals = np.round(rng.random(n), 3)          # no NaN, exact halves
+        return Column(Column.primitive(vals).type, n, vals,
+                      validity=validity)
+    if kind == "bool":
+        return Column.primitive(rng.random(n) < 0.5, validity)
+    return Column.from_strings(
+        ["v%d" % v for v in rng.integers(0, 9, size=n)], validity)
+
+
+def _rand_table(rng, n, key_kinds, payload_kinds, prefix,
+                key_nulls=0.15):
+    cols = {}
+    for i, kk in enumerate(key_kinds):
+        cols[f"k{i}"] = _key_column(rng, n, kk, null_frac=key_nulls)
+    for i, pk in enumerate(payload_kinds):
+        cols[f"{prefix}{i}"] = _payload_column(rng, n, pk)
+    return Table.from_pydict(cols)
+
+
+# ---------------------------------------------------------------------------
+# naive per-row references
+# ---------------------------------------------------------------------------
+
+def ref_join(ld, rd, keys, how, suffix="_right"):
+    """Nested-loop join over to_pydict row dicts.  Null keys never
+    match; output is left-major with right matches in right-row order."""
+    lcols, rcols = list(ld), list(rd)
+    rpay = [c for c in rcols if c not in keys]
+    names = {c: (c + suffix if c in lcols else c) for c in rpay}
+    out = {c: [] for c in lcols}
+    out.update({names[c]: [] for c in rpay})
+    n_l = len(ld[lcols[0]]) if lcols else 0
+    n_r = len(rd[rcols[0]]) if rcols else 0
+    for i in range(n_l):
+        key = tuple(ld[k][i] for k in keys)
+        matches = []
+        if all(v is not None for v in key):
+            for j in range(n_r):
+                rkey = tuple(rd[k][j] for k in keys)
+                if all(v is not None for v in rkey) and rkey == key:
+                    matches.append(j)
+        if not matches:
+            if how == "left":
+                for c in lcols:
+                    out[c].append(ld[c][i])
+                for c in rpay:
+                    out[names[c]].append(None)
+            continue
+        for j in matches:
+            for c in lcols:
+                out[c].append(ld[c][i])
+            for c in rpay:
+                out[names[c]].append(rd[c][j])
+    return out
+
+
+def _ref_agg(rows, how):
+    """One aggregate over a group's rows (None = null), reproducing the
+    kernels bit-for-bit: float sums accumulate left-to-right in row
+    order as float64 (the ``np.bincount`` contract), integer sums widen
+    to int64 (exact in any order)."""
+    vals = [v for v in rows if v is not None]
+    if how == "count":
+        return len(vals)
+    if not vals:
+        return None
+    if how == "min":
+        return min(vals)
+    if how == "max":
+        return max(vals)
+    if isinstance(vals[0], bool) or isinstance(vals[0], (int, np.integer)):
+        s = np.int64(0)
+    else:
+        s = np.float64(0.0)
+    for v in vals:
+        s = s + v
+    if how == "mean":
+        return (np.float64(s) / len(vals)).item()
+    return s.item()
+
+
+def ref_group_by(d, keys, aggs):
+    """Dict-accumulation group-by; groups sorted by key values ascending
+    (utf8 in bytes order), the null group last per column."""
+    n = len(d[keys[0]])
+    groups = {}
+    for i in range(n):
+        groups.setdefault(tuple(d[k][i] for k in keys), []).append(i)
+
+    def sortkey(kt):
+        return [(1, b"") if v is None else
+                (0, v.encode() if isinstance(v, str) else v) for v in kt]
+
+    out = {k: [] for k in keys}
+    out.update({name: [] for name in aggs})
+    for kt in sorted(groups, key=sortkey):
+        idxs = groups[kt]
+        for k, v in zip(keys, kt):
+            out[k].append(v)
+        for name, (col, how) in aggs.items():
+            out[name].append(_ref_agg([d[col][i] for i in idxs], how))
+    return out
+
+
+ALL_AGGS = {"n": ("p0", "count"), "tot": ("p0", "sum"),
+            "lo": ("p0", "min"), "hi": ("p0", "max"),
+            "avg": ("p0", "mean")}
+
+
+# ---------------------------------------------------------------------------
+# join vs reference
+# ---------------------------------------------------------------------------
+
+KEY_MIXES = [("int",), ("utf8",), ("dict",), ("float",),
+             ("int", "utf8"), ("dict", "int")]
+
+
+@pytest.mark.parametrize("how", ["inner", "left"])
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("key_kinds", KEY_MIXES,
+                         ids=["-".join(k) for k in KEY_MIXES])
+def test_join_matches_reference(seed, how, key_kinds):
+    rng = np.random.default_rng(seed * 101 + len(key_kinds))
+    keys = [f"k{i}" for i in range(len(key_kinds))]
+    l = _rand_table(rng, int(rng.integers(1, 40)), key_kinds,
+                    ("int", "float", "utf8"), "l")
+    r = _rand_table(rng, int(rng.integers(1, 40)), key_kinds,
+                    ("float", "bool"), "r")
+    got = ops.join(l, r, on=keys, how=how).to_pydict()
+    want = ref_join(l.to_pydict(), r.to_pydict(), keys, how)
+    assert got == want
+
+
+@pytest.mark.parametrize("how", ["inner", "left"])
+def test_join_empty_sides(how):
+    rng = np.random.default_rng(0)
+    l = _rand_table(rng, 12, ("int",), ("float",), "l")
+    r = _rand_table(rng, 9, ("int",), ("utf8",), "r")
+    l0, r0 = ops.slice_rows(l, 0, 0), ops.slice_rows(r, 0, 0)
+    for a, b in ((l0, r), (l, r0), (l0, r0)):
+        got = ops.join(a, b, on="k0", how=how).to_pydict()
+        assert got == ref_join(a.to_pydict(), b.to_pydict(), ["k0"], how)
+
+
+def test_join_dict_keys_match_plain_utf8():
+    """A dict-encoded key column joins against a plain utf8 key column:
+    equality is logical, not representational."""
+    rng = np.random.default_rng(7)
+    l = _rand_table(rng, 30, ("dict",), ("int",), "l")
+    r = _rand_table(rng, 20, ("utf8",), ("float",), "r")
+    got = ops.join(l, r, on="k0", how="left").to_pydict()
+    assert got == ref_join(l.to_pydict(), r.to_pydict(), ["k0"], "left")
+
+
+def test_join_utf8_keys_across_column_widths():
+    """The row hash is a pure function of row bytes: a short key must
+    match itself even when the other side's column holds a much longer
+    row (different padded-chunk widths)."""
+    l = Table.from_pydict({"k0": ["a", "x"],
+                           "lv": np.arange(2, dtype=np.int64)})
+    r = Table.from_pydict({"k0": ["a", "longerstring12345-beyond-chunk"],
+                           "rv": np.arange(2, dtype=np.int64)})
+    got = ops.join(l, r, on="k0", how="left").to_pydict()
+    assert got == ref_join(l.to_pydict(), r.to_pydict(), ["k0"], "left")
+
+
+def test_hash_var_skew_fallback_identical(monkeypatch):
+    """The length-skew per-row fallback computes the same hash as the
+    vectorized chunk path."""
+    from repro.core import vkernels as vk
+    c = Column.from_strings(["hello", "", "world-long-string-beyond-8B",
+                             "hello", "a\x00b"])
+    vec = vk.hash_var(c.offsets, c.values)
+    monkeypatch.setattr(vk, "_SKEW_FLOOR", 0)
+    monkeypatch.setattr(vk, "_SKEW_RATIO", 0)
+    assert np.array_equal(vk.hash_var(c.offsets, c.values), vec)
+
+
+def test_join_mixed_primitive_key_dtypes():
+    """int64 vs int32 (negative values!) and float32 vs float64 keys
+    hash through a common dtype, matching wherever ``==`` would."""
+    l = Table.from_pydict({"k0": np.array([-1, 2, 7], np.int64),
+                           "lv": np.arange(3, dtype=np.int64)})
+    r = Table.from_pydict({"k0": np.array([-1, 2], np.int32),
+                           "rv": np.arange(2, dtype=np.int64)})
+    got = ops.join(l, r, on="k0", how="left").to_pydict()
+    assert got["rv"] == [0, 1, None]
+    lf = Table.from_pydict({"k0": np.array([1.5, -2.0], np.float32),
+                            "lv": np.arange(2, dtype=np.int64)})
+    rf = Table.from_pydict({"k0": np.array([1.5, -2.0, 9.0]),
+                            "rv": np.arange(3, dtype=np.int64)})
+    assert ops.join(lf, rf, on="k0").to_pydict()["rv"] == [0, 1]
+
+
+def test_join_kind_mismatch_raises():
+    l = Table.from_pydict({"k0": np.array([1], np.int64)})
+    r = Table.from_pydict({"k0": ["1"]})
+    with pytest.raises(TypeError):
+        ops.join(l, r, on="k0")
+
+
+def test_pipeline_join_stage_fingerprints_its_kernels():
+    """join_filter_fn declares ops.join/filter_rows via __fp_includes__:
+    a kernel edit must change its fingerprint (else cache_root reruns
+    would serve stale joined tables)."""
+    from repro.core import code_fingerprint
+    from repro.data.pipeline import join_filter_fn
+    fp = code_fingerprint(join_filter_fn)
+    assert fp is not None
+    saved = join_filter_fn.__fp_includes__
+    try:
+        join_filter_fn.__fp_includes__ = (ops.filter_rows,)
+        assert code_fingerprint(join_filter_fn) != fp
+    finally:
+        join_filter_fn.__fp_includes__ = saved
+
+
+def test_join_duplicate_heavy_keys():
+    """Cardinality 1: every probe row matches every build row."""
+    l = Table.from_pydict({"k0": np.zeros(5, np.int64),
+                           "lv": np.arange(5, dtype=np.int64)})
+    r = Table.from_pydict({"k0": np.zeros(3, np.int64),
+                           "rv": np.arange(3, dtype=np.int64)})
+    got = ops.join(l, r, on="k0").to_pydict()
+    assert len(got["k0"]) == 15
+    assert got == ref_join(l.to_pydict(), r.to_pydict(), ["k0"], "inner")
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=int(os.environ.get("ZERROW_HYP_EXAMPLES", "25")),
+              deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.sampled_from(["inner", "left"]),
+           st.sampled_from(KEY_MIXES))
+    def test_join_matches_reference_hypothesis(seed, how, key_kinds):
+        rng = np.random.default_rng(seed)
+        keys = [f"k{i}" for i in range(len(key_kinds))]
+        l = _rand_table(rng, int(rng.integers(0, 25)), key_kinds,
+                        ("float",), "l")
+        r = _rand_table(rng, int(rng.integers(0, 25)), key_kinds,
+                        ("int",), "r")
+        got = ops.join(l, r, on=keys, how=how).to_pydict()
+        assert got == ref_join(l.to_pydict(), r.to_pydict(), keys, how)
+
+
+# ---------------------------------------------------------------------------
+# group_by vs reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("key_kinds", KEY_MIXES,
+                         ids=["-".join(k) for k in KEY_MIXES])
+def test_group_by_matches_reference(seed, key_kinds):
+    rng = np.random.default_rng(seed * 37 + 11)
+    keys = [f"k{i}" for i in range(len(key_kinds))]
+    # null_frac high enough that some groups are all-null in the payload
+    t = _rand_table(rng, int(rng.integers(1, 60)), key_kinds,
+                    ("float", "int"), "p")
+    got = ops.group_by(t, keys, ALL_AGGS).to_pydict()
+    assert got == ref_group_by(t.to_pydict(), keys, ALL_AGGS)
+
+
+def test_group_by_int_payload_and_bool():
+    rng = np.random.default_rng(3)
+    t = _rand_table(rng, 50, ("utf8",), ("int", "bool"), "p")
+    aggs = {"n": ("p1", "count"), "s": ("p0", "sum"),
+            "anyv": ("p1", "max"), "allv": ("p1", "min"),
+            "m": ("p0", "mean")}
+    got = ops.group_by(t, ["k0"], aggs).to_pydict()
+    assert got == ref_group_by(t.to_pydict(), ["k0"], aggs)
+
+
+def test_group_by_zero_rows_and_single_group():
+    t = Table.from_pydict({"k0": np.array([5, 5, 5], np.int64),
+                           "p0": np.array([1.5, 2.5, 3.0])})
+    got = ops.group_by(t, "k0", ALL_AGGS).to_pydict()
+    assert got == ref_group_by(t.to_pydict(), ["k0"], ALL_AGGS)
+    empty = ops.slice_rows(t, 0, 0)
+    got0 = ops.group_by(empty, "k0", ALL_AGGS).to_pydict()
+    assert got0 == {"k0": [], "n": [], "tot": [], "lo": [], "hi": [],
+                    "avg": []}
+
+
+def test_group_by_all_null_payload_group_is_null():
+    t = Table.from_batch(
+        Table.from_pydict({"k0": np.array([1, 1, 2], np.int64),
+                           "p0": np.array([9., 8., 7.])}).schema,
+        [Column.primitive(np.array([1, 1, 2], np.int64)),
+         Column.primitive(np.array([9., 8., 7.]),
+                          validity=pack_validity(
+                              np.array([False, False, True])))])
+    got = ops.group_by(t, "k0", ALL_AGGS).to_pydict()
+    assert got["n"] == [0, 1]
+    assert got["tot"] == [None, 7.0] and got["avg"] == [None, 7.0]
+    assert got["lo"] == [None, 7.0] and got["hi"] == [None, 7.0]
+
+
+# ---------------------------------------------------------------------------
+# zero-copy invariants through the executor
+# ---------------------------------------------------------------------------
+
+def _write_star(tmp, seed=0):
+    rng = np.random.default_rng(seed)
+    cust = Table.from_pydict({
+        "cust": np.arange(64, dtype=np.int64),
+        "country": [f"c{i % 5}" for i in range(64)]})
+    orders = Table.from_pydict({
+        "cust": rng.integers(0, 72, size=400).astype(np.int64),
+        "amount": np.round(rng.random(400), 3)})
+    pc, po = os.path.join(tmp, "cust.zq"), os.path.join(tmp, "orders.zq")
+    zarquet.write_table(pc, cust)
+    zarquet.write_table(po, orders)
+    return po, pc
+
+
+def _star_dag(po, pc, est=1 << 22, keep_join=False):
+    return DAG([
+        NodeSpec("orders", source=po, est_mem=est),
+        NodeSpec("cust", source=pc, est_mem=est,
+                 dict_columns=("country",)),
+        NodeSpec("join", fn=functools.partial(ops.join_node, on="cust",
+                                              how="left"),
+                 deps=["orders", "cust"], est_mem=est,
+                 keep_output=keep_join),
+        NodeSpec("agg", fn=functools.partial(
+            ops.group_by_node, keys="country",
+            aggs={"total": ("amount", "sum"), "n": ("amount", "count")}),
+            deps=["join"], est_mem=est, keep_output=True),
+    ], name="star")
+
+
+def _dict_refs(msg):
+    out = []
+    for b in msg.batches:
+        for c in b.columns:
+            if c.dictionary is not None:
+                out.extend(c.dictionary.all_refs())
+    return out
+
+
+def test_join_payload_dictionary_reshares_not_copies(tmp_path):
+    """The acceptance invariant: join outputs get AddressMap hits — the
+    dimension dictionary is emitted as a reshared reference, never
+    re-deanonymized, and zero data bytes are copied anywhere (the only
+    ``bytes_copied`` are page-edge partial-page tax on new buffers)."""
+    po, pc = _write_star(str(tmp_path))
+    store = BufferStore(swap_dir=os.path.join(str(tmp_path), "swap"))
+    rm = ResourceManager(store, RMConfig(policy="adaptive"))
+    ex = Executor(store, rm)
+    dag = _star_dag(po, pc, keep_join=True)
+    ex.run([dag])
+    jm = dag.nodes["join"].output
+    drefs = _dict_refs(jm)
+    assert drefs, "join output lost its dictionary column"
+    assert all(r.reshared for r in drefs), \
+        "join payload dictionary was re-deanonymized instead of reshared"
+    # group_by keeps the dictionary by reference too
+    arefs = _dict_refs(dag.nodes["agg"].output)
+    assert arefs and all(r.reshared for r in arefs)
+    s = store.stats
+    assert s.reshare_hits > 0
+    assert s.bytes_copied == s.partial_page_bytes, \
+        "a full-buffer data copy happened on the relational path"
+    store.close()
+
+
+def test_join_groupby_thread_pool_equals_sequential(tmp_path):
+    results = []
+    for workers in (1, 4):
+        os.makedirs(str(tmp_path / f"w{workers}"), exist_ok=True)
+        po, pc = _write_star(str(tmp_path / f"w{workers}"))
+        store = BufferStore(
+            swap_dir=os.path.join(str(tmp_path), f"swap{workers}"))
+        rm = ResourceManager(store, RMConfig(policy="adaptive",
+                                             workers=workers))
+        ex = Executor(store, rm, workers=workers)
+        dag = _star_dag(po, pc)
+        ex.run([dag])
+        results.append(SipcReader(store).read_table(
+            dag.nodes["agg"].output).to_pydict())
+        store.close()
+    assert results[0] == results[1]
+
+
+def test_join_groupby_process_equals_thread(tmp_path):
+    """Relational ops under Flight process workers: bit-identical output
+    and worker-side reshare hits visible in the parent's stats."""
+    outs = {}
+    for mode in ("thread", "process"):
+        root = str(tmp_path / mode)
+        os.makedirs(root, exist_ok=True)
+        po, pc = _write_star(root)
+        backing = "file" if mode == "process" else "ram"
+        store = BufferStore(
+            swap_dir=os.path.join(root, "swap"), backing=backing,
+            data_dir=os.path.join(root, "store")
+            if backing == "file" else None)
+        rm = ResourceManager(store, RMConfig(policy="adaptive", workers=2,
+                                             workers_mode=mode))
+        ex = make_executor(store, rm, workers=2)
+        dag = _star_dag(po, pc)
+        ex.run([dag])
+        outs[mode] = SipcReader(store).read_table(
+            dag.nodes["agg"].output).to_pydict()
+        rs = ex.reshare_stats()
+        assert rs["reshare_hits"] > 0, f"no reshare hits in {mode} mode"
+        if mode == "process":
+            assert ex.fallback_inline == 0, "relational ops must pickle"
+            assert ex.worker_stats.get("reshare_hits", 0) > 0, \
+                "worker-side reshare stats did not propagate"
+        ex.close()
+        store.close()
+    assert outs["thread"] == outs["process"]
+
+
+def test_differential_rerun_recomputes_only_affected_side(tmp_path):
+    """Cross-run caching over a join DAG: a change to the fact source
+    invalidates orders -> join -> agg but the dimension loader stays
+    CACHED (adopted, not re-executed)."""
+    cache_root = str(tmp_path / "cache")
+    data = str(tmp_path / "data")
+    os.makedirs(data)
+    po, pc = _write_star(data, seed=0)
+
+    def run():
+        store = BufferStore(backing="file", root=cache_root,
+                            swap_dir=os.path.join(data, "swap"))
+        rm = ResourceManager(store, RMConfig(policy="adaptive",
+                                             cache_root=cache_root))
+        ex = Executor(store, rm)
+        dag = _star_dag(po, pc)
+        ex.run([dag])
+        out = SipcReader(store).read_table(
+            dag.nodes["agg"].output).to_pydict()
+        counts = (ex.node_runs, ex.cache_hits,
+                  {n: st.status for n, st in dag.nodes.items()})
+        store.close()
+        return out, counts
+
+    out1, (runs1, hits1, _) = run()
+    assert runs1 == 4 and hits1 == 0
+    # warm rerun: everything adopted, nothing executed
+    out2, (runs2, hits2, _) = run()
+    assert out1 == out2
+    assert runs2 == 0 and hits2 == 4
+    # change the fact table only: the dimension side must stay cached
+    rng_orders = Table.from_pydict({
+        "cust": np.arange(300, dtype=np.int64) % 70,
+        "amount": np.round(np.random.default_rng(9).random(300), 3)})
+    zarquet.write_table(po, rng_orders)
+    out3, (runs3, hits3, states) = run()
+    assert runs3 == 3, f"expected orders+join+agg to re-run, got {states}"
+    assert hits3 == 1 and states["cust"] == "cached"
+    assert out3 != out1
