@@ -47,7 +47,8 @@ and selecting it by name in ``RMConfig``.
 from . import vkernels
 from .arrow import (ArrowType, Column, Field, RecordBatch, Schema, Table,
                     BOOL, FLOAT32, FLOAT64, INT8, INT16, INT32, INT64,
-                    UINT8, UTF8, dict_of, pack_validity, unpack_validity)
+                    UINT8, UINT64, UTF8, dict_of, pack_validity,
+                    unpack_validity)
 from .buffers import (PAGE, AnonRegion, BufferStore, Cgroup, OOMError,
                       StoreFile, StoreStats, alloc_aligned)
 from .dag import (CACHED, DAG, InvalidTransition, NodeSpec, NodeState,
@@ -71,7 +72,8 @@ from .sipc import (AddressMap, BufRef, SipcMessage, SipcReader, SipcWriter)
 __all__ = [
     "ArrowType", "Column", "Field", "RecordBatch", "Schema", "Table",
     "BOOL", "FLOAT32", "FLOAT64", "INT8", "INT16", "INT32", "INT64",
-    "UINT8", "UTF8", "dict_of", "pack_validity", "unpack_validity",
+    "UINT8", "UINT64", "UTF8", "dict_of", "pack_validity",
+    "unpack_validity",
     "PAGE", "AnonRegion", "BufferStore", "Cgroup", "OOMError", "StoreFile",
     "StoreStats", "alloc_aligned", "CACHED", "DAG", "InvalidTransition",
     "NodeSpec", "NodeState", "Sandbox", "VALID_TRANSITIONS",

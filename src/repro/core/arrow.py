@@ -67,6 +67,7 @@ INT16 = ArrowType("int16", "int16")
 INT32 = ArrowType("int32", "int32")
 INT64 = ArrowType("int64", "int64")
 UINT8 = ArrowType("uint8", "uint8")
+UINT64 = ArrowType("uint64", "uint64")
 FLOAT32 = ArrowType("float32", "float32")
 FLOAT64 = ArrowType("float64", "float64")
 BOOL = ArrowType("bool", "bool")
@@ -78,7 +79,8 @@ def dict_of(value_type: ArrowType = UTF8) -> ArrowType:
 
 
 _PRIMITIVES = {t.name: t for t in
-               (INT8, INT16, INT32, INT64, UINT8, FLOAT32, FLOAT64, BOOL)}
+               (INT8, INT16, INT32, INT64, UINT8, UINT64, FLOAT32, FLOAT64,
+                BOOL)}
 
 
 def type_for_np(dt: np.dtype) -> ArrowType:
@@ -288,7 +290,18 @@ class Column:
             return self.take(indices)
         if self.length == 0:
             return _null_column(self.type, len(indices), self.dictionary)
-        out = self.take(np.where(miss, 0, indices))
+        safe = np.where(miss, 0, indices)
+        if self.type.is_utf8:
+            # miss rows gather zero bytes — clamping the index alone
+            # would copy row 0's payload once per miss
+            off = self.offsets
+            starts = off[:-1][safe]
+            lens = np.where(miss, 0, off[1:][safe] - starts)
+            new_off, vals = vkernels.gather_var(self.values, starts, lens)
+            vm = self.valid_mask()[safe]
+            vm[miss] = False
+            return Column.utf8(new_off, vals, validity=pack_validity(vm))
+        out = self.take(safe)
         vm = out.valid_mask()
         vm[miss] = False
         return Column(out.type, out.length, out._values,

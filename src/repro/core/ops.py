@@ -234,8 +234,12 @@ def _key_cast_map(lb: RecordBatch, rb: RecordBatch,
                   keys: Sequence[str]) -> Dict[str, np.dtype]:
     """Common hash dtype per primitive-kind key column: both sides hash
     through ``np.result_type`` of their logical dtypes, so bit patterns
-    agree whenever ``==`` would.  Joining a utf8-kind key against a
-    primitive-kind key is a type error, not an empty result."""
+    agree whenever ``==`` would.  Mixed int64/uint64 hashes through
+    float64 — complete for candidate generation (equal integers cast to
+    the same float), with float-rounding collisions filtered by the
+    exact-integer confirm in ``_key_pairs_equal``.  Joining a utf8-kind
+    key against a primitive-kind key is a type error, not an empty
+    result."""
     def prim_dtype(c: Column) -> np.dtype:
         t = c.type.value_type if c.type.is_dict else c.type
         return np.dtype(t.np_dtype)
@@ -251,6 +255,18 @@ def _key_cast_map(lb: RecordBatch, rb: RecordBatch,
     return cast
 
 
+def _exact_int_equal(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Exact elementwise == for integer arrays numpy would promote to
+    float64 (int64 vs uint64): a negative signed value never equals any
+    unsigned value; the rest compare as uint64 with no precision loss."""
+    ok = np.ones(len(a), dtype=bool)
+    if np.issubdtype(a.dtype, np.signedinteger):
+        ok &= a >= 0
+    if np.issubdtype(b.dtype, np.signedinteger):
+        ok &= b >= 0
+    return ok & (a.astype(np.uint64) == b.astype(np.uint64))
+
+
 def _key_pairs_equal(lcol: Column, li: np.ndarray,
                      rcol: Column, ri: np.ndarray) -> np.ndarray:
     """Confirm candidate pairs: bool per pair, left row li[p] == right
@@ -259,7 +275,12 @@ def _key_pairs_equal(lcol: Column, li: np.ndarray,
         off_a, val_a = lcol._logical_var(li)
         off_b, val_b = rcol._logical_var(ri)
         return vkernels.bytes_rows_equal(off_a, val_a, off_b, val_b)
-    return lcol._logical()[li] == rcol._logical()[ri]
+    a, b = lcol._logical()[li], rcol._logical()[ri]
+    if (np.issubdtype(a.dtype, np.integer)
+            and np.issubdtype(b.dtype, np.integer)
+            and not np.issubdtype(np.result_type(a, b), np.integer)):
+        return _exact_int_equal(a, b)
+    return a == b
 
 
 def join(left: Table, right: Table, on: Union[str, Sequence[str]],
@@ -268,11 +289,16 @@ def join(left: Table, right: Table, on: Union[str, Sequence[str]],
 
     ``on`` names key columns present in both tables (same logical kind:
     utf8 and dict-of-utf8 mix freely; primitives must compare with
-    ``==``).  Null keys never match (SQL semantics): inner drops them,
+    ``==``, except that mixed signed/unsigned 64-bit integer keys are
+    compared *exactly* — numpy's float64 promotion would conflate
+    distinct integers beyond 2**53).  Null keys never match (SQL
+    semantics): inner drops them,
     left preserves the row with all-null right payloads.  Output rows
     are left-major (left row order preserved) with matching right rows
     ascending; columns are the left table's, then right's non-key
-    columns (name collisions get ``suffix``).  Left payloads are
+    columns (name collisions get ``suffix``; a name that still collides
+    after suffixing raises ``ValueError`` rather than emitting a
+    duplicate field).  Left payloads are
     take-gathers, right payloads nullable take-gathers — dictionary
     buffers of dict-encoded payloads pass through by reference, so SIPC
     reshares them on the output (no re-deanonymization).
@@ -308,10 +334,17 @@ def join(left: Table, right: Table, on: Union[str, Sequence[str]],
     for f, c in zip(lb.schema.fields, lb.columns):
         fields.append(f)
         cols.append(c.take(li))
+    used = set(lnames)
     for f, c in zip(rb.schema.fields, rb.columns):
         if f.name in rkeys:
             continue                 # equal to the left key by definition
         name = f.name + suffix if f.name in lnames else f.name
+        if name in used:
+            raise ValueError(
+                f"join output column {name!r} is ambiguous (suffixed "
+                f"right column collides with an existing column); rename "
+                f"it or pass a different suffix")
+        used.add(name)
         fields.append(Field(name, c.type))
         cols.append(c.take_nullable(ri))
     return Table.from_batch(Schema(fields), cols)
@@ -368,6 +401,10 @@ def group_by(table: Table, keys: Union[str, Sequence[str]],
     whose payload is all-null aggregates to null (count: 0).
     """
     keys = [keys] if isinstance(keys, str) else list(keys)
+    clash = [n for n in aggs if n in keys]
+    if clash:
+        raise ValueError(f"agg output name(s) {clash} collide with key "
+                         f"column(s); pick a different out_name")
     b = table.combine().batches[0]
     order, starts = vkernels.group_ranges(
         [_group_codes(b.column(k)) for k in keys])
@@ -417,7 +454,7 @@ def group_by_node(tables: Sequence[Table], keys, aggs: AggSpec) -> Table:
 #: declaring them here makes a kernel edit invalidate every cached
 #: join/group-by output (differential reruns recompute the affected side)
 join.__fp_includes__ = (
-    vkernels.hash_keys, vkernels.combine_hashes, vkernels.hash_fixed,
+    vkernels.combine_hashes, vkernels.hash_fixed,
     vkernels.hash_var, vkernels.hash_join_probe,
     vkernels.bytes_rows_equal)
 group_by.__fp_includes__ = (

@@ -381,7 +381,10 @@ def hash_var(offsets: np.ndarray, values: np.ndarray) -> np.ndarray:
     lens = offsets[1:] - offsets[:-1]
     h = _mix64(lens.astype(np.uint64) ^ _GOLDEN)
     if n == 0 or int(lens.max(initial=0)) == 0:
-        return h
+        # all rows empty: acc is 0 for every row, but the final mix must
+        # still run or an empty row here would hash differently from an
+        # empty row in a mixed column
+        return _mix64(h)
     if _skewed(n, lens):
         acc = np.fromiter(
             (_row_chunk_acc(r) for r in _row_bytes(offsets, values)),
@@ -425,7 +428,10 @@ def combine_hashes(col_hashes: Sequence[np.ndarray], n: int) -> np.ndarray:
 def hash_keys(keys: Sequence[KeyBuf], n: int) -> np.ndarray:
     """Combine raw key buffers into one uint64 row hash.  Each key is a
     fixed-width ndarray or an ``(offsets, values)`` pair; ``n`` is the
-    row count (needed for the zero-key edge)."""
+    row count (needed for the zero-key edge).  ``ops._key_hashes``
+    composes the same primitives directly (a dict-encoded key needs a
+    hash-the-dictionary-then-scatter step a raw KeyBuf cannot express)
+    and must stay hash-identical to this on plain columns."""
     return combine_hashes(
         [hash_var(*k) if isinstance(k, tuple) else hash_fixed(k)
          for k in keys], n)
@@ -525,9 +531,13 @@ def grouped_sum(values: np.ndarray, order: np.ndarray,
                 starts: np.ndarray, valid=None
                 ) -> Tuple[np.ndarray, np.ndarray]:
     """Per-group sum over non-null rows -> (sums, counts).  Integer and
-    bool inputs widen to int64 (SQL-style, no narrow-dtype wraparound)
+    bool inputs widen to int64 (SQL-style, no narrow-dtype wraparound;
+    uint64 stays uint64 — widening to int64 would wrap values >= 2**63)
     and reduce with ``reduceat`` (integer addition is exact in any
-    order); float inputs widen to float64 and accumulate with
+    order).  The 64-bit accumulator itself wraps silently — numpy
+    semantics — if a group's total exceeds int64/uint64 range; callers
+    needing totals beyond 2**63 should aggregate in float.  Float
+    inputs widen to float64 and accumulate with
     ``np.bincount``, whose C loop adds row by row in *original row
     order* — bit-identical to a naive left-to-right per-row loop, unlike
     ``reduceat``'s position-dependent SIMD accumulation.  A zero-count
@@ -536,11 +546,12 @@ def grouped_sum(values: np.ndarray, order: np.ndarray,
     _, counts = grouped_count(values, order, starts, valid)
     n_groups = len(starts)
     if values.dtype == np.bool_ or np.issubdtype(values.dtype, np.integer):
+        acc = np.uint64 if values.dtype == np.uint64 else np.int64
         if n_groups == 0:
-            return np.empty(0, np.int64), counts
-        v = values[order].astype(np.int64)
+            return np.empty(0, acc), counts
+        v = values[order].astype(acc)
         if valid is not None:
-            v = np.where(valid[order], v, 0)
+            v = np.where(valid[order], v, v.dtype.type(0))
         return np.add.reduceat(v, starts), counts
     gid = np.empty(len(order), dtype=np.int64)
     gid[order] = np.repeat(np.arange(n_groups, dtype=np.int64),
@@ -583,7 +594,11 @@ def grouped_max(values, order, starts, valid=None):
 
 def grouped_mean(values, order, starts, valid=None):
     """Per-group float64 mean over non-null rows -> (means, counts);
-    zero-count groups produce NaN (the caller nulls them)."""
+    zero-count groups produce NaN (the caller nulls them).  64-bit
+    integer inputs accumulate in float64 (the result is float64 anyway,
+    and an exact 64-bit sum could wrap the accumulator)."""
+    if np.issubdtype(values.dtype, np.integer) and values.dtype.itemsize == 8:
+        values = values.astype(np.float64)
     sums, counts = grouped_sum(values, order, starts, valid)
     with np.errstate(invalid="ignore", divide="ignore"):
         return sums.astype(np.float64) / counts, counts

@@ -246,6 +246,113 @@ def test_hash_var_skew_fallback_identical(monkeypatch):
     assert np.array_equal(vk.hash_var(c.offsets, c.values), vec)
 
 
+def test_hash_var_all_empty_column_matches_mixed():
+    """Regression: the all-rows-empty early return must apply the same
+    final mix as the main path, so an empty row hashes identically
+    whether or not its column has non-empty siblings."""
+    from repro.core import vkernels as vk
+    all_empty = Column.from_strings(["", ""])
+    mixed = Column.from_strings(["", "x"])
+    h_empty = vk.hash_var(all_empty.offsets, all_empty.values)
+    h_mixed = vk.hash_var(mixed.offsets, mixed.values)
+    assert h_empty[0] == h_empty[1] == h_mixed[0]
+    assert h_mixed[0] != h_mixed[1]
+    zero = Column.from_strings([])
+    assert len(vk.hash_var(zero.offsets, zero.values)) == 0
+
+
+def test_join_all_empty_string_keys():
+    """Regression: joining an all-empty-string key column against a
+    mixed one must match on the empty rows (they used to hash through
+    different code paths and silently drop)."""
+    l = Table.from_pydict({"k0": ["", "x"],
+                           "lv": np.arange(2, dtype=np.int64)})
+    r = Table.from_pydict({"k0": ["", ""],
+                           "rv": np.arange(2, dtype=np.int64)})
+    got = ops.join(l, r, on="k0").to_pydict()
+    assert got == ref_join(l.to_pydict(), r.to_pydict(), ["k0"], "inner")
+    assert got["lv"] == [0, 0]
+    # dict-encoded side whose dictionary is a single empty string
+    rd = ops.dict_encode(r, ["k0"])
+    assert ops.join(l, rd, on="k0").to_pydict() == got
+
+
+def test_join_int64_uint64_keys_exact():
+    """Mixed signed/unsigned 64-bit keys compare exactly: distinct
+    integers beyond 2**53 that round to the same float64 must not
+    match, and a negative int64 never equals a huge uint64."""
+    big = 2 ** 60
+    l = Table.from_pydict({"k0": np.array([big + 1, big, -1], np.int64),
+                           "lv": np.arange(3, dtype=np.int64)})
+    r = Table.from_pydict({"k0": np.array([big, 2 ** 64 - 1], np.uint64),
+                           "rv": np.arange(2, dtype=np.int64)})
+    got = ops.join(l, r, on="k0", how="left").to_pydict()
+    assert got["rv"] == [None, 0, None]
+    assert got == ref_join(l.to_pydict(), r.to_pydict(), ["k0"], "left")
+
+
+def test_group_by_agg_name_collision_raises():
+    t = Table.from_pydict({"k": np.array([1, 1, 2], np.int64),
+                           "x": np.array([1.0, 2.0, 3.0])})
+    with pytest.raises(ValueError):
+        ops.group_by(t, "k", {"k": ("x", "sum")})
+
+
+def test_group_by_uint64_sum_no_wrap():
+    """uint64 payload sums accumulate as uint64: widening to int64
+    would wrap values >= 2**63."""
+    t = Table.from_pydict({"k": np.array([1, 1, 2], np.int64),
+                           "p": np.array([2 ** 63, 5, 7], np.uint64)})
+    got = ops.group_by(t, "k", {"s": ("p", "sum")}).to_pydict()
+    assert got["s"] == [2 ** 63 + 5, 7]
+    # mean accumulates 64-bit ints in float64: a group total past 2**64
+    # must not wrap to garbage (sum itself is documented mod-2**64)
+    t2 = Table.from_pydict({"k": np.array([1, 1], np.int64),
+                            "p": np.array([2 ** 63, 2 ** 63 + 2],
+                                          np.uint64)})
+    m = ops.group_by(t2, "k", {"m": ("p", "mean")}).to_pydict()["m"][0]
+    assert m == pytest.approx(2.0 ** 63, rel=1e-12)
+
+
+def test_join_suffixed_name_collision_raises():
+    """A suffixed right payload that still collides with an existing
+    column raises instead of emitting a duplicate field name."""
+    l = Table.from_pydict({"k": np.array([1], np.int64),
+                           "v": np.array([7], np.int64),
+                           "v_right": np.array([8], np.int64)})
+    r = Table.from_pydict({"k": np.array([1], np.int64),
+                           "v": np.array([9], np.int64)})
+    with pytest.raises(ValueError):
+        ops.join(l, r, on="k")
+
+
+def test_left_join_miss_rows_gather_zero_utf8_bytes():
+    """Null rows of a left-join utf8 payload contribute 0 bytes — a
+    miss must not copy build row 0's payload."""
+    doc = "x" * 4096
+    l = Table.from_pydict({"k": np.array([1, 2, 3], np.int64),
+                           "lv": np.arange(3, dtype=np.int64)})
+    r = Table.from_pydict({"k": np.array([1], np.int64), "doc": [doc]})
+    got = ops.join(l, r, on="k", how="left")
+    col = got.batches[0].column("doc")
+    assert col.values.nbytes == len(doc)          # one match, two misses
+    assert got.to_pydict()["doc"] == [doc, None, None]
+
+
+def test_hash_keys_matches_ops_key_hashes():
+    """``vkernels.hash_keys`` over raw buffers must stay hash-identical
+    to the composition ``ops._key_hashes`` performs on plain columns."""
+    from repro.core import vkernels as vk
+    t = Table.from_pydict({"a": np.array([3, -1, 3], np.int64),
+                           "b": ["x", "", "x"]})
+    b = t.combine().batches[0]
+    cast = {"a": np.dtype(np.int64)}
+    via_ops, _ = ops._key_hashes(b, ["a", "b"], cast)
+    ca, cb = b.column("a"), b.column("b")
+    via_kernel = vk.hash_keys([ca.values, (cb.offsets, cb.values)], 3)
+    assert np.array_equal(via_ops, via_kernel)
+
+
 def test_join_mixed_primitive_key_dtypes():
     """int64 vs int32 (negative values!) and float32 vs float64 keys
     hash through a common dtype, matching wherever ``==`` would."""
