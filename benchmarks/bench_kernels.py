@@ -255,11 +255,16 @@ def bench_thread_scaling(results: dict) -> None:
     size = max(gb(0.02), 2 << 20) if SMOKE else gb(0.1)
     tables = [zarquet.gen_str_table(1, size, str_len=16, repeats=4, seed=i)
               for i in range(N_DAGS)]
-    walls = {}
-    for w in (1, 2, 4):
-        # min of two reps: a real GIL inversion is systematic and fails
-        # both, while a missed worker wakeup / CI noise spike fails one
-        walls[w] = min(_scaling_run(w, tables) for _ in range(2))
+    # paired interleaved min-of-N (3 reps in smoke): the box drifts by
+    # several percent over the seconds this lane takes, so back-to-back
+    # per-worker-count blocks hand later arms a systematic bias.  A real
+    # GIL inversion is systematic and survives every rep; a missed
+    # worker wakeup / CI noise spike contaminates one.
+    walls = {w: float("inf") for w in (1, 2, 4)}
+    for _ in range(3 if SMOKE else 2):
+        for w in walls:
+            walls[w] = min(walls[w], _scaling_run(w, tables))
+    for w in walls:
         results["thread_scaling"].append({"workers": w, "wall_s": walls[w]})
         Csv.add(f"kernels_thread_workers{w}", walls[w],
                 f"{walls[w] / walls[1]:.2f}x_of_seq")
@@ -268,11 +273,17 @@ def bench_thread_scaling(results: dict) -> None:
         "ratio_w4_over_w1": walls[4] / walls[1],
         "inversion_fixed": walls[4] <= walls[1] * SCALE_TOL,
     }
-    if SMOKE and walls[4] > walls[1] * SCALE_TOL:
+    # the smoke gate guards the gross inversion (1.34x at full size
+    # before PR 4) — on a 1-core CI box thread w4's genuine floor is
+    # ~1.0x of w1 with a few percent of scheduler noise on top, so the
+    # smoke tolerance carries headroom the full-size SCALE_TOL doesn't
+    # need
+    tol = 1.15 if SMOKE else SCALE_TOL
+    if SMOKE and walls[4] > walls[1] * tol:
         raise AssertionError(
             f"thread-scaling inversion returned: workers=4 took "
             f"{walls[4]:.3f}s vs workers=1 {walls[1]:.3f}s "
-            f"(> {SCALE_TOL}x) — per-row loops back on the compute path?")
+            f"(> {tol}x) — per-row loops back on the compute path?")
 
 
 def main() -> None:

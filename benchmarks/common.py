@@ -42,7 +42,13 @@ class Env:
 
 
 def make_env(**cfg) -> Env:
-    tmpdir = tempfile.mkdtemp(prefix="zerrow-bench-")
+    # tmpfs when available: the benchmarks compare data-plane designs,
+    # not disks.  Process mode REQUIRES file backing for its parent
+    # store, so on a spinning /tmp it would be billed disk writeback
+    # that the thread/ram runs never pay.
+    tmpdir = tempfile.mkdtemp(
+        prefix="zerrow-bench-",
+        dir="/dev/shm" if os.access("/dev/shm", os.W_OK) else None)
     backing = cfg.pop("backing", None)
     cache_root = cfg.get("cache_root")
     if cfg.get("workers_mode") == "process" or cache_root:

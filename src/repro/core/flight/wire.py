@@ -92,15 +92,39 @@ class _Cursor:
 # encode
 # --------------------------------------------------------------------------
 
-def encode_message(msg: SipcMessage, store: BufferStore,
-                   path_for=None) -> bytes:
+def export_paths(msg: SipcMessage, store: BufferStore,
+                 path_for=None) -> Dict[int, str]:
+    """The store-mutating half of :func:`encode_message`: land every
+    direct-swap extent in its backing file and resolve each referenced
+    file's exported path.  The process executor runs this under its RM
+    lock and then encodes the (now pure) frame outside it, so frame
+    serialization overlaps with other scheduler threads instead of
+    serializing on the critical section."""
+    out: Dict[int, str] = {}
+    for fid in msg.files_referenced():
+        if fid == 0 or fid in out:
+            continue
+        # direct-swap extents live in a separate swap file until
+        # faulted; land them in the backing file before exporting a
+        # reference, or readers would map a sparse hole
+        store.ensure_file_backed(fid)
+        out[fid] = (path_for(fid) if path_for is not None
+                    else store.backing_path(fid))
+    return out
+
+
+def encode_message(msg: SipcMessage, store: Optional[BufferStore] = None,
+                   path_for=None,
+                   fid_paths: Optional[Dict[int, str]] = None) -> bytes:
     """Serialize ``msg`` to a reference frame.  Requires a file-backed
     store (references must name real files other processes can map).
 
     ``path_for(file_id) -> str`` overrides the exported path per file —
     the manifest publishes frames whose references name the durable
     content-addressed objects (relative to the manifest root) instead of
-    the live backing files.
+    the live backing files.  ``fid_paths`` (from :func:`export_paths`)
+    supplies the resolved paths up front, making this call pure — no
+    store access, safe outside any lock.
     """
     paths: List[str] = []
     path_idx: Dict[int, int] = {}     # file_id -> index into `paths`
@@ -110,13 +134,14 @@ def encode_message(msg: SipcMessage, store: BufferStore,
             return _EMPTY
         i = path_idx.get(r.file_id)
         if i is None:
-            # direct-swap extents live in a separate swap file until
-            # faulted; land them in the backing file before exporting a
-            # reference, or readers would map a sparse hole
-            store.ensure_file_backed(r.file_id)
+            if fid_paths is not None:
+                p = fid_paths[r.file_id]
+            else:
+                store.ensure_file_backed(r.file_id)
+                p = (path_for(r.file_id) if path_for is not None
+                     else store.backing_path(r.file_id))
             i = len(paths)
-            paths.append(path_for(r.file_id) if path_for is not None
-                         else store.backing_path(r.file_id))
+            paths.append(p)
             path_idx[r.file_id] = i
         return i
 
@@ -158,6 +183,120 @@ def encode_message(msg: SipcMessage, store: BufferStore,
 # decode
 # --------------------------------------------------------------------------
 
+class ParsedFrame:
+    """A fully parsed SIPC frame that has not yet touched any store.
+
+    Buffer references hold *path indices* (into :attr:`paths`), not file
+    ids — :func:`materialize_message` adopts the paths and rewrites the
+    indices into store file ids.  Splitting decode this way lets the
+    process executor do all byte-level parsing (struct unpacks, JSON
+    schema/type decoding) outside its RM lock and keep only the
+    store-mutation half (adopt, charge, pin) inside it."""
+
+    __slots__ = ("schema_bytes", "paths", "batches")
+
+    def __init__(self, schema_bytes: bytes, paths: List[str],
+                 batches: List[BatchRefs]):
+        self.schema_bytes = schema_bytes
+        self.paths = paths
+        self.batches = batches
+
+
+def parse_frame(data: bytes) -> ParsedFrame:
+    """Parse a frame to a :class:`ParsedFrame` — pure, no store access."""
+    cur = _Cursor(data)
+    magic = cur.data[:4]
+    cur.pos = 4
+    if magic != MAGIC:
+        raise WireError(f"bad SIPC magic {magic!r}")
+    version = cur.take("<H")
+    if version != VERSION:
+        raise WireError(f"unsupported SIPC version {version}")
+    schema_bytes = cur.take_bytes()
+    n_paths = cur.take("<H")
+    paths = [cur.take_bytes("<H").decode() for _ in range(n_paths)]
+
+    def take_ref() -> BufRef:
+        idx, off, length, resh = cur.take("<IQQB")
+        if idx == _EMPTY:
+            return BufRef(0, 0, 0)
+        if idx >= len(paths):
+            raise WireError("path index out of range")
+        # file_id field transiently holds the path index + 1 (0 is the
+        # canonical-empty sentinel); materialize_message rewrites it
+        return BufRef(idx + 1, off, length, reshared=bool(resh))
+
+    def take_column() -> ColumnRefs:
+        t = ArrowType.from_json(json.loads(cur.take_bytes("<H").decode()))
+        length, flags = cur.take("<QB")
+        validity = take_ref() if flags & _F_VALIDITY else None
+        offsets = take_ref() if flags & _F_OFFSETS else None
+        values = take_ref()
+        dic = take_column() if flags & _F_DICT else None
+        return ColumnRefs(t, length, validity, offsets, values, dic)
+
+    batches: List[BatchRefs] = []
+    for _ in range(cur.take("<I")):
+        num_rows, n_cols = cur.take("<QI")
+        batches.append(
+            BatchRefs(num_rows, [take_column() for _ in range(n_cols)]))
+    return ParsedFrame(schema_bytes, paths, batches)
+
+
+def materialize_message(parsed: ParsedFrame, store: BufferStore,
+                        owner: Optional[Cgroup] = None,
+                        charge: bool = True,
+                        adopt_owned: bool = False,
+                        label: str = "wire",
+                        path_base: Optional[str] = None) -> SipcMessage:
+    """The store-mutating half of :func:`decode_message`: adopt the
+    parsed frame's paths, rewrite path indices to file ids, account
+    new/reshared bytes and pin.  Call under the lock that guards
+    ``store``.  Consumes ``parsed`` (its BufRefs are rewritten in
+    place); materialize a parsed frame at most once."""
+    fids: List[int] = []
+    adopted_new: set = set()
+    for path in parsed.paths:
+        if path_base is not None and not os.path.isabs(path):
+            path = os.path.join(path_base, path)
+        pre = store.path_index.get(os.path.abspath(path))
+        f = store.adopt_file(path, owner=owner, charge=charge,
+                             owns_path=adopt_owned, label=label)
+        fids.append(f.file_id)
+        if pre is None:
+            adopted_new.add(f.file_id)
+
+    msg = SipcMessage(parsed.schema_bytes, parsed.batches)
+    reshared = 0
+
+    def fix_ref(r: Optional[BufRef]) -> None:
+        nonlocal reshared
+        if r is None or r.file_id == 0:
+            return
+        fid = fids[r.file_id - 1]
+        r.file_id = fid
+        if fid in adopted_new:
+            msg.new_bytes += r.length
+        else:
+            reshared += r.length
+
+    def fix_column(c: ColumnRefs) -> None:
+        fix_ref(c.validity)
+        fix_ref(c.offsets)
+        fix_ref(c.values)
+        if c.dictionary is not None:
+            fix_column(c.dictionary)
+
+    for b in parsed.batches:
+        for c in b.columns:
+            fix_column(c)
+
+    msg.reshared_bytes = reshared
+    store.stats.bytes_reshared += reshared
+    msg.pin(store)
+    return msg
+
+
 def decode_message(data: bytes, store: BufferStore,
                    owner: Optional[Cgroup] = None,
                    charge: bool = True,
@@ -173,71 +312,13 @@ def decode_message(data: bytes, store: BufferStore,
     output); pre-existing files are untouched.  ``path_base`` resolves
     relative references (manifest frames name objects relative to the
     manifest root so a cache directory can be relocated).
-    """
-    cur = _Cursor(data)
-    magic = cur.data[:4]
-    cur.pos = 4
-    if magic != MAGIC:
-        raise WireError(f"bad SIPC magic {magic!r}")
-    version = cur.take("<H")
-    if version != VERSION:
-        raise WireError(f"unsupported SIPC version {version}")
-    schema_bytes = cur.take_bytes()
-    n_paths = cur.take("<H")
-    fids: List[int] = []
-    adopted_new: set = set()
-    reshared = 0
-    for _ in range(n_paths):
-        path = cur.take_bytes("<H").decode()
-        if path_base is not None and not os.path.isabs(path):
-            path = os.path.join(path_base, path)
-        pre = store.path_index.get(os.path.abspath(path))
-        f = store.adopt_file(path, owner=owner, charge=charge,
-                             owns_path=adopt_owned, label=label)
-        fids.append(f.file_id)
-        if pre is None:
-            adopted_new.add(f.file_id)
 
-    msg = SipcMessage(schema_bytes, [])
-
-    def take_ref() -> Tuple[Optional[BufRef], int, int]:
-        idx, off, length, resh = cur.take("<IQQB")
-        if idx == _EMPTY:
-            return BufRef(0, 0, 0), 0, 0
-        fid = fids[idx]
-        new_b = length if fid in adopted_new else 0
-        return (BufRef(fid, off, length, reshared=bool(resh)),
-                new_b, length - new_b)
-
-    def take_column() -> ColumnRefs:
-        nonlocal reshared
-        t = ArrowType.from_json(json.loads(cur.take_bytes("<H").decode()))
-        length, flags = cur.take("<QB")
-        validity = offsets = None
-        if flags & _F_VALIDITY:
-            validity, nb, rb = take_ref()
-            msg.new_bytes += nb
-            reshared += rb
-        if flags & _F_OFFSETS:
-            offsets, nb, rb = take_ref()
-            msg.new_bytes += nb
-            reshared += rb
-        values, nb, rb = take_ref()
-        msg.new_bytes += nb
-        reshared += rb
-        dic = take_column() if flags & _F_DICT else None
-        return ColumnRefs(t, length, validity, offsets, values, dic)
-
-    n_batches = cur.take("<I")
-    for _ in range(n_batches):
-        num_rows, n_cols = cur.take("<QI")
-        msg.batches.append(
-            BatchRefs(num_rows, [take_column() for _ in range(n_cols)]))
-
-    msg.reshared_bytes = reshared
-    store.stats.bytes_reshared += reshared
-    msg.pin(store)
-    return msg
+    Equivalent to ``materialize_message(parse_frame(data), ...)`` — the
+    split form exists so callers holding a hot lock can parse outside
+    it."""
+    return materialize_message(parse_frame(data), store, owner=owner,
+                               charge=charge, adopt_owned=adopt_owned,
+                               label=label, path_base=path_base)
 
 
 def frame_refs(data: bytes) -> List[Tuple[str, int, int]]:

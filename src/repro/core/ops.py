@@ -36,6 +36,10 @@ Relational (reshuffle rows across tables — hash-join engine, PR 5):
   ``group_by(t, keys, aggs)``    hash-free exact group-by (dense key
       codes + segment reducers): one row per distinct key tuple (nulls
       form one group, sorted last), aggs from sum/min/max/count/mean.
+  ``filter_join(left, right, on, how, left_mask=, right_mask=)``  fused
+      filter->join: per-side row masks compose into the join's
+      take-gather (one gather over the original columns, no
+      materialized filtered table); bit-identical to the unfused pair.
 
 Compute helpers (paper workloads):
   ``sum_all_ints(t)``            Fig 2 reader-node reduction.
@@ -283,6 +287,73 @@ def _key_pairs_equal(lcol: Column, li: np.ndarray,
     return a == b
 
 
+def _join_gather_indices(lb: RecordBatch, rb: RecordBatch,
+                         keys: Sequence[str], how: str,
+                         lmask: Optional[np.ndarray] = None,
+                         rmask: Optional[np.ndarray] = None
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """(left, right) original-domain gather index arrays for the join
+    output rows (``-1`` right index = left-join miss).  ``lmask`` /
+    ``rmask`` restrict each side to mask-true rows — the fused
+    filter->join path: the selection composes into the probe/build
+    subsets (via ``vkernels.filter_join_gather``), so the caller gathers
+    payload columns exactly once from the *unfiltered* batches."""
+    cast = _key_cast_map(lb, rb, keys)
+    lh, lvalid = _key_hashes(lb, keys, cast)
+    rh, rvalid = _key_hashes(rb, keys, cast)
+    if lmask is not None:
+        lvalid &= lmask
+    if rmask is not None:
+        rvalid &= rmask
+    # null keys never match: probe/build over the valid-key subsets only
+    pidx = np.nonzero(lvalid)[0]
+    bidx = np.nonzero(rvalid)[0]
+    pi, bi = vkernels.hash_join_probe(rh[bidx], lh[pidx])
+    li = vkernels.filter_join_gather(pidx, pi)
+    ri = vkernels.filter_join_gather(bidx, bi)
+    keep = np.ones(len(li), dtype=bool)
+    for k in keys:
+        keep &= _key_pairs_equal(lb.column(k), li, rb.column(k), ri)
+    li, ri = li[keep], ri[keep]
+    if how == "left":
+        matched = np.zeros(lb.num_rows, dtype=bool)
+        matched[li] = True
+        cand = ~matched if lmask is None else lmask & ~matched
+        miss = np.nonzero(cand)[0]
+        li = np.concatenate([li, miss])
+        ri = np.concatenate([ri, np.full(len(miss), -1, dtype=np.int64)])
+        order = np.argsort(li, kind="stable")   # restore left-major order
+        li, ri = li[order], ri[order]
+    return li, ri
+
+
+def _join_output(lb: RecordBatch, rb: RecordBatch, keys: Sequence[str],
+                 li: np.ndarray, ri: np.ndarray, suffix: str) -> Table:
+    """Assemble the join output: one gather per left column, one
+    nullable gather per right payload column."""
+    fields: List[Field] = []
+    cols: List[Column] = []
+    rkeys = set(keys)
+    lnames = set(lb.schema.names())
+    for f, c in zip(lb.schema.fields, lb.columns):
+        fields.append(f)
+        cols.append(c.take(li))
+    used = set(lnames)
+    for f, c in zip(rb.schema.fields, rb.columns):
+        if f.name in rkeys:
+            continue                 # equal to the left key by definition
+        name = f.name + suffix if f.name in lnames else f.name
+        if name in used:
+            raise ValueError(
+                f"join output column {name!r} is ambiguous (suffixed "
+                f"right column collides with an existing column); rename "
+                f"it or pass a different suffix")
+        used.add(name)
+        fields.append(Field(name, c.type))
+        cols.append(c.take_nullable(ri))
+    return Table.from_batch(Schema(fields), cols)
+
+
 def join(left: Table, right: Table, on: Union[str, Sequence[str]],
          how: str = "inner", suffix: str = "_right") -> Table:
     """Multi-key hash equi-join (probe = left, build = right).
@@ -307,47 +378,50 @@ def join(left: Table, right: Table, on: Union[str, Sequence[str]],
     keys = [on] if isinstance(on, str) else list(on)
     lb = left.combine().batches[0]
     rb = right.combine().batches[0]
-    cast = _key_cast_map(lb, rb, keys)
-    lh, lvalid = _key_hashes(lb, keys, cast)
-    rh, rvalid = _key_hashes(rb, keys, cast)
-    # null keys never match: probe/build over the valid-key subsets only
-    pidx = np.nonzero(lvalid)[0]
-    bidx = np.nonzero(rvalid)[0]
-    pi, bi = vkernels.hash_join_probe(rh[bidx], lh[pidx])
-    li, ri = pidx[pi], bidx[bi]
-    keep = np.ones(len(li), dtype=bool)
-    for k in keys:
-        keep &= _key_pairs_equal(lb.column(k), li, rb.column(k), ri)
-    li, ri = li[keep], ri[keep]
-    if how == "left":
-        matched = np.zeros(lb.num_rows, dtype=bool)
-        matched[li] = True
-        miss = np.nonzero(~matched)[0]
-        li = np.concatenate([li, miss])
-        ri = np.concatenate([ri, np.full(len(miss), -1, dtype=np.int64)])
-        order = np.argsort(li, kind="stable")   # restore left-major order
-        li, ri = li[order], ri[order]
-    fields: List[Field] = []
-    cols: List[Column] = []
-    rkeys = set(keys)
-    lnames = set(lb.schema.names())
-    for f, c in zip(lb.schema.fields, lb.columns):
-        fields.append(f)
-        cols.append(c.take(li))
-    used = set(lnames)
-    for f, c in zip(rb.schema.fields, rb.columns):
-        if f.name in rkeys:
-            continue                 # equal to the left key by definition
-        name = f.name + suffix if f.name in lnames else f.name
-        if name in used:
-            raise ValueError(
-                f"join output column {name!r} is ambiguous (suffixed "
-                f"right column collides with an existing column); rename "
-                f"it or pass a different suffix")
-        used.add(name)
-        fields.append(Field(name, c.type))
-        cols.append(c.take_nullable(ri))
-    return Table.from_batch(Schema(fields), cols)
+    li, ri = _join_gather_indices(lb, rb, keys, how)
+    return _join_output(lb, rb, keys, li, ri, suffix)
+
+
+#: a mask for one side of a fused filter->join: a bool/int array over the
+#: (combined) batch rows, or a callable evaluated on the combined batch
+MaskLike = Union[np.ndarray, Callable[[RecordBatch], np.ndarray]]
+
+
+def _resolve_mask(mask: MaskLike, batch: RecordBatch) -> np.ndarray:
+    m = np.asarray(mask(batch) if callable(mask) else mask)
+    if m.dtype != np.bool_:
+        m = m != 0
+    assert len(m) == batch.num_rows, \
+        f"mask length {len(m)} != batch rows {batch.num_rows}"
+    return m
+
+
+def filter_join(left: Table, right: Table, on: Union[str, Sequence[str]],
+                how: str = "inner", suffix: str = "_right",
+                left_mask: Optional[MaskLike] = None,
+                right_mask: Optional[MaskLike] = None) -> Table:
+    """Fused filter->join: ``join(filter_rows(left, left_mask),
+    filter_rows(right, right_mask), on, how)`` without materializing
+    either filtered intermediate table.
+
+    The masks compose into the join's probe/build row selection
+    (``vkernels.filter_join_gather``), so payload columns are gathered
+    exactly *once* from the original batches — the unfused pair gathers
+    the filtered side twice (filter take + join take) and pays the
+    intermediate's allocation, deanonymization and (in process mode)
+    wire hop.  Output is bit-identical to the unfused pair: same rows,
+    same left-major order, same buffers.  A mask may be an array over
+    the side's combined rows or a picklable callable evaluated on the
+    combined batch (so a ``functools.partial`` of this op crosses the
+    Flight process boundary)."""
+    assert how in ("inner", "left"), how
+    keys = [on] if isinstance(on, str) else list(on)
+    lb = left.combine().batches[0]
+    rb = right.combine().batches[0]
+    lm = None if left_mask is None else _resolve_mask(left_mask, lb)
+    rm = None if right_mask is None else _resolve_mask(right_mask, rb)
+    li, ri = _join_gather_indices(lb, rb, keys, how, lmask=lm, rmask=rm)
+    return _join_output(lb, rb, keys, li, ri, suffix)
 
 
 def _group_codes(col: Column) -> np.ndarray:
@@ -449,6 +523,15 @@ def group_by_node(tables: Sequence[Table], keys, aggs: AggSpec) -> Table:
     return group_by(tables[0], keys, aggs)
 
 
+def filter_join_node(tables: Sequence[Table], on, how: str = "inner",
+                     suffix: str = "_right",
+                     left_mask: Optional[MaskLike] = None,
+                     right_mask: Optional[MaskLike] = None) -> Table:
+    """DAG-node form of ``filter_join`` (see ``join_node``)."""
+    return filter_join(tables[0], tables[1], on=on, how=how, suffix=suffix,
+                       left_mask=left_mask, right_mask=right_mask)
+
+
 #: the relational ops reach their kernels through the ``vkernels`` module
 #: attribute, which the fingerprint's direct-global scan does not chase;
 #: declaring them here makes a kernel edit invalidate every cached
@@ -456,13 +539,18 @@ def group_by_node(tables: Sequence[Table], keys, aggs: AggSpec) -> Table:
 join.__fp_includes__ = (
     vkernels.combine_hashes, vkernels.hash_fixed,
     vkernels.hash_var, vkernels.hash_join_probe,
-    vkernels.bytes_rows_equal)
+    vkernels.filter_join_gather, vkernels.bytes_rows_equal)
 group_by.__fp_includes__ = (
     vkernels.group_ranges, vkernels.grouped_count, vkernels.grouped_sum,
     vkernels.grouped_min, vkernels.grouped_max, vkernels.grouped_mean,
     vkernels.dict_encode_var, vkernels.sort_keys_var)
 join_node.__fp_includes__ = join.__fp_includes__
 group_by_node.__fp_includes__ = group_by.__fp_includes__
+#: fused and unfused plans fingerprint distinctly: filter_join's own code
+#: object differs from join's, and both fold in filter_join_gather so a
+#: fusion-kernel edit invalidates fused *and* unfused cached outputs
+filter_join.__fp_includes__ = join.__fp_includes__
+filter_join_node.__fp_includes__ = join.__fp_includes__
 
 
 # --------------------------------------------------------------------------

@@ -75,6 +75,15 @@ class RMConfig:
     #                                  # instead of executing them
     publish_outputs: bool = True   # durable mode: publish every completed
     #                              # node output (False: adopt-only reader)
+    flight_timeout_s: float = 600.0   # process mode: per-request reply
+    #                                 # deadline on the flight data plane
+    #                                 # (a worker past it is presumed hung
+    #                                 # and retired; the request retries
+    #                                 # on a surviving worker)
+    chain_dispatch: bool = True    # process mode: ship linear picklable
+    #                              # DAG segments as one exec_chain
+    #                              # request (intermediates stay worker-
+    #                              # local); False = per-node dispatch
 
 
 def make_executor(store: BufferStore, rm: "ResourceManager",

@@ -73,6 +73,10 @@ class WorkerPoolExecutor:
         # run workers=1 through the thread pool instead of inline (used by
         # tests to prove pool(1) ≡ sequential)
         self.force_threads = force_threads
+        # scheduler threads pulling nodes; the process executor runs more
+        # of them than workers so that while every worker computes, spare
+        # threads encode and submit the next requests (pipelined dispatch)
+        self.sched_threads = self.workers
         self.node_runs = 0
         self.load_runs = 0
         self.cache_hits = 0     # nodes satisfied from the persistent
@@ -131,7 +135,7 @@ class WorkerPoolExecutor:
     def _run_threaded(self) -> None:
         threads = [threading.Thread(target=self._worker_loop,
                                     name=f"zerrow-worker-{i}", daemon=True)
-                   for i in range(self.workers)]
+                   for i in range(self.sched_threads)]
         for t in threads:
             t.start()
         for t in threads:
@@ -517,14 +521,33 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
         # payload dictionary that happens wholly in a worker process
         # would be invisible to the parent's accounting
         self.worker_stats: Dict[str, int] = {}
+        # pipelined dispatch: with one scheduler thread per worker, every
+        # thread is parked in a blocking reply wait while its worker
+        # computes — nobody is left to encode/submit the next request.
+        # 2x threads keeps each worker's submission slot (the pool's
+        # pipeline_depth) full.
+        self.sched_threads = self.workers * 2
+        # chain shipping (ISSUE 6): linear picklable segments dispatch as
+        # one exec_chain request; intermediates stay worker-local
+        self._chain_enabled = bool(getattr(rm.cfg, "chain_dispatch", True))
+        self._chain_next: Dict[Tuple[int, str], str] = {}
+        self._chain_claims: Dict[Tuple[int, str], List[NodeState]] = {}
+        self.chains_shipped = 0        # exec_chain requests sent
+        self.chain_nodes_shipped = 0   # nodes covered by those requests
+        # fn identity -> (fn, pickled bytes | None): shard DAGs reuse the
+        # same callable across hundreds of nodes — pickle it once, and
+        # remember unpicklable fns so the fallback probe is paid once too
+        self._fn_pickle: Dict[int, Tuple[object, Optional[bytes]]] = {}
 
     # -- pool lifecycle -----------------------------------------------------
     def _ensure_pool(self):
         if self._pool is None:
             from ..flight.worker import FlightWorkerPool
-            self._pool = FlightWorkerPool(self.workers,
-                                          sipc_mode=self.rm.cfg.sipc_mode,
-                                          data_root=self._data_root)
+            self._pool = FlightWorkerPool(
+                self.workers, sipc_mode=self.rm.cfg.sipc_mode,
+                data_root=self._data_root,
+                request_timeout=getattr(self.rm.cfg, "flight_timeout_s",
+                                        600.0))
         return self._pool
 
     @property
@@ -533,12 +556,281 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
 
     def run(self, dags: List[DAG], deadline_s: float = 3600.0) -> float:
         self._ensure_pool()
+        self._chain_next = {}
+        self._chain_claims = {}
+        if self._chain_enabled:
+            for d in dags:
+                self._plan_chains(d)
         return super().run(dags, deadline_s)
 
     def close(self) -> None:
         if self._pool is not None:
             self._pool.close()
             self._pool = None
+
+    # -- chain shipping (subgraph dispatch) ---------------------------------
+    def _fn_bytes(self, fn) -> Optional[bytes]:
+        """Pickled bytes for ``fn`` (memoized by identity), or ``None``
+        when it cannot cross the process boundary."""
+        hit = self._fn_pickle.get(id(fn))
+        if hit is not None and hit[0] is fn:
+            return hit[1]
+        try:
+            b: Optional[bytes] = pickle.dumps(fn)
+        except (pickle.PicklingError, TypeError, AttributeError):
+            # closures/bound methods can't cross the process boundary
+            b = None
+        self._fn_pickle[id(fn)] = (fn, b)
+        return b
+
+    def _plan_chains(self, dag: DAG) -> None:
+        """Structure-only planning pass: record every link ``a -> b``
+        (a's only child is b) whose nodes can execute in a worker — a
+        loader or picklable compute feeding a picklable compute.  ``b``
+        may have further deps when each one is a *co-shippable loader
+        root* (a dep-less loader whose only child is b): two loads
+        feeding a join ship with it as one segment, so neither load
+        output ever materializes.  Maximal runs of links form the
+        shippable chains; node *status* is checked at claim time, so
+        CACHED / evicted boundaries simply truncate what actually
+        ships."""
+        for name in dag.topo_order():
+            st = dag.nodes[name]
+            kids = dag.children[name]
+            if len(kids) != 1:
+                continue
+            nxt = dag.nodes[kids[0]]
+            if any(not (d == name or self._loader_root(dag, d, kids[0]))
+                   for d in nxt.spec.deps):
+                continue
+            if not st.is_loader and self._fn_bytes(st.spec.fn) is None:
+                continue
+            if nxt.is_loader or self._fn_bytes(nxt.spec.fn) is None:
+                continue
+            self._chain_next[(dag.id, name)] = kids[0]
+
+    @staticmethod
+    def _loader_root(dag: DAG, name: str, child: str) -> bool:
+        st = dag.nodes[name]
+        return (st.is_loader and not st.spec.deps
+                and list(dag.children[name]) == [child])
+
+    def _schedule_locked(self):
+        st = super()._schedule_locked()
+        if st is None or st is _WAIT:
+            return st
+        self._claim_chain_rest(st)
+        return st
+
+    def _claim_chain_rest(self, st: NodeState) -> None:
+        """Extend the picked node's claim down its chain (caller holds
+        the lock).  Each suffix node gets the full claim protocol —
+        RUNNING transition, inflight entry, admission reservation — so
+        peers, eviction protection and rollback treat it exactly like an
+        individually dispatched node."""
+        chain = [st]
+        cur = st
+        while True:
+            nxt = self._chain_next.get((st.dag.id, cur.name))
+            if nxt is None:
+                break
+            n = st.dag.nodes[nxt]
+            # WAITING only: a CACHED/EVICTED/DONE downstream truncates
+            # the shipped segment; admission keeps the memory budget
+            # honest even though intermediates stay worker-local
+            if n.status != WAITING:
+                break
+            # co-shippable loader roots ride along (see _plan_chains);
+            # an already-complete side dep travels as an input frame, a
+            # RUNNING one (another scheduler thread owns it) blocks the
+            # extension.  The DeCache would need its single-flight /
+            # insert protocol per side loader, so claim only when it is
+            # off — with it on, loads are cheap cache attaches anyway.
+            side, ok = [], True
+            for d in n.spec.deps:
+                if d == cur.name:
+                    continue
+                ds = st.dag.nodes[d]
+                if ds.status in (DONE, CACHED) and ds.output is not None:
+                    continue
+                if ds.status != WAITING or not ds.is_loader \
+                        or self.rm.decache.enabled:
+                    ok = False
+                    break
+                side.append(ds)
+            if not ok:
+                break
+            group, claimed = side + [n], []
+            for s in group:
+                if not self.rm.admit(s):
+                    break
+                s.claim()
+                self._inflight[(st.dag.id, s.name)] = s
+                self.rm.admission.reserve(s)
+                self.node_runs += 1
+                claimed.append(s)
+            if len(claimed) != len(group):
+                # partial admission: roll the group back, truncate here
+                for s in claimed:
+                    self._inflight.pop((st.dag.id, s.name), None)
+                    self.rm.admission.unreserve(s)
+                    s.transition(WAITING)
+                    self.node_runs -= 1
+                break
+            chain.extend(group)
+            cur = n
+        if len(chain) > 1:
+            self._chain_claims[(st.dag.id, st.name)] = chain
+
+    def _execute(self, st: NodeState) -> None:
+        chain = self._chain_claims.pop((st.dag.id, st.name), None)
+        if chain is None:
+            return super()._execute(st)
+        t0 = time.perf_counter()
+        try:
+            self._execute_chain(chain)
+        except BaseException:
+            # revert the suffix claims so a later run can redo them
+            # node-by-node; the head's cleanup is the caller's normal
+            # error path
+            with self._cond:
+                for n in chain[1:]:
+                    if self._inflight.pop((n.dag.id, n.name),
+                                          None) is not None:
+                        self.rm.admission.unreserve(n)
+                    if n.status == RUNNING:
+                        n.transition(WAITING)
+                self._cond.notify_all()
+            raise
+        dt = (time.perf_counter() - t0) / len(chain)
+        for n in chain:
+            n.exec_latency = dt
+
+    def _chain_echo(self, n: NodeState, is_tail: bool) -> bool:
+        """Should this chain step's output cross the wire back?  Tails
+        and keep_output sinks have consumers; loader outputs feed the
+        DeCache; fingerprinted outputs feed the manifest (preserving the
+        PR 3 hit cones).  Everything else stays worker-local."""
+        if is_tail or n.spec.keep_output:
+            return True
+        if n.is_loader and self.rm.decache.enabled:
+            return True
+        return (self.rm.manifest is not None and n.fingerprint is not None
+                and getattr(self.rm.cfg, "publish_outputs", True))
+
+    def _chain_step(self, n: NodeState, is_tail: bool,
+                    pos: Dict[str, int]) -> dict:
+        if n.is_loader:
+            return {"kind": "load", "label": n.name,
+                    "source": n.spec.source,
+                    "dict_columns": tuple(n.spec.dict_columns),
+                    "reader_threads": getattr(self.rm.cfg,
+                                              "reader_threads", None),
+                    "echo": self._chain_echo(n, is_tail)}
+        return {"kind": "exec", "label": n.name,
+                "fn": self._fn_bytes(n.spec.fn),
+                # value indices of this step's inputs: chain inputs
+                # first, then one slot per prior step (fan-in wiring)
+                "args": [pos[d] for d in n.spec.deps],
+                "echo": self._chain_echo(n, is_tail)}
+
+    def _execute_chain(self, chain: List[NodeState]) -> None:
+        """Ship one claimed chain as a single exec_chain request.
+
+        The head resolves exactly like ``_run_loader`` would (DeCache
+        single-flight: wait on a peer's in-progress load, attach on hit —
+        a hit strips the head from the shipped segment).  Store mutation
+        (sandboxes, input export, output adoption, DeCache insert) stays
+        under the RM critical section; frame encode/decode and the
+        socket round-trip run outside it.  Suffix nodes complete here;
+        the head completes through the caller's normal path."""
+        from ..flight import wire
+        head = chain[0]
+        key = None
+        shipped = chain
+        with self._cond:
+            if head.is_loader:
+                k = head.decache_key()
+                while k in self._loading:
+                    self._cond.wait(timeout=0.1)
+                e = self.rm.decache.lookup(k)
+                if e is not None:
+                    head.output = self.rm.decache.attach(e)
+                    self._attach[head.dag.id].append(e)
+                    head.output_bytes = 0
+                    shipped = chain[1:]
+                    ext = [(head.name, head.output)]
+                else:
+                    self._loading.add(k)
+                    key = k
+                    self.load_runs += 1
+                    ext = []
+            else:
+                ext = [(d, head.dag.nodes[d].output)
+                       for d in head.spec.deps]
+            # a shipped step's dep that is not itself shipped (upstream
+            # DONE/CACHED boundary) travels as an exported input frame
+            names = {n.name for n in shipped}
+            have = {d for d, _ in ext}
+            for n in shipped:
+                if n.is_loader:
+                    if n is not head:
+                        self.load_runs += 1
+                    continue
+                for d in n.spec.deps:
+                    if d not in names and d not in have:
+                        ext.append((d, n.dag.nodes[d].output))
+                        have.add(d)
+        inputs = [m for _, m in ext]
+        pos = {d: i for i, (d, _) in enumerate(ext)}
+        for i, n in enumerate(shipped):
+            pos[n.name] = len(ext) + i
+        try:
+            with self._lock:
+                for n in shipped:
+                    n.sandbox = self._make_sandbox(n)
+                fid_paths = [wire.export_paths(m, self.store)
+                             for m in inputs]
+            enc = [wire.encode_message(m, fid_paths=fp)
+                   for m, fp in zip(inputs, fid_paths)]
+            steps = [self._chain_step(n, i == len(shipped) - 1, pos)
+                     for i, n in enumerate(shipped)]
+            reply = self._request({"op": "exec_chain",
+                                   "label": shipped[-1].name,
+                                   "steps": steps, "inputs": enc})
+            self._accumulate_stats(reply)
+            parsed = {e["i"]: wire.parse_frame(e["msg"])
+                      for e in reply["chain"]}
+            with self._cond:
+                for i, n in enumerate(shipped):
+                    p = parsed.get(i)
+                    if p is None:
+                        # worker-local intermediate: never adopted, never
+                        # charged — its bytes lived and died in the worker
+                        n.output = None
+                        n.output_bytes = 0
+                        continue
+                    msg = self._materialize_frame(p, n, n.sandbox)
+                    n.output = msg
+                    n.output_bytes = msg.new_bytes
+                if key is not None and self.rm.decache.enabled and \
+                        head.output is not None:
+                    e = self.rm.decache.insert(key, head.output,
+                                               time.perf_counter())
+                    self.rm.decache.attach(e)
+                    self._attach[head.dag.id].append(e)
+            self.chains_shipped += 1
+            self.chain_nodes_shipped += len(shipped)
+        finally:
+            if key is not None:
+                with self._cond:
+                    self._loading.discard(key)
+                    self._cond.notify_all()
+        for n in chain[1:]:
+            self._publish_output(n)
+            with self._cond:
+                self._complete_locked(n)
+                self._cond.notify_all()
 
     # -- remote execution ---------------------------------------------------
     def _request(self, obj: dict) -> dict:
@@ -560,37 +852,50 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
                     raise
                 self.worker_retries += 1
 
-    def _adopt_reply(self, reply: dict, st: NodeState, sb: Sandbox):
-        """Decode a worker reply under the lock: newly created files are
-        adopted with ownership and charged to the node's cgroup (exactly
-        where thread-mode output bytes land), so admission, limitdrop and
-        rollback treat process outputs like any other node output."""
-        from ..flight.wire import decode_message
+    def _accumulate_stats(self, reply: dict) -> None:
         for k, v in (reply.get("stats") or {}).items():
             self.worker_stats[k] = self.worker_stats.get(k, 0) + v
-        msg = decode_message(reply["msg"], self.store, owner=sb.cgroup,
-                             adopt_owned=True, label=st.name)
+
+    def _materialize_frame(self, parsed, st: NodeState, sb: Sandbox):
+        """Adopt a parsed worker output frame under the lock: newly
+        created files are adopted with ownership and charged to the
+        node's cgroup (exactly where thread-mode output bytes land), so
+        admission, limitdrop and rollback treat process outputs like any
+        other node output.  The byte-level parse already happened
+        outside the lock (``wire.parse_frame``)."""
+        from ..flight.wire import materialize_message
+        msg = materialize_message(parsed, self.store, owner=sb.cgroup,
+                                  adopt_owned=True, label=st.name)
         sb.owned_files.extend(
             fid for fid in msg.files_referenced()
             if fid in self.store.files and
             self.store.files[fid].owner is sb.cgroup)
         return msg
 
+    def _adopt_reply(self, reply: dict, st: NodeState, sb: Sandbox):
+        from ..flight.wire import parse_frame
+        self._accumulate_stats(reply)
+        parsed = parse_frame(reply["msg"])      # pure: outside the lock
+        with self._lock:
+            return self._materialize_frame(parsed, st, sb)
+
     def _compute_output(self, st: NodeState, sb: Sandbox, inputs):
-        try:
-            fn_bytes = pickle.dumps(st.spec.fn)
-        except (pickle.PicklingError, TypeError, AttributeError):
-            # closures/bound methods can't cross the process boundary;
-            # run them in-parent (correct, just not parallel)
+        fn_bytes = self._fn_bytes(st.spec.fn)
+        if fn_bytes is None:
+            # run unpicklable fns in-parent (correct, just not parallel)
             self.fallback_inline += 1
             return super()._compute_output(st, sb, inputs)
-        from ..flight.wire import encode_message
+        from ..flight import wire
+        # store-mutating export prepass under the lock; the byte-level
+        # frame encode runs outside it (pipelined dispatch: another
+        # scheduler thread can hold the critical section meanwhile)
         with self._lock:
-            enc = [encode_message(m, self.store) for m in inputs]
+            fid_paths = [wire.export_paths(m, self.store) for m in inputs]
+        enc = [wire.encode_message(m, fid_paths=fp)
+               for m, fp in zip(inputs, fid_paths)]
         reply = self._request(
             {"op": "exec", "label": st.name, "fn": fn_bytes, "inputs": enc})
-        with self._lock:
-            return self._adopt_reply(reply, st, sb)
+        return self._adopt_reply(reply, st, sb)
 
     def _load_output(self, st: NodeState, sb: Sandbox):
         reply = self._request(
@@ -598,8 +903,7 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
              "dict_columns": tuple(st.spec.dict_columns),
              "reader_threads": getattr(self.rm.cfg, "reader_threads",
                                        None)})
-        with self._lock:
-            return self._adopt_reply(reply, st, sb)
+        return self._adopt_reply(reply, st, sb)
 
     def reshare_stats(self) -> Dict[str, int]:
         out = super().reshare_stats()

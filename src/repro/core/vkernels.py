@@ -52,6 +52,9 @@ Relational (hash join + group-by, the zero-copy relational engine):
       build hashes once, searchsorted every probe hash -> (probe_idx,
       build_idx) index arrays, probe-major, build ascending within a
       probe row.  Collisions survive; the caller confirms key equality.
+  ``filter_join_gather(sel, idx)``  compose a filter's selection with a
+      join's gather indices in one step (-1 miss sentinels preserved) —
+      the fused filter->join never materializes the filtered table.
   ``bytes_rows_equal(off_a, v_a, off_b, v_b)``  per-row bool: row i of A
       == row i of B (length compare + one flat gather-and-compare).
   ``group_ranges(codes)``     group boundary detection over per-column
@@ -457,6 +460,25 @@ def hash_join_probe(build_hash: np.ndarray, probe_hash: np.ndarray
                           counts)
     build_pos = np.repeat(lo, counts) + ranges(counts)
     return probe_idx, order[build_pos]
+
+
+def filter_join_gather(sel: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    """Compose a filter's row selection with a join's gather indices.
+
+    ``sel`` maps a filtered (or valid-key) domain back to original row
+    ids; ``idx`` gathers within that domain, with ``-1`` the left-join
+    miss sentinel.  Returns original-domain gather indices with every
+    ``-1`` preserved — the fusion step that lets a filter feeding a join
+    run as *one* gather over the original columns instead of
+    materializing the filtered intermediate table first."""
+    sel = np.ascontiguousarray(sel, dtype=np.int64)
+    idx = np.ascontiguousarray(idx, dtype=np.int64)
+    if (idx >= 0).all():
+        return sel[idx]                    # inner join: no sentinels
+    out = np.full(len(idx), -1, dtype=np.int64)
+    hit = idx >= 0
+    out[hit] = sel[idx[hit]]
+    return out
 
 
 def bytes_rows_equal(off_a: np.ndarray, val_a: np.ndarray,

@@ -48,25 +48,35 @@ def pack_fn(tables: List[Table], batch: int, seq_len: int) -> Table:
     return Table.from_pydict({"ids": ids[:n]})
 
 
+def _keep_mask(batch, col: str) -> np.ndarray:
+    """Right-side mask for the fused corpus filter: metadata rows whose
+    keep flag is nonzero.  Module-level so the partial pickles."""
+    return batch.column(col).to_numpy() != 0
+
+
 def join_filter_fn(tables: List[Table], on: str = "doc",
                    keep_col: str = "keep") -> Table:
     """The pipeline's join-shaped stage: inner-join a text shard
     (``tables[0]``) with the corpus metadata table (``tables[1]``) on the
     document id and keep only rows whose ``keep_col`` is nonzero — the
     metadata-driven corpus filter every curated training set runs.
-    Metadata payloads (e.g. the dict-encoded ``lang``) ride through the
-    join with their dictionaries reshared by reference.  Module-level so
-    a partial of it crosses the Flight process boundary."""
-    joined = ops.join(tables[0], tables[1], on=on, how="inner")
-    keep = joined.combine().batches[0].column(keep_col).to_numpy() != 0
-    return ops.filter_rows(joined, keep)
+    Runs as the *fused* ``ops.filter_join``: the keep mask composes into
+    the join's build-side selection, so the filtered intermediate table
+    is never materialized (one gather per payload column instead of
+    two).  Metadata payloads (e.g. the dict-encoded ``lang``) ride
+    through the join with their dictionaries reshared by reference.
+    Module-level so a partial of it crosses the Flight process
+    boundary."""
+    return ops.filter_join(
+        tables[0], tables[1], on=on, how="inner",
+        right_mask=functools.partial(_keep_mask, col=keep_col))
 
 
-#: ops.join/filter_rows are reached through the ``ops`` module attribute,
-#: which node fingerprints do not chase — declare them (join chains to
-#: its relational vkernels) so a join/kernel edit invalidates cached
-#: 'joinf' outputs instead of serving stale filtered tables
-join_filter_fn.__fp_includes__ = (ops.join, ops.filter_rows)
+#: ops.filter_join is reached through the ``ops`` module attribute, which
+#: node fingerprints do not chase — declare it (it chains to its
+#: relational vkernels, incl. filter_join_gather) so a join/kernel edit
+#: invalidates cached 'joinf' outputs instead of serving stale tables
+join_filter_fn.__fp_includes__ = (ops.filter_join, _keep_mask)
 
 
 def make_text_shards(root: str, n_shards: int, rows_per_shard: int,

@@ -1,0 +1,308 @@
+"""Chain shipping: linear DAG segments dispatched as one exec_chain
+request (ISSUE 6).
+
+Covers the dispatch-plane claims:
+  * chain-shipped process runs are bit-identical to sequential thread
+    runs, and strictly cheaper on the wire per node than per-node
+    dispatch;
+  * a chain crossing a CACHED boundary ships only its non-hit suffix
+    (the PR 3 manifest cones stay intact);
+  * a worker SIGKILLed mid-chain replays the whole segment on a
+    survivor;
+  * an unpicklable fn anywhere in a would-be chain degrades to
+    node-by-node dispatch (and in-parent fallback), never to a wrong
+    answer.
+"""
+
+import functools
+import os
+import signal
+
+import numpy as np
+
+from repro.core import (BufferStore, DAG, Executor, NodeSpec,
+                        ProcessWorkerExecutor, RMConfig, ResourceManager,
+                        SipcReader, zarquet)
+from repro.core import ops
+
+
+# ---------------------------------------------------------------------------
+# module-level node fns: must be picklable for the process executor
+# ---------------------------------------------------------------------------
+
+def dict_encode_op(tables):
+    return ops.dict_encode(tables[0], ["s0"])
+
+
+def upper_op(tables):
+    return ops.upper(tables[0], "s0")
+
+
+def filter_even_op(tables):
+    t = tables[0]
+    return ops.filter_rows(t, np.arange(t.num_rows) % 2 == 0)
+
+
+def drop_third_op(tables):
+    t = tables[0]
+    return ops.filter_rows(t, np.arange(t.num_rows) % 3 != 0)
+
+
+def crash_once_op(tables, marker):
+    """SIGKILL the hosting worker process the first time it runs; the
+    marker file makes the replay succeed."""
+    if not os.path.exists(marker):
+        open(marker, "w").close()
+        os.kill(os.getpid(), signal.SIGKILL)
+    return tables[0]
+
+
+def identity_op(tables):
+    return tables[0]
+
+
+def _write_shards(tmpdir, n=2):
+    paths = []
+    for i in range(n):
+        t = zarquet.gen_str_table(1, 1 << 15, str_len=24, repeats=4, seed=i)
+        p = os.path.join(tmpdir, f"s{i}.zq")
+        zarquet.write_table(p, t)
+        paths.append(p)
+    return paths
+
+
+def _file_store(tmp_path, name="store"):
+    return BufferStore(backing="file",
+                       data_dir=os.path.join(str(tmp_path), name))
+
+
+def _linear_dags(paths, tail_fn=filter_even_op):
+    return [DAG([
+        NodeSpec("load", source=p, est_mem=1 << 22),
+        NodeSpec("enc", fn=dict_encode_op, deps=["load"], est_mem=1 << 22),
+        NodeSpec("filt", fn=tail_fn, deps=["enc"], est_mem=1 << 22,
+                 keep_output=True),
+    ], name=f"job{i}") for i, p in enumerate(paths)]
+
+
+def _run_process(tmp_path, dags, name, workers=2, **cfg):
+    fstore = _file_store(tmp_path, name)
+    rm = ResourceManager(fstore, RMConfig(workers=workers,
+                                          workers_mode="process", **cfg))
+    ex = ProcessWorkerExecutor(fstore, rm, workers=workers)
+    ex.run(dags)
+    return fstore, rm, ex
+
+
+def _sequential_reference(paths, out_node="filt", tail_fn=filter_even_op):
+    ram = BufferStore()
+    rm = ResourceManager(ram, RMConfig())
+    dags = _linear_dags(paths, tail_fn=tail_fn)
+    Executor(ram, rm).run(dags)
+    refs = [SipcReader(ram).read_table(d.nodes[out_node].output)
+            for d in dags]
+    return ram, refs
+
+
+# ---------------------------------------------------------------------------
+# bit-identity + wire cost
+# ---------------------------------------------------------------------------
+
+def test_chain_shipped_run_matches_sequential(tmp_path):
+    paths = _write_shards(str(tmp_path))
+    ram, refs = _sequential_reference(paths)
+
+    fstore, rm, ex = _run_process(tmp_path, dags := _linear_dags(paths),
+                                  "chain")
+    try:
+        # every DAG is one linear picklable segment: all three nodes ship
+        assert ex.chains_shipped == len(dags)
+        assert ex.chain_nodes_shipped == 3 * len(dags)
+        assert ex.fallback_inline == 0
+        for d, want in zip(dags, refs):
+            got = SipcReader(fstore).read_table(d.nodes["filt"].output)
+            assert got.equals(want)
+        # interior outputs stayed worker-local: never adopted or charged
+        for d in dags:
+            assert d.nodes["enc"].output is None
+            assert d.nodes["enc"].output_bytes == 0
+        assert rm.admission.reserved == 0
+        assert ex._inflight == {}
+        assert fstore.copied_bytes == 0
+    finally:
+        ex.close()
+        fstore.close()
+        ram.close()
+
+
+def test_chain_dispatch_cuts_socket_bytes_per_node(tmp_path):
+    paths = _write_shards(str(tmp_path))
+    ram, refs = _sequential_reference(paths)
+    per_node = {}
+    try:
+        for flag in (True, False):
+            dags = _linear_dags(paths)
+            fstore, _rm, ex = _run_process(tmp_path, dags, f"chain-{flag}",
+                                           chain_dispatch=flag)
+            try:
+                assert ex.chains_shipped == (len(dags) if flag else 0)
+                per_node[flag] = ex.socket_bytes / ex.node_runs
+                for d, want in zip(dags, refs):
+                    got = SipcReader(fstore).read_table(
+                        d.nodes["filt"].output)
+                    assert got.equals(want)
+            finally:
+                ex.close()
+                fstore.close()
+    finally:
+        ram.close()
+    # same answer either way, strictly fewer socket bytes per node chained
+    assert per_node[True] < per_node[False]
+
+
+# ---------------------------------------------------------------------------
+# CACHED boundary
+# ---------------------------------------------------------------------------
+
+def test_chain_crossing_cached_boundary_ships_suffix_only(tmp_path):
+    """Run 1 publishes the whole chain; run 2 swaps the dict-encode step
+    for a different fn, so load+up hit the manifest (CACHED) and only
+    the changed suffix [enc', filt] ships as a chain rooted at the
+    cached output."""
+    paths = _write_shards(str(tmp_path), n=1)
+    cache_root = os.path.join(str(tmp_path), "cache")
+
+    def build(mid_fn):
+        return [DAG([
+            NodeSpec("load", source=paths[0], est_mem=1 << 22),
+            NodeSpec("up", fn=upper_op, deps=["load"], est_mem=1 << 22),
+            NodeSpec("mid", fn=mid_fn, deps=["up"], est_mem=1 << 22),
+            NodeSpec("filt", fn=filter_even_op, deps=["mid"],
+                     est_mem=1 << 22, keep_output=True),
+        ], name="cb")]
+
+    store1 = BufferStore(backing="file", root=cache_root)
+    rm1 = ResourceManager(store1, RMConfig(workers=2,
+                                           workers_mode="process",
+                                           cache_root=cache_root))
+    ex1 = ProcessWorkerExecutor(store1, rm1, workers=2)
+    dags1 = build(dict_encode_op)
+    ex1.run(dags1)
+    ex1.close()
+    store1.close()
+
+    # thread-mode reference for the run-2 DAG shape
+    ram = BufferStore()
+    dags_ref = build(drop_third_op)
+    Executor(ram, ResourceManager(ram, RMConfig())).run(dags_ref)
+    want = SipcReader(ram).read_table(dags_ref[0].nodes["filt"].output)
+
+    store2 = BufferStore(backing="file", root=cache_root)
+    rm2 = ResourceManager(store2, RMConfig(workers=2,
+                                           workers_mode="process",
+                                           cache_root=cache_root))
+    ex2 = ProcessWorkerExecutor(store2, rm2, workers=2)
+    dags2 = build(drop_third_op)
+    ex2.run(dags2)
+    try:
+        d = dags2[0]
+        # load+up were satisfied from the manifest, never executed
+        assert ex2.cache_hits == 2
+        assert ex2.load_runs == 0
+        # the non-hit suffix shipped as ONE chain of two nodes
+        assert ex2.chains_shipped == 1
+        assert ex2.chain_nodes_shipped == 2
+        got = SipcReader(store2).read_table(d.nodes["filt"].output)
+        assert got.equals(want)
+    finally:
+        ex2.close()
+        store2.close()
+        ram.close()
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+def test_worker_killed_mid_chain_retries_on_survivor(tmp_path):
+    """A SIGKILL inside a shipped chain loses nothing: the whole segment
+    (references only, side-effect free) replays on a surviving worker
+    and the RM reservations fully drain."""
+    paths = _write_shards(str(tmp_path), n=1)
+
+    # thread-mode reference with the same DAG shape (boom == identity)
+    ram = BufferStore()
+    ref_dag = DAG([
+        NodeSpec("load", source=paths[0], est_mem=1 << 22),
+        NodeSpec("boom", fn=identity_op, deps=["load"], est_mem=1 << 22),
+        NodeSpec("filt", fn=filter_even_op, deps=["boom"], est_mem=1 << 22,
+                 keep_output=True),
+    ], name="crash-ref")
+    Executor(ram, ResourceManager(ram, RMConfig())).run([ref_dag])
+    want = SipcReader(ram).read_table(ref_dag.nodes["filt"].output)
+
+    marker = os.path.join(str(tmp_path), "crashed-once")
+    dag = DAG([
+        NodeSpec("load", source=paths[0], est_mem=1 << 22),
+        NodeSpec("boom", fn=functools.partial(crash_once_op, marker=marker),
+                 deps=["load"], est_mem=1 << 22),
+        NodeSpec("filt", fn=filter_even_op, deps=["boom"], est_mem=1 << 22,
+                 keep_output=True),
+    ], name="crash")
+    fstore, rm, ex = _run_process(tmp_path, [dag], "crash", workers=2)
+    try:
+        assert os.path.exists(marker)          # it really died once
+        assert ex.worker_retries == 1
+        assert ex._pool.live_workers == 1      # the victim stayed retired
+        assert ex.chains_shipped == 1
+        assert ex.chain_nodes_shipped == 3
+        assert dag.all_done()
+        assert rm.admission.reserved == 0
+        assert ex._inflight == {}
+        got = SipcReader(fstore).read_table(dag.nodes["filt"].output)
+        assert got.equals(want)
+    finally:
+        ex.close()
+        fstore.close()
+        ram.close()
+
+
+# ---------------------------------------------------------------------------
+# unpicklable fallback
+# ---------------------------------------------------------------------------
+
+def test_unpicklable_fn_chain_falls_back_node_by_node(tmp_path):
+    paths = _write_shards(str(tmp_path), n=1)
+
+    seen = []                          # closure -> unpicklable
+
+    def local_mid(tables):
+        seen.append(tables[0].num_rows)
+        return ops.upper(tables[0], "s0")
+
+    def build():
+        return [DAG([
+            NodeSpec("load", source=paths[0], est_mem=1 << 22),
+            NodeSpec("mid", fn=local_mid, deps=["load"], est_mem=1 << 22),
+            NodeSpec("filt", fn=filter_even_op, deps=["mid"],
+                     est_mem=1 << 22, keep_output=True),
+        ], name="ub")]
+
+    ram = BufferStore()
+    dags_ref = build()
+    Executor(ram, ResourceManager(ram, RMConfig())).run(dags_ref)
+    want = SipcReader(ram).read_table(dags_ref[0].nodes["filt"].output)
+
+    fstore, rm, ex = _run_process(tmp_path, dags := build(), "unpick")
+    try:
+        # no link may include the closure, on either side: no chains
+        assert ex.chains_shipped == 0
+        assert ex.fallback_inline == 1
+        assert seen and seen[-1] > 0
+        got = SipcReader(fstore).read_table(dags[0].nodes["filt"].output)
+        assert got.equals(want)
+        assert rm.admission.reserved == 0
+    finally:
+        ex.close()
+        fstore.close()
+        ram.close()
