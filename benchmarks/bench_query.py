@@ -1,0 +1,239 @@
+"""Query frontend: naive vs optimized logical plans on a marts workload.
+
+The workload is the canonical warehouse shape — a staging model feeding
+two fact marts (paper §2's multi-model Bauplan pipelines):
+
+    staging   = scan(orders).filter(amount > 0)
+                            .join(scan(customers, dict country), on=cust)
+    fct_country = staging.group_by(country, sum/count(amount))
+    fct_segment = staging.group_by(segment, sum(amount))
+
+Both marts are compiled TOGETHER by ``plan.compile_plans``:
+
+  naive      — ``optimize=False``: the trees lower verbatim, one node
+               per occurrence (what two hand-wired per-mart DAG builds
+               produce): 2x(scan+scan+filter+join) + 2 group_bys
+               = 10 nodes, every source column loaded twice;
+  optimized  — filter->join fusion (the filter disappears into the
+               fused gather), projection pruning (orders loads 2/5
+               columns, customers 3/4), and common-subplan dedup (the
+               two marts share ONE staging cone) leave 5 nodes.
+
+Recorded per arm, paired interleaved min-of-N (see bench_join for the
+methodology): wall clock, nodes executed, bytes loaded by loader nodes,
+and copied bytes.  Gates (asserted in smoke too):
+
+  * both marts bit-identical across naive/optimized,
+  * optimized executes STRICTLY fewer nodes than naive,
+  * optimized loads STRICTLY fewer bytes than naive,
+  * differential re-run: against a persistent cache root, rewriting the
+    customers source and re-compiling the same plans recomputes ONLY
+    the customers cone (4 of 5 nodes: scan_customers, the shared
+    filter_join, both marts) while the orders scan adopts from the
+    manifest — the plan's partial-over-expression ops fingerprint
+    deterministically across processes.
+
+    PYTHONPATH=src python -m benchmarks.run query
+
+Full-size results land in BENCH_query.json.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.core import BufferStore, RMConfig, ResourceManager
+from repro.core import fingerprint, make_executor
+from repro.core.arrow import Table
+from repro.core.plan import col, compile_plans, scan
+
+from .common import Csv, gb, make_env, timed, write_source
+
+SMOKE = os.environ.get("ZERROW_BENCH_SMOKE") == "1"
+N_COUNTRIES = 32
+N_SEGMENTS = 8
+
+
+def gen_tables(orders_bytes: int, seed: int = 0):
+    """(orders, customers): a 5-column fact (only cust+amount are
+    referenced by the marts — pruning target) against a 4-column dim."""
+    rng = np.random.default_rng(seed)
+    n_orders = max(orders_bytes // 40, 64)        # 5 x 8B columns
+    n_cust = max(n_orders // 8, 8)
+    orders = Table.from_pydict({
+        "oid": np.arange(n_orders, dtype=np.int64),
+        "cust": rng.integers(0, n_cust, size=n_orders).astype(np.int64),
+        "amount": rng.normal(5.0, 20.0, size=n_orders),   # ~60% > 0
+        "qty": rng.integers(1, 9, size=n_orders).astype(np.int64),
+        "pad": rng.random(n_orders),
+    })
+    customers = Table.from_pydict({
+        "cust": np.arange(n_cust, dtype=np.int64),
+        "country": [f"country{i % N_COUNTRIES:03d}" for i in range(n_cust)],
+        "segment": [f"segment{i % N_SEGMENTS}" for i in range(n_cust)],
+        "extra": rng.random(n_cust),
+    })
+    return orders, customers
+
+
+def build_plans(po: str, pc: str):
+    staging = (scan(po).filter(col("amount") > 0)
+               .join(scan(pc, dict_columns=("country",)), on="cust"))
+    return {
+        "fct_country": staging.group_by(
+            "country", {"revenue": ("amount", "sum"),
+                        "n": ("amount", "count")}),
+        "fct_segment": staging.group_by(
+            "segment", {"revenue": ("amount", "sum")}),
+    }
+
+
+def _rep(env, plans, optimize):
+    cp = compile_plans(plans, optimize=optimize,
+                       name="marts-opt" if optimize else "marts-naive")
+    runs0 = env.ex.node_runs
+    copied0 = env.ex.reshare_stats()["bytes_copied"]
+    with timed() as t:
+        env.ex.run([cp.dag])
+    assert cp.dag.all_done()
+    marts = {s: cp.read(env.store, s).to_pydict() for s in cp.sinks}
+    loaded = sum(st.output_bytes for st in cp.dag.nodes.values()
+                 if st.is_loader)
+    row = {"arm": "optimized" if optimize else "naive", "wall_s": t[1],
+           "nodes_total": len(cp.dag.nodes),
+           "nodes_executed": env.ex.node_runs - runs0,
+           "bytes_loaded": loaded,
+           "copied_bytes":
+               env.ex.reshare_stats()["bytes_copied"] - copied0}
+    return row, marts
+
+
+def _run_paired(plans, results, reps):
+    """Naive-vs-optimized as paired interleaved min-of-N reps (both arms
+    in the same noise window; see bench_join._run_paired)."""
+    envs = {arm: make_env(workers=1, decache=False)
+            for arm in (False, True)}
+    best = {False: None, True: None}
+    try:
+        for _ in range(reps):
+            for arm in (False, True):
+                row, marts = _rep(envs[arm], plans, arm)
+                row["reps"] = reps
+                if best[arm] is None or \
+                        row["wall_s"] < best[arm][0]["wall_s"]:
+                    best[arm] = (row, marts)
+    finally:
+        for env in envs.values():
+            env.close()
+    for arm in (False, True):
+        results["runs"].append(best[arm][0])
+    return best[False], best[True]
+
+
+def _diff_rerun(tmp, root, plans, size, results):
+    """Optimized plans against a persistent cache root: cold run, then
+    rewrite customers.zq and re-run — only the customers cone (4/5
+    nodes) may recompute; the orders scan must adopt from the manifest."""
+    rows = []
+    for run in ("cold", "diff"):
+        if run == "diff":
+            o2, c2 = gen_tables(size, seed=99)
+            write_source(tmp, "customers.zq", c2)
+        fingerprint.reset_caches()     # a re-run is a fresh process
+        store = BufferStore(backing="file", root=root)
+        rm = ResourceManager(store, RMConfig(cache_root=root))
+        ex = make_executor(store, rm)
+        cp = compile_plans(plans, optimize=True, name=f"marts-{run}")
+        with timed() as t:
+            ex.run([cp.dag])
+        assert cp.dag.all_done()
+        for s in cp.sinks:
+            cp.dag.nodes[cp.sinks[s]].output.release()
+        rows.append({"run": f"diff_{run}", "wall_s": t[1],
+                     "node_runs": ex.node_runs,
+                     "cache_hits": ex.cache_hits})
+        results["runs"].append(rows[-1])
+        ex.close()
+        store.close()
+    return rows
+
+
+def main() -> None:
+    size = gb(0.4)
+    orders, customers = gen_tables(size)
+    results = {"smoke": SMOKE, "orders_bytes": orders.nbytes,
+               "customers_bytes": customers.nbytes, "runs": []}
+    tmp = tempfile.mkdtemp(
+        prefix="zerrow-bench-query-",
+        dir="/dev/shm" if os.access("/dev/shm", os.W_OK) else None)
+    try:
+        po = write_source(tmp, "orders.zq", orders)
+        pc = write_source(tmp, "customers.zq", customers)
+        plans = build_plans(po, pc)
+
+        reps = 6 if SMOKE else 4
+        ((r_naive, m_naive),
+         (r_opt, m_opt)) = _run_paired(plans, results, reps)
+        Csv.add("query_naive", r_naive["wall_s"],
+                f"nodes={r_naive['nodes_executed']};"
+                f"loadMB={r_naive['bytes_loaded'] / 1e6:.1f}")
+        Csv.add("query_optimized", r_opt["wall_s"],
+                f"{r_naive['wall_s'] / max(r_opt['wall_s'], 1e-9):.2f}"
+                f"x_of_naive;nodes={r_opt['nodes_executed']};"
+                f"loadMB={r_opt['bytes_loaded'] / 1e6:.1f}")
+
+        # correctness + structure gates (smoke too)
+        assert m_naive == m_opt, \
+            "optimized marts differ from naive marts"
+        assert r_opt["nodes_executed"] < r_naive["nodes_executed"], \
+            f"optimizer did not cut nodes: {r_opt['nodes_executed']} vs " \
+            f"{r_naive['nodes_executed']}"
+        assert r_opt["bytes_loaded"] < r_naive["bytes_loaded"], \
+            f"optimizer did not cut loaded bytes: " \
+            f"{r_opt['bytes_loaded']} vs {r_naive['bytes_loaded']}"
+
+        cold, diff = _diff_rerun(tmp, os.path.join(tmp, "cache"), plans,
+                                 size, results)
+        Csv.add("query_diff_rerun", diff["wall_s"],
+                f"nodes={diff['node_runs']};hits={diff['cache_hits']}")
+        assert cold["node_runs"] == len(
+            compile_plans(plans).dag.nodes), "cold run must execute all"
+        assert diff["node_runs"] == 4, \
+            f"diff re-run recomputed {diff['node_runs']} nodes, " \
+            "expected 4 (customers cone only)"
+        assert diff["cache_hits"] == 1, \
+            f"diff re-run adopted {diff['cache_hits']} nodes, " \
+            "expected 1 (the orders scan)"
+
+        results["speedup_optimized"] = (
+            r_naive["wall_s"] / max(r_opt["wall_s"], 1e-9))
+        results["load_bytes_saved_frac"] = 1 - (
+            r_opt["bytes_loaded"] / max(r_naive["bytes_loaded"], 1))
+        if SMOKE:
+            print(f"# smoke: marts identical; nodes "
+                  f"{r_naive['nodes_executed']}->{r_opt['nodes_executed']}"
+                  f", loadMB {r_naive['bytes_loaded'] / 1e6:.1f}->"
+                  f"{r_opt['bytes_loaded'] / 1e6:.1f}; diff re-run "
+                  f"{diff['node_runs']} nodes / {diff['cache_hits']} hit;"
+                  " BENCH_query.json left untouched")
+            return
+        out = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_query.json")
+        with open(out, "w") as fh:
+            json.dump(results, fh, indent=2)
+        print(f"# wrote {out}: optimized "
+              f"{results['speedup_optimized']:.2f}x naive wall, "
+              f"{r_naive['nodes_executed']}->{r_opt['nodes_executed']} "
+              f"nodes, saved "
+              f"{results['load_bytes_saved_frac']:.0%} of loaded bytes")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

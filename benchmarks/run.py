@@ -15,9 +15,12 @@ import sys
 #: asserts the thread-scaling sanity condition (workers=4 <= workers=1
 #: x 1.05) so the per-row-loop GIL inversion cannot silently return;
 #: 'join' asserts thread/process bit-identity and dictionary reshare
-#: hits on the relational workload.
+#: hits on the relational workload; 'query' asserts the logical
+#: optimizer executes strictly fewer nodes AND loads strictly fewer
+#: bytes than the naive plan, bit-identically, and that a one-source
+#: diff re-run recomputes only the affected fingerprint cone.
 SMOKE_FIGURES = ("fig2", "fig6", "concurrency", "flight", "diffcache",
-                 "kernels", "join")
+                 "kernels", "join", "query")
 
 
 def main() -> None:
@@ -28,10 +31,10 @@ def main() -> None:
         os.environ.setdefault("ZERROW_BENCH_SCALE", "256")
         os.environ["ZERROW_BENCH_SMOKE"] = "1"
     from . import (bench_concurrency, bench_diffcache, bench_flight,
-                   bench_join, bench_kernels, fig2_copy_latency,
-                   fig4_copy_avoidance, fig5_decache, fig6_resharing,
-                   fig7_depth, fig8_dict_repeats, fig9_dict_norepeats,
-                   fig10_eviction, roofline_table)
+                   bench_join, bench_kernels, bench_query,
+                   fig2_copy_latency, fig4_copy_avoidance, fig5_decache,
+                   fig6_resharing, fig7_depth, fig8_dict_repeats,
+                   fig9_dict_norepeats, fig10_eviction, roofline_table)
     figures = {
         "fig2": fig2_copy_latency.main,       # copy-avoidance latency
         "fig4": fig4_copy_avoidance.main,     # KernelZero vs memory limit
@@ -47,6 +50,7 @@ def main() -> None:
         "diffcache": bench_diffcache.main,    # cross-run differential cache
         "kernels": bench_kernels.main,        # vectorized kernels + scaling
         "join": bench_join.main,              # hash join + group-by engine
+        "query": bench_query.main,            # plan frontend + optimizer
     }
     selected = args or (list(SMOKE_FIGURES) if smoke else list(figures))
     print("name,us_per_call,derived")

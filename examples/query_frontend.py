@@ -1,0 +1,85 @@
+"""Query frontend: declarative marts, one optimized zero-copy DAG.
+
+Builds the docs' staging -> two-fact-marts workload with the dataframe-
+style plan builder, prints ``explain()`` (the pre/post-optimization
+trees with per-pass annotations — the exact text shown in
+docs/ARCHITECTURE.md), then runs the naive and optimized compiles and
+verifies the optimizer only changed HOW (5 nodes instead of 10, a
+fraction of the bytes loaded), never WHAT (bit-identical marts).
+
+    PYTHONPATH=src python examples/query_frontend.py
+"""
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import BufferStore, Executor, RMConfig, ResourceManager
+from repro.core import zarquet
+from repro.core.arrow import Table
+from repro.core.plan import col, compile_plans, explain_plans, scan
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="zerrow-query-")
+    rng = np.random.default_rng(0)
+    n, n_cust = 200_000, 25_000
+
+    # a 5-column fact table (the marts read only cust + amount) and a
+    # 4-column dimension with a dict-encodable country tag
+    zarquet.write_table(os.path.join(tmp, "orders.zq"), Table.from_pydict({
+        "oid": np.arange(n, dtype=np.int64),
+        "cust": rng.integers(0, n_cust, n).astype(np.int64),
+        "amount": rng.normal(5.0, 20.0, n),
+        "qty": rng.integers(1, 9, n).astype(np.int64),
+        "pad": rng.random(n),
+    }))
+    zarquet.write_table(os.path.join(tmp, "customers.zq"),
+                        Table.from_pydict({
+        "cust": np.arange(n_cust, dtype=np.int64),
+        "country": [f"country{i % 32:03d}" for i in range(n_cust)],
+        "segment": [f"segment{i % 8}" for i in range(n_cust)],
+        "extra": rng.random(n_cust),
+    }))
+
+    # declarative marts: a shared staging model feeding two facts
+    orders = scan(os.path.join(tmp, "orders.zq"))
+    customers = scan(os.path.join(tmp, "customers.zq"),
+                     dict_columns=("country",))
+    staging = orders.filter(col("amount") > 0).join(customers, on="cust")
+    plans = {
+        "fct_country": staging.group_by(
+            "country", {"revenue": ("amount", "sum"),
+                        "n": ("amount", "count")}),
+        "fct_segment": staging.group_by(
+            "segment", {"revenue": ("amount", "sum")}),
+    }
+
+    print(explain_plans(plans))
+    print()
+
+    marts = {}
+    for optimize in (False, True):
+        store = BufferStore(swap_dir=os.path.join(
+            tmp, f"swap{int(optimize)}"))
+        ex = Executor(store, ResourceManager(store, RMConfig()))
+        cp = compile_plans(plans, optimize=optimize, name="marts")
+        ex.run([cp.dag])
+        loaded = sum(st.output_bytes for st in cp.dag.nodes.values()
+                     if st.is_loader)
+        marts[optimize] = {s: cp.read(store, s).to_pydict()
+                           for s in cp.sinks}
+        arm = "optimized" if optimize else "naive    "
+        print(f"{arm}: {len(cp.dag.nodes):2d} nodes, "
+              f"{loaded / 1e6:5.1f} MB loaded")
+        store.close()
+
+    assert marts[False] == marts[True], "optimizer changed the data!"
+    print("\nmarts bit-identical across naive/optimized: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,14 @@ Control-plane subsystems (paper §3.1/§3.3, layered — docs/ARCHITECTURE.md):
              executor under its historical ``Executor`` name and the
              ``make_executor`` factory (workers_mode -> class)
 
+Frontend (post-paper, docs/ARCHITECTURE.md "Query frontend"):
+  plan     — declarative query layer: picklable expression trees,
+             dataframe-style plan builder, rule-based logical optimizer
+             (projection pruning, filter pushdown, filter->join fusion,
+             common-subplan dedup), compiled to ordinary fingerprinted
+             DAG nodes (``plan.scan(...).filter(...)`` ->
+             ``plan.compile_plans``)
+
 Register a new policy by subclassing ``EvictionPolicy`` (decorate with
 ``sched.register_eviction``) or ``SchedulePolicy`` (``register_schedule``)
 and selecting it by name in ``RMConfig``.
@@ -68,6 +76,7 @@ from .sched import (AdmissionController, EvictionPolicy,
                     WorkerPoolExecutor, get_eviction, get_schedule,
                     register_eviction, register_schedule)
 from .sipc import (AddressMap, BufRef, SipcMessage, SipcReader, SipcWriter)
+from . import plan
 
 __all__ = [
     "ArrowType", "Column", "Field", "RecordBatch", "Schema", "Table",
@@ -88,5 +97,5 @@ __all__ = [
     "AddressMap", "BufRef", "SipcMessage", "SipcReader", "SipcWriter",
     "FlightClient", "FlightError", "FlightServer", "FlightWorkerError",
     "FlightWorkerLost", "FlightWorkerPool", "WireError", "decode_message",
-    "encode_message", "frame_refs", "vkernels",
+    "encode_message", "frame_refs", "vkernels", "plan",
 ]

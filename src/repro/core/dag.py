@@ -39,6 +39,11 @@ class NodeSpec:
     # loader-node parameters (generic loader code — paper §3.1):
     source: Optional[str] = None         # zarquet path
     dict_columns: tuple = ()
+    columns: Optional[tuple] = None      # column subset to load (None =
+    #                                    # all) — projection pruning: the
+    #                                    # plan optimizer narrows loaders
+    #                                    # so unused columns are never
+    #                                    # read, decompressed or charged
     keep_output: bool = False            # survive DAG completion (sinks
     #                                    # consumed by an external reader)
 
@@ -100,7 +105,9 @@ class NodeState:
         # fall back to the path key when fingerprinting is off/uncacheable
         if self.fingerprint is not None:
             return self.fingerprint
-        return (self.spec.source, tuple(sorted(self.spec.dict_columns)))
+        return (self.spec.source, tuple(sorted(self.spec.dict_columns)),
+                None if self.spec.columns is None
+                else tuple(sorted(self.spec.columns)))
 
     def transition(self, new_status: str) -> None:
         """Move through the lifecycle, validating against

@@ -212,10 +212,17 @@ def node_fingerprint(spec, input_fps: List[str],
             source_fp = file_fingerprint(spec.source)
         except OSError:
             return None
-    payload = json.dumps({
+    payload_dict = {
         "v": FP_VERSION, "op": op, "source": source_fp,
         "dict_columns": sorted(spec.dict_columns),
-        "inputs": input_fps, "salt": salt}, sort_keys=True)
+        "inputs": input_fps, "salt": salt}
+    # loader column subsets (projection pruning) change the output table,
+    # so they change the fingerprint; the key is omitted entirely for
+    # full loads so pre-existing manifests keep hitting
+    cols = getattr(spec, "columns", None)
+    if cols is not None:
+        payload_dict["columns"] = sorted(cols)
+    payload = json.dumps(payload_dict, sort_keys=True)
     return hashlib.sha256(payload.encode()).hexdigest()
 
 

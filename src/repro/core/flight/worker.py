@@ -6,7 +6,7 @@ Unix-domain socket:
 
     {"op": "exec", "label", "mode", "fn": <pickled callable>,
      "inputs": [<SIPC wire frame>, ...]}
-    {"op": "load", "label", "mode", "source", "dict_columns"}
+    {"op": "load", "label", "mode", "source", "dict_columns", "columns"}
     {"op": "exec_chain", "mode", "steps": [<step>, ...],
      "inputs": [<SIPC wire frame>, ...]}
     {"op": "ping"} / {"op": "shutdown"}
@@ -137,6 +137,7 @@ def _run_step(step, store, kz, Sandbox, zarquet, mode, inputs):
     if step["kind"] == "load":
         table = zarquet.read_table(step["source"],
                                    dict_columns=tuple(step["dict_columns"]),
+                                   columns=step.get("columns"),
                                    on_buffer=sb.register_anon,
                                    reader_threads=step.get("reader_threads"))
         return sb.write_output(table, label=label)
@@ -202,6 +203,7 @@ def _handle(req, store, kz, Sandbox, zarquet) -> Dict[str, Any]:
                 table = zarquet.read_table(
                     step["source"],
                     dict_columns=tuple(step["dict_columns"]),
+                    columns=step.get("columns"),
                     on_buffer=sb.register_anon,
                     reader_threads=step.get("reader_threads"))
             else:
@@ -233,6 +235,7 @@ def _handle(req, store, kz, Sandbox, zarquet) -> Dict[str, Any]:
         msg = _run_step({"kind": "load", "label": label,
                          "source": req["source"],
                          "dict_columns": req["dict_columns"],
+                         "columns": req.get("columns"),
                          "reader_threads": req.get("reader_threads")},
                         store, kz, Sandbox, zarquet, mode, [])
     else:

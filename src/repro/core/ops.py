@@ -44,6 +44,13 @@ Relational (reshuffle rows across tables — hash-join engine, PR 5):
 Compute helpers (paper workloads):
   ``sum_all_ints(t)``            Fig 2 reader-node reduction.
   ``add_columns_compute(t, a, b, out, repeat=1)``  Fig 7/10 column math.
+
+These ops are also the lowering targets of the declarative query
+frontend (``core/plan/``): its compiler emits ``select_columns`` /
+``filter_rows`` / ``sort_by`` / ``slice_rows`` / ``join_node`` /
+``group_by_node`` nodes, and its filter->join fusion rule rewrites
+filter-under-join trees onto ``filter_join`` — so a plan-built DAG and a
+hand-wired one exercise the identical op (and fingerprint) surface.
 """
 
 from __future__ import annotations

@@ -395,7 +395,7 @@ class WorkerPoolExecutor:
 
         table = zarquet.read_table(
             st.spec.source, dict_columns=st.spec.dict_columns,
-            on_buffer=on_buffer,
+            columns=st.spec.columns, on_buffer=on_buffer,
             reader_threads=getattr(self.rm.cfg, "reader_threads", None))
         with self._lock:
             return sb.write_output(table, label=st.name)
@@ -724,6 +724,7 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
             return {"kind": "load", "label": n.name,
                     "source": n.spec.source,
                     "dict_columns": tuple(n.spec.dict_columns),
+                    "columns": n.spec.columns,
                     "reader_threads": getattr(self.rm.cfg,
                                               "reader_threads", None),
                     "echo": self._chain_echo(n, is_tail)}
@@ -901,6 +902,7 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
         reply = self._request(
             {"op": "load", "label": st.name, "source": st.spec.source,
              "dict_columns": tuple(st.spec.dict_columns),
+             "columns": st.spec.columns,
              "reader_threads": getattr(self.rm.cfg, "reader_threads",
                                        None)})
         return self._adopt_reply(reply, st, sb)

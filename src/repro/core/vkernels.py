@@ -71,6 +71,11 @@ this module sits below ``arrow.py`` with no import cycle, and the big
 array ops release the GIL — which is what lets the worker-pool executor
 actually overlap compute-adjacent work across threads (see
 docs/ARCHITECTURE.md "Compute kernels & the GIL").
+
+Ops reached from the query frontend (``core/plan/``) pin their kernels
+via ``__fp_includes__`` (``ops.filter_join`` chains down to
+``filter_join_gather``), so editing a kernel here invalidates cached
+plan outputs exactly as it invalidates hand-wired ones.
 """
 
 from __future__ import annotations

@@ -7,7 +7,12 @@ properties the paper relies on:
     real decompression work, parallelizable per column — paper Fig 2);
   * ``read_table(..., dict_columns=...)`` mirrors PyArrow's
     ``read_dictionary=`` argument: chosen utf8 columns are deserialized
-    straight into dictionary encoding (paper §4.2.4).
+    straight into dictionary encoding (paper §4.2.4);
+  * ``read_table(..., columns=...)`` mirrors Parquet readers' column
+    selection: unselected columns are never read or decompressed — the
+    hook the plan optimizer's projection pruning bottoms out on
+    (``core/plan/``: unused columns never get deanonymized because they
+    are never loaded at all).
 
 zstd is preferred when the ``zstandard`` package is installed; otherwise
 stdlib ``zlib`` is used.  The codec is recorded in the footer, so files
@@ -203,7 +208,8 @@ def read_footer(path: str) -> dict:
 def read_table(path: str, dict_columns: Sequence[str] = (),
                allocator: Callable[[int], np.ndarray] = alloc_aligned,
                on_buffer: Optional[Callable[[np.ndarray], None]] = None,
-               reader_threads: Optional[int] = None) -> Table:
+               reader_threads: Optional[int] = None,
+               columns: Optional[Sequence[str]] = None) -> Table:
     """Deserialize to Arrow.  ``allocator`` controls where uncompressed
     buffers land (page-aligned by default: the de-anonymization fast path).
     ``on_buffer`` lets the share wrapper register each fresh buffer as
@@ -215,14 +221,31 @@ def read_table(path: str, dict_columns: Sequence[str] = (),
     serial.  Allocation, ``on_buffer`` callbacks and column assembly all
     stay on the calling thread, in footer order, so the
     allocator/on_buffer contract is unchanged; only the GIL-free
-    decompress-into step runs on pool threads."""
+    decompress-into step runs on pool threads.
+
+    ``columns`` restricts the read to a subset of columns (projection
+    pushdown, mirroring Parquet readers' ``columns=``): unselected
+    columns are never read, decompressed or allocated — their bytes stay
+    on disk.  Output column order is footer order restricted to the
+    selection (order of the ``columns`` sequence itself is irrelevant);
+    unknown names raise ``KeyError``."""
     meta = read_footer(path)
     codec = meta.get("codec", "zstd")   # pre-codec files were always zstd
     dict_set = set(dict_columns)
+    cols_meta = meta["columns"]
+    if columns is not None:
+        want = set(columns)
+        missing = want - {cm["name"] for cm in cols_meta}
+        if missing:
+            raise KeyError(f"zarquet {path}: no such column(s) "
+                           f"{sorted(missing)}")
+        cols_meta = [cm for cm in cols_meta if cm["name"] in want]
+        if not cols_meta:
+            raise KeyError(f"zarquet {path}: empty column selection")
     # 1) allocate destinations + record blob extents (footer order)
     spans: List[tuple] = []             # (file_off, clen) per buffer
     dests: List[np.ndarray] = []
-    for cm in meta["columns"]:
+    for cm in cols_meta:
         for bm in cm["buffers"]:
             spans.append((bm["off"], bm["clen"]))
             dests.append(allocator(bm["rlen"]))
@@ -253,7 +276,7 @@ def read_table(path: str, dict_columns: Sequence[str] = (),
     # 3) register buffers + assemble columns (calling thread, footer order)
     fields, cols = [], []
     it = iter(dests)
-    for cm in meta["columns"]:
+    for cm in cols_meta:
         bufs: Dict[str, np.ndarray] = {}
         for bm in cm["buffers"]:
             out = next(it)

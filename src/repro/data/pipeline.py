@@ -190,7 +190,13 @@ class ZerrowDataPipeline:
         meta = self.cfg.meta_path
         for path in paths:
             est = max(os.path.getsize(path) * 8, 1 << 20)
-            nodes = [NodeSpec("load", source=path, est_mem=est)]
+            # projection pruning (same loader knob core/plan's optimizer
+            # targets): without the metadata join only 'text' is ever
+            # read, so the 'doc' id column is never decoded; the join
+            # needs the id, so the meta path loads the full shard
+            cols = None if meta else ("text",)
+            nodes = [NodeSpec("load", source=path, est_mem=est,
+                              columns=cols)]
             pack_dep = "load"
             if meta:
                 nodes.append(NodeSpec(

@@ -1,0 +1,502 @@
+"""Query frontend + logical optimizer (core/plan/).
+
+The load-bearing property: for ANY plan, the optimized compile and the
+naive compile produce bit-identical tables, in thread and process modes,
+and both match a per-row pure-Python reference — the optimizer may only
+change HOW (fewer nodes, fewer bytes), never WHAT.
+
+Amounts are integer-valued floats throughout so sums are exact and
+``to_pydict`` equality really is bit-identity, not approximation.
+"""
+
+import functools
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import (BufferStore, Executor, RMConfig, ResourceManager,
+                        code_fingerprint, fingerprint_dag, make_executor,
+                        zarquet)
+from repro.core.arrow import Column, Table, pack_validity
+from repro.core import fingerprint, ops
+from repro.core.plan import (Filter, FilterJoin, Join, Plan, Scan, col,
+                             compile_plans, explain_plans, lit, scan)
+from repro.core.plan import compiler as plan_compiler
+from repro.core.plan import rules as plan_rules
+from repro.core.plan.expr import eval_predicate, split_conjuncts
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# dataset + per-row reference
+# ---------------------------------------------------------------------------
+
+def _keys(rng, n, kind, card, null_frac=0.0):
+    """A join-key column of the given logical kind."""
+    validity = None
+    if null_frac > 0 and n:
+        validity = pack_validity(rng.random(n) >= null_frac)
+    raw = rng.integers(0, card, size=n)
+    if kind == "int":
+        return Column.primitive(raw.astype(np.int64), validity)
+    # "dict" keys are written plain (zarquet stores decoded) and re-
+    # encoded at load via the scan's dict_columns — see _marts_plans
+    return Column.from_strings([f"k{int(v):02d}" for v in raw],
+                               validity=validity)
+
+
+def _star(tmp, rng, n_orders, n_cust, key_kind, null_frac, tag=""):
+    """Write an (orders, customers) pair; returns (po, pc, o_pd, c_pd)."""
+    orders = Table.from_pydict({
+        "cust": _keys(rng, n_orders, key_kind, max(n_cust, 1),
+                      null_frac),
+        "amount": rng.integers(-5, 15, size=n_orders).astype(np.float64),
+        "pad": rng.random(n_orders),
+    })
+    customers = Table.from_pydict({
+        "cust": _keys(rng, n_cust, key_kind, max(n_cust, 1)),
+        "country": Column.from_strings(
+            [f"c{int(v)}" for v in rng.integers(0, 4, size=n_cust)]),
+        "segment": Column.from_strings(
+            [f"s{int(v)}" for v in rng.integers(0, 3, size=n_cust)]),
+        "extra": rng.random(n_cust),
+    })
+    po = os.path.join(tmp, f"orders{tag}.zq")
+    pc = os.path.join(tmp, f"customers{tag}.zq")
+    zarquet.write_table(po, orders)
+    zarquet.write_table(pc, customers)
+    return po, pc, orders.to_pydict(), customers.to_pydict()
+
+
+def _marts_plans(po, pc, key_dict=False):
+    """The bench_query marts pair.  ``key_dict`` dict-encodes the join
+    key itself at load (dict-utf8 key mix)."""
+    odict = ("cust",) if key_dict else ()
+    cdict = ("country", "cust") if key_dict else ("country",)
+    staging = (scan(po, dict_columns=odict).filter(col("amount") > 0)
+               .join(scan(pc, dict_columns=cdict), on="cust"))
+    return {
+        "fct_country": staging.group_by(
+            "country", {"revenue": ("amount", "sum"),
+                        "n": ("amount", "count")}),
+        "fct_segment": staging.group_by(
+            "segment", {"revenue": ("amount", "sum")}),
+    }
+
+
+def _ref_marts(o_pd, c_pd):
+    """Per-row reference: SQL null semantics (null keys never match,
+    null comparisons are False), groups sorted ascending by key."""
+    cmap = {}
+    for j, k in enumerate(c_pd["cust"]):
+        if k is not None:
+            cmap.setdefault(k, []).append(j)
+    by_country, by_segment = {}, {}
+    for k, amt in zip(o_pd["cust"], o_pd["amount"]):
+        if amt is None or not amt > 0 or k is None:
+            continue
+        for j in cmap.get(k, ()):
+            gc = by_country.setdefault(c_pd["country"][j], [0.0, 0])
+            gc[0] += amt
+            gc[1] += 1
+            by_segment[c_pd["segment"][j]] = \
+                by_segment.get(c_pd["segment"][j], 0.0) + amt
+    ck = sorted(by_country)
+    sk = sorted(by_segment)
+    return ({"country": ck,
+             "revenue": [by_country[k][0] for k in ck],
+             "n": [by_country[k][1] for k in ck]},
+            {"segment": sk, "revenue": [by_segment[k] for k in sk]})
+
+
+def _run_plans(env_store, ex, plans, optimize):
+    cp = compile_plans(plans, optimize=optimize)
+    ex.run([cp.dag])
+    return {s: cp.read(env_store, s).to_pydict() for s in cp.sinks}
+
+
+def _thread_env(tmp_path, sub):
+    store = BufferStore(swap_dir=str(tmp_path / f"swap-{sub}"))
+    rm = ResourceManager(store, RMConfig())
+    return store, Executor(store, rm)
+
+
+# ---------------------------------------------------------------------------
+# expression trees
+# ---------------------------------------------------------------------------
+
+def test_expr_repr_stable_and_picklable():
+    e = ((col("amount") > 0) & (col("country") == "c1")) | \
+        ~(col("qty") <= lit(np.int64(3)))
+    # numpy literals canonicalize to Python scalars -> address-free repr
+    assert repr(e) == ("(((col('amount') > lit(0)) & "
+                       "(col('country') == lit('c1'))) | "
+                       "(~(col('qty') <= lit(3))))")
+    e2 = pickle.loads(pickle.dumps(e))
+    assert repr(e2) == repr(e)
+    assert e.columns() == {"amount", "country", "qty"}
+    # the compiled mask partial must pickle (Flight boundary) and
+    # fingerprint deterministically across rebuilds
+    p1 = functools.partial(eval_predicate, expr=e)
+    p2 = functools.partial(eval_predicate, expr=pickle.loads(
+        pickle.dumps(e)))
+    assert code_fingerprint(p1) is not None
+    assert code_fingerprint(p1) == code_fingerprint(p2)
+
+
+def test_expr_eval_null_and_utf8_semantics():
+    validity = pack_validity(np.array([True, False, True, True]))
+    t = Table.from_pydict({
+        "a": Column.primitive(np.array([1.0, 2.0, -1.0, 5.0]), validity),
+        "s": Column.from_strings(["x", "y", "x", "z"]),
+    })
+    b = t.combine().batches[0]
+    # comparisons with a null row are False for ==, !=, and >
+    assert list(eval_predicate(b, col("a") > 0)) == [True, False, False,
+                                                     True]
+    assert list(eval_predicate(b, col("a") != 2)) == [True, False, True,
+                                                      True]
+    assert list(eval_predicate(b, col("s") == "x")) == [True, False,
+                                                        True, False]
+    # utf8 != is also null-safe plain negation of ==
+    m_eq = eval_predicate(b, col("s") == "x")
+    m_ne = eval_predicate(b, col("s") != "x")
+    assert not np.any(m_eq & m_ne)
+    # conjunct split == combined mask
+    pred = (col("a") > 0) & (col("s") != "x") & (col("a") < 4)
+    combined = eval_predicate(b, pred)
+    split = np.ones(4, dtype=bool)
+    for c in split_conjuncts(pred):
+        split &= eval_predicate(b, c)
+    assert list(combined) == list(split)
+
+
+# ---------------------------------------------------------------------------
+# optimizer structure
+# ---------------------------------------------------------------------------
+
+def test_pushdown_routes_conjuncts_by_side(tmp_path):
+    rng = np.random.default_rng(0)
+    po, pc, _, _ = _star(str(tmp_path), rng, 100, 10, "int", 0.0)
+    base = scan(po).join(scan(pc), on="cust")
+    pred = ((col("amount") > 0) & (col("extra") < 1)
+            & (col("amount") < col("extra")))
+    opt, _ = plan_rules.optimize_plans({"q": base.filter(pred).root})
+    root = opt["q"]
+    # cross-side conjunct stays above; the others fused into the join
+    assert isinstance(root, Filter)
+    assert root.predicate.columns() == {"amount", "extra"}
+    fj = root.children[0]
+    assert isinstance(fj, FilterJoin)
+    assert fj.left_pred is not None and \
+        fj.left_pred.columns() == {"amount"}
+    assert fj.right_pred is not None and \
+        fj.right_pred.columns() == {"extra"}
+
+    # under a LEFT join the right-side conjunct must NOT push (it would
+    # resurrect null-padded rows the original plan filtered out)
+    left = scan(po).join(scan(pc), on="cust", how="left").filter(
+        (col("amount") > 0) & (col("extra") < 1))
+    opt, _ = plan_rules.optimize_plans({"q": left.root})
+    root = opt["q"]
+    assert isinstance(root, Filter)
+    assert root.predicate.columns() == {"extra"}
+    fj = root.children[0]
+    assert isinstance(fj, FilterJoin)
+    assert fj.left_pred is not None and fj.right_pred is None
+
+
+def test_pruning_preserves_suffix_collision(tmp_path):
+    """orders and customers share a non-key column name; a plan that
+    reads the suffixed right copy must keep the LEFT copy loaded too so
+    the collision (and therefore the suffix) survives pruning."""
+    rng = np.random.default_rng(1)
+    tmp = str(tmp_path)
+    n = 64
+    o = Table.from_pydict({
+        "cust": rng.integers(0, 8, n).astype(np.int64),
+        "x": rng.integers(0, 100, n).astype(np.int64),
+        "pad": rng.random(n)})
+    c = Table.from_pydict({
+        "cust": np.arange(8, dtype=np.int64),
+        "x": rng.integers(0, 100, 8).astype(np.int64),
+        "extra": rng.random(8)})
+    po, pc = os.path.join(tmp, "o.zq"), os.path.join(tmp, "c.zq")
+    zarquet.write_table(po, o)
+    zarquet.write_table(pc, c)
+    for sel in (("cust", "x_right"), ("cust", "x")):
+        p = scan(po).join(scan(pc), on="cust").select(*sel)
+        outs = {}
+        for optimize in (False, True):
+            store, ex = _thread_env(tmp_path, f"{sel[-1]}-{optimize}")
+            outs[optimize] = _run_plans(
+                store, ex, {"q": p}, optimize)["q"]
+            store.close()
+        assert outs[False] == outs[True], f"select {sel} differs"
+    # structure: selecting x_right keeps 'x' on BOTH scans
+    opt, _ = plan_rules.optimize_plans(
+        {"q": scan(po).join(scan(pc), on="cust")
+         .select("cust", "x_right").root})
+    proj = opt["q"]
+    join = proj.children[0]
+    lscan, rscan = join.children
+    assert "x" in lscan.schema() and "x" in rscan.schema()
+    assert "pad" not in lscan.schema() and "extra" not in rscan.schema()
+
+
+def test_dedup_shares_staging_cone(tmp_path):
+    rng = np.random.default_rng(2)
+    po, pc, _, _ = _star(str(tmp_path), rng, 200, 20, "int", 0.0)
+    plans = _marts_plans(po, pc)
+    naive = compile_plans(plans, optimize=False)
+    opt = compile_plans(plans, optimize=True)
+    assert len(naive.dag.nodes) == 10
+    assert len(opt.dag.nodes) == 5      # 2 scans + filter_join + 2 marts
+    # the two sinks share their staging dependency
+    deps = {opt.dag.nodes[opt.sinks[s]].spec.deps[0]
+            for s in opt.sinks}
+    assert len(deps) == 1
+    # pruned loaders narrowed to the referenced columns
+    scans = {st.spec.source: st.spec.columns
+             for st in opt.dag.nodes.values() if st.is_loader}
+    assert set(scans[po]) == {"cust", "amount"}
+    assert set(scans[pc]) == {"cust", "country", "segment"}
+    # everything fingerprints (cacheable), deterministically per recompile
+    fp1 = fingerprint_dag(opt.dag)
+    assert all(v is not None for v in fp1.values())
+    fp2 = fingerprint_dag(compile_plans(plans, optimize=True).dag)
+    assert fp1 == fp2
+
+
+def test_explain_shows_passes_and_sharing(tmp_path):
+    rng = np.random.default_rng(3)
+    po, pc, _, _ = _star(str(tmp_path), rng, 100, 10, "int", 0.0)
+    text = explain_plans(_marts_plans(po, pc))
+    assert "== logical plan (pre-optimization) ==" in text
+    assert "== optimizer passes ==" in text
+    assert "== optimized plan ==" in text
+    assert "[fuse_filter_join]" in text
+    assert "[prune_projection]" in text
+    assert "[dedup_subplan]" in text
+    assert "[shared]" in text
+    assert "filter_join" in text
+    # single-plan sugar
+    assert "scan" in scan(po).filter(col("amount") > 0).explain()
+
+
+# ---------------------------------------------------------------------------
+# equivalence: optimized == naive == reference, thread AND process
+# ---------------------------------------------------------------------------
+
+_MATRIX = [("int", 0.0, 300, 24), ("int", 0.3, 300, 24),
+           ("utf8", 0.0, 200, 16), ("utf8", 0.25, 200, 16),
+           ("dict", 0.2, 200, 16), ("int", 0.0, 0, 8)]
+
+
+@pytest.mark.parametrize("mode", ["thread", "process"])
+def test_marts_equivalence_matrix(tmp_path, mode):
+    """Key-type mixes, null keys, and empty inputs: optimized output is
+    bit-identical to naive output and to the per-row reference, in both
+    executor modes.  One warm env per mode (process spawn is paid once)."""
+    root = str(tmp_path / mode)
+    os.makedirs(root, exist_ok=True)
+    backing = "file" if mode == "process" else "ram"
+    store = BufferStore(swap_dir=os.path.join(root, "swap"),
+                        backing=backing,
+                        data_dir=os.path.join(root, "store")
+                        if backing == "file" else None)
+    rm = ResourceManager(store, RMConfig(workers=2, workers_mode=mode))
+    ex = make_executor(store, rm, workers=2)
+    try:
+        for i, (kind, null_frac, n_orders, n_cust) in enumerate(_MATRIX):
+            rng = np.random.default_rng(10 + i)
+            po, pc, o_pd, c_pd = _star(root, rng, n_orders, n_cust,
+                                       kind, null_frac, tag=str(i))
+            plans = _marts_plans(po, pc, key_dict=(kind == "dict"))
+            naive = _run_plans(store, ex, plans, optimize=False)
+            opt = _run_plans(store, ex, plans, optimize=True)
+            ref_c, ref_s = _ref_marts(o_pd, c_pd)
+            case = f"{kind}/null={null_frac}/n={n_orders}/{mode}"
+            assert opt == naive, f"optimized != naive [{case}]"
+            assert opt["fct_country"] == ref_c, \
+                f"fct_country != reference [{case}]"
+            assert opt["fct_segment"] == ref_s, \
+                f"fct_segment != reference [{case}]"
+        if mode == "process":
+            assert ex.fallback_inline == 0, \
+                "plan ops fell back to inline (not picklable?)"
+    finally:
+        ex.close()
+        store.close()
+
+
+def test_filter_null_semantics_end_to_end(tmp_path):
+    """Nulls in the filtered column: rows with null amount drop (mask
+    False), matching the reference and the naive plan."""
+    rng = np.random.default_rng(42)
+    n = 200
+    validity = rng.random(n) >= 0.3
+    amounts = rng.integers(-5, 15, n).astype(np.float64)
+    t = Table.from_pydict({
+        "amount": Column.primitive(amounts, pack_validity(validity)),
+        "tag": rng.integers(0, 5, n).astype(np.int64)})
+    po = os.path.join(str(tmp_path), "t.zq")
+    zarquet.write_table(po, t)
+    p = scan(po).filter(col("amount") > 0)
+    outs = {}
+    for optimize in (False, True):
+        store, ex = _thread_env(tmp_path, str(optimize))
+        outs[optimize] = _run_plans(store, ex, {"q": p}, optimize)["q"]
+        store.close()
+    assert outs[False] == outs[True]
+    keep = [i for i in range(n) if validity[i] and amounts[i] > 0]
+    assert outs[True]["amount"] == [amounts[i] for i in keep]
+    assert outs[True]["tag"] == [int(t.to_pydict()["tag"][i])
+                                 for i in keep]
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           kind=st.sampled_from(["int", "utf8", "dict"]),
+           null_frac=st.sampled_from([0.0, 0.2, 0.5]),
+           n_orders=st.sampled_from([0, 1, 37, 150]))
+    def test_property_optimized_equals_naive(tmp_path_factory, seed, kind,
+                                             null_frac, n_orders):
+        tmp = str(tmp_path_factory.mktemp("plan-prop"))
+        rng = np.random.default_rng(seed)
+        n_cust = max(n_orders // 6, 4)
+        po, pc, o_pd, c_pd = _star(tmp, rng, n_orders, n_cust, kind,
+                                   null_frac)
+        plans = _marts_plans(po, pc)
+        store = BufferStore(swap_dir=os.path.join(tmp, "swap"))
+        rm = ResourceManager(store, RMConfig())
+        ex = Executor(store, rm)
+        try:
+            naive = _run_plans(store, ex, plans, optimize=False)
+            opt = _run_plans(store, ex, plans, optimize=True)
+        finally:
+            store.close()
+        ref_c, ref_s = _ref_marts(o_pd, c_pd)
+        assert opt == naive
+        assert opt["fct_country"] == ref_c
+        assert opt["fct_segment"] == ref_s
+
+
+# ---------------------------------------------------------------------------
+# fingerprint pinning + DAG plumbing + loader projection
+# ---------------------------------------------------------------------------
+
+def test_fused_plan_op_fingerprint_pinned():
+    """filter_join_exec folds in the fusion kernels AND the rewrite
+    rules that emit it; dropping any pin changes the op identity (the
+    PR 5 join pinning contract, extended to optimizer rules)."""
+    fn = functools.partial(
+        plan_compiler.filter_join_exec, on=["cust"], how="inner",
+        suffix="_right", left_pred=col("amount") > 0, right_pred=None)
+    fp1 = code_fingerprint(fn)
+    assert fp1 is not None
+    saved = plan_compiler.filter_join_exec.__fp_includes__
+    assert plan_rules.fuse_filter_join in saved
+    assert plan_rules.pushdown_filters in saved
+    assert ops.filter_join in saved
+    try:
+        plan_compiler.filter_join_exec.__fp_includes__ = tuple(
+            d for d in saved if d is not plan_rules.fuse_filter_join)
+        assert code_fingerprint(fn) != fp1, \
+            "dropping the fusion-rule pin did not change the identity"
+    finally:
+        plan_compiler.filter_join_exec.__fp_includes__ = saved
+    assert code_fingerprint(fn) == fp1
+    assert plan_rules.pushdown_filters in \
+        plan_compiler.filter_exec.__fp_includes__
+    assert plan_rules.prune_projections in \
+        plan_compiler.project_exec.__fp_includes__
+
+
+def test_compile_plumbs_deadline_and_tenant(tmp_path):
+    rng = np.random.default_rng(5)
+    po, pc, _, _ = _star(str(tmp_path), rng, 50, 8, "int", 0.0)
+    cp = compile_plans(_marts_plans(po, pc), name="marts",
+                       deadline=123.5, tenant="team-a")
+    assert cp.dag.name == "marts"
+    assert cp.dag.deadline == 123.5
+    assert cp.dag.tenant == "team-a"
+    # defaults: tenant falls back to the DAG name (fair-share key)
+    cp2 = compile_plans(_marts_plans(po, pc), name="marts2")
+    assert cp2.dag.deadline is None
+    assert cp2.dag.tenant == "marts2"
+
+
+def test_zarquet_column_projection(tmp_path):
+    rng = np.random.default_rng(6)
+    n = 100
+    t = Table.from_pydict({
+        "a": rng.integers(0, 9, n).astype(np.int64),
+        "b": rng.random(n),
+        "s": Column.from_strings([f"v{i % 7}" for i in range(n)])})
+    p = os.path.join(str(tmp_path), "t.zq")
+    zarquet.write_table(p, t)
+    sub = zarquet.read_table(p, columns=["s", "a"])
+    # output order follows the footer, not the request
+    assert sub.schema.names() == ["a", "s"]
+    full = zarquet.read_table(p)
+    assert sub.to_pydict() == {"a": full.to_pydict()["a"],
+                               "s": full.to_pydict()["s"]}
+    with pytest.raises(KeyError):
+        zarquet.read_table(p, columns=["a", "nope"])
+    # a pruned loader fingerprints differently from the full load, and
+    # the full load's payload is unchanged (old manifests keep hitting)
+    from repro.core import NodeSpec, node_fingerprint
+    fp_full = node_fingerprint(NodeSpec("n", source=p), [])
+    fp_sub = node_fingerprint(
+        NodeSpec("n", source=p, columns=("a", "s")), [])
+    assert fp_full is not None and fp_sub is not None
+    assert fp_full != fp_sub
+
+
+def test_diff_rerun_recomputes_only_affected_cone(tmp_path):
+    """Differential cache over compiled plans: rewriting the customers
+    source re-executes only its cone (scan_customers, the shared
+    filter_join, both marts); the orders scan adopts from the manifest."""
+    tmp = str(tmp_path)
+    root = os.path.join(tmp, "cache")
+    rng = np.random.default_rng(7)
+    po, pc, _, _ = _star(tmp, rng, 200, 16, "int", 0.0)
+    plans = _marts_plans(po, pc)
+
+    def run():
+        fingerprint.reset_caches()
+        store = BufferStore(backing="file", root=root)
+        rm = ResourceManager(store, RMConfig(cache_root=root))
+        ex = make_executor(store, rm)
+        cp = compile_plans(plans, optimize=True)
+        ex.run([cp.dag])
+        for s in cp.sinks:
+            cp.dag.nodes[cp.sinks[s]].output.release()
+        counts = (ex.node_runs, ex.cache_hits)
+        ex.close()
+        store.close()
+        return counts
+
+    runs_cold, hits_cold = run()
+    assert runs_cold == 5 and hits_cold == 0
+    # rewrite customers ONLY (different country mapping, same schema)
+    rng2 = np.random.default_rng(8)
+    zarquet.write_table(pc, Table.from_pydict({
+        "cust": np.arange(16, dtype=np.int64),
+        "country": Column.from_strings(
+            [f"c{int(v)}" for v in rng2.integers(0, 4, 16)]),
+        "segment": Column.from_strings(
+            [f"s{int(v)}" for v in rng2.integers(0, 3, 16)]),
+        "extra": rng2.random(16)}))
+    runs_diff, hits_diff = run()
+    assert (runs_diff, hits_diff) == (4, 1), \
+        f"expected (4 runs, 1 hit), got ({runs_diff}, {hits_diff})"
