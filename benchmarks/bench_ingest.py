@@ -1,0 +1,212 @@
+"""Streaming ingestion under continuous serving (the sustained-traffic
+headline number).
+
+A ``zarquet.StreamWriter`` commits micro-batches into one growing stream
+table while an ``IncrementalRecompute`` driver refreshes the consumer
+DAG after every ACKed commit and serving threads run aggregate queries
+against the refcounted snapshot THE WHOLE TIME — the continuous version
+of the differential-cache result:
+
+  * cold refresh over the seed groups executes the full DAG;
+  * every subsequent micro-batch re-fingerprints only its own cone —
+    the new group's loader plus the reduce — while all older group
+    cones adopt from the manifest (``CACHED``);
+  * queries never block on ingest: a refresh swaps the served snapshot
+    atomically and readers pinned to the old version finish on it.
+
+Recorded: per-batch nodes executed / cache hits / refresh wall, and the
+p50/p99 latency of the aggregate queries that ran concurrently with the
+ingest traffic.  Gates (asserted in smoke too):
+
+  * the final incrementally-maintained table is BIT-IDENTICAL to a
+    from-scratch recompute of the same stream in a fresh environment;
+  * every micro-batch executes STRICTLY fewer nodes than the cold run
+    (both the seed cold run and the full-table recompute);
+  * serving threads observed no errors and only monotonic versions.
+
+    PYTHONPATH=src python -m benchmarks.run ingest
+
+Full-size results land in BENCH_ingest.json.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core import (BufferStore, IncrementalRecompute, RMConfig,
+                        ResourceManager, StreamWriter, fingerprint,
+                        make_executor)
+
+from .common import Csv, gb, timed
+
+SMOKE = os.environ.get("ZERROW_BENCH_SMOKE") == "1"
+#: 2 x 8B columns per row
+ROWS_PER_BATCH = max(gb(0.05) // 16, 512)
+N_SEED = 4                      # groups committed before the cold refresh
+N_BATCHES = 8 if SMOKE else 24  # sustained micro-batches (full run >= 20)
+
+
+def _mk_batch(i: int):
+    from repro.core.arrow import Table
+    rng = np.random.default_rng(1000 + i)
+    return Table.from_pydict({
+        "k": rng.integers(0, 64, size=ROWS_PER_BATCH).astype(np.int64),
+        "v": rng.normal(0.0, 10.0, size=ROWS_PER_BATCH)})
+
+
+def _env(root):
+    fingerprint.reset_caches()
+    store = BufferStore(backing="file", root=root)
+    rm = ResourceManager(store, RMConfig(cache_root=root))
+    return store, rm, make_executor(store, rm)
+
+
+def _query(drv):
+    """One serving query: pin the snapshot, aggregate v, unpin."""
+    t0 = time.perf_counter()
+    with drv.snapshot() as (t, version):
+        total = 0.0
+        for b in t.batches:              # per-group: no combine copy
+            total += float(b.column("v").to_numpy().sum())
+    return time.perf_counter() - t0, version, total
+
+
+def main() -> None:
+    tmp = tempfile.mkdtemp(
+        prefix="zerrow-bench-ingest-",
+        dir="/dev/shm" if os.access("/dev/shm", os.W_OK) else None)
+    results = {"smoke": SMOKE, "rows_per_batch": ROWS_PER_BATCH,
+               "seed_groups": N_SEED, "micro_batches": N_BATCHES,
+               "runs": []}
+    try:
+        path = os.path.join(tmp, "stream.zq")
+        writer = StreamWriter(path, max_inflight=4)
+        for i in range(N_SEED):
+            writer.ingest(_mk_batch(i))
+        writer.flush()
+
+        store, rm, ex = _env(os.path.join(tmp, "cache"))
+        drv = IncrementalRecompute(path, store=store, rm=rm, executor=ex,
+                                   name="bench-ingest")
+        with timed() as t_cold:
+            s_cold = drv.refresh()
+        assert s_cold.nodes_executed == s_cold.nodes_total, \
+            "cold refresh must execute the full DAG"
+        results["runs"].append({
+            "run": "cold", "groups": s_cold.groups,
+            "nodes_executed": s_cold.nodes_executed, "wall_s": t_cold[1]})
+        Csv.add("ingest_cold_refresh", t_cold[1],
+                f"groups={s_cold.groups};nodes={s_cold.nodes_executed}")
+
+        # -- sustained traffic: ingest + refresh while queries serve ----
+        stop = threading.Event()
+        lats, versions, errors = [], [], []
+
+        def serve():
+            try:
+                while not stop.is_set():
+                    dt, v, _ = _query(drv)
+                    lats.append(dt)
+                    versions.append(v)
+            except BaseException as e:   # surfaced as a gate below
+                errors.append(e)
+
+        threads = [threading.Thread(target=serve) for _ in range(2)]
+        for th in threads:
+            th.start()
+        per_batch = []
+        with timed() as t_sus:
+            for i in range(N_SEED, N_SEED + N_BATCHES):
+                writer.ingest(_mk_batch(i))
+                writer.flush()
+                s = drv.refresh()
+                per_batch.append({
+                    "run": "batch", "version": s.version,
+                    "groups": s.groups, "nodes_total": s.nodes_total,
+                    "nodes_executed": s.nodes_executed,
+                    "cache_hits": s.cache_hits, "refresh_s": s.wall_s})
+        stop.set()
+        for th in threads:
+            th.join()
+        results["runs"].extend(per_batch)
+        assert not errors, f"serving thread failed: {errors[0]!r}"
+        assert len(writer.poll_acks()) == N_SEED + N_BATCHES
+
+        with drv.snapshot() as (t, v):
+            final = t.to_pydict()
+            final_version = v
+        writer.close()
+        drv.close()
+        ex.close()
+        store.close()
+
+        # -- gates ------------------------------------------------------
+        # (b) strictly fewer nodes per micro-batch than ANY cold run
+        max_batch_nodes = max(r["nodes_executed"] for r in per_batch)
+        assert max_batch_nodes < s_cold.nodes_executed, \
+            f"micro-batch recomputed {max_batch_nodes} nodes, cold seed " \
+            f"run was {s_cold.nodes_executed}"
+        # (a) bit-identical to a full recompute in a fresh environment
+        store2, rm2, ex2 = _env(os.path.join(tmp, "cache2"))
+        drv2 = IncrementalRecompute(path, store=store2, rm=rm2,
+                                    executor=ex2, name="bench-recompute")
+        with timed() as t_full:
+            s_full = drv2.refresh()
+        assert s_full.nodes_executed == s_full.nodes_total, \
+            "fresh-env recompute must execute everything"
+        assert max_batch_nodes < s_full.nodes_executed
+        with drv2.snapshot() as (t2, v2):
+            assert v2 == final_version
+            assert t2.to_pydict() == final, \
+                "incrementally maintained table differs from recompute"
+        drv2.close()
+        ex2.close()
+        store2.close()
+
+        p50 = float(np.percentile(lats, 50)) if lats else 0.0
+        p99 = float(np.percentile(lats, 99)) if lats else 0.0
+        assert all(1 <= v <= final_version for v in versions), \
+            "serving thread observed an impossible snapshot version"
+        results.update({
+            "sustained_wall_s": t_sus[1],
+            "batches_per_s": N_BATCHES / max(t_sus[1], 1e-9),
+            "nodes_per_batch": max_batch_nodes,
+            "cold_nodes": s_full.nodes_executed,
+            "full_recompute_s": t_full[1],
+            "queries_served": len(lats),
+            "query_p50_s": p50, "query_p99_s": p99,
+            "final_version": final_version,
+            "final_rows": (N_SEED + N_BATCHES) * ROWS_PER_BATCH})
+        Csv.add("ingest_sustained", t_sus[1],
+                f"batches={N_BATCHES};nodes_per_batch={max_batch_nodes}"
+                f"(cold={s_full.nodes_executed});"
+                f"queries={len(lats)};p50us={p50 * 1e6:.0f};"
+                f"p99us={p99 * 1e6:.0f}")
+        if SMOKE:
+            print(f"# smoke: {N_BATCHES} micro-batches, "
+                  f"{max_batch_nodes} nodes/batch vs "
+                  f"{s_full.nodes_executed} cold, final table "
+                  f"bit-identical, {len(lats)} queries served "
+                  f"concurrently; BENCH_ingest.json left untouched")
+            return
+        out = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_ingest.json")
+        with open(out, "w") as fh:
+            json.dump(results, fh, indent=2)
+        print(f"# wrote {out}: {N_BATCHES} micro-batches sustained, "
+              f"{max_batch_nodes} nodes/batch vs {s_full.nodes_executed} "
+              f"cold, query p50 {p50 * 1e3:.2f}ms / p99 {p99 * 1e3:.2f}ms "
+              f"across {len(lats)} queries")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,9 +18,12 @@ import sys
 #: hits on the relational workload; 'query' asserts the logical
 #: optimizer executes strictly fewer nodes AND loads strictly fewer
 #: bytes than the naive plan, bit-identically, and that a one-source
-#: diff re-run recomputes only the affected fingerprint cone.
+#: diff re-run recomputes only the affected fingerprint cone; 'ingest'
+#: asserts streaming micro-batch refreshes are bit-identical to a full
+#: recompute while executing strictly fewer nodes per batch than a
+#: cold run, with queries served concurrently throughout.
 SMOKE_FIGURES = ("fig2", "fig6", "concurrency", "flight", "diffcache",
-                 "kernels", "join", "query")
+                 "kernels", "join", "query", "ingest")
 
 
 def main() -> None:
@@ -31,7 +34,7 @@ def main() -> None:
         os.environ.setdefault("ZERROW_BENCH_SCALE", "256")
         os.environ["ZERROW_BENCH_SMOKE"] = "1"
     from . import (bench_concurrency, bench_diffcache, bench_flight,
-                   bench_join, bench_kernels, bench_query,
+                   bench_ingest, bench_join, bench_kernels, bench_query,
                    fig2_copy_latency, fig4_copy_avoidance, fig5_decache,
                    fig6_resharing, fig7_depth, fig8_dict_repeats,
                    fig9_dict_norepeats, fig10_eviction, roofline_table)
@@ -51,6 +54,7 @@ def main() -> None:
         "kernels": bench_kernels.main,        # vectorized kernels + scaling
         "join": bench_join.main,              # hash join + group-by engine
         "query": bench_query.main,            # plan frontend + optimizer
+        "ingest": bench_ingest.main,          # streaming ingest + serving
     }
     selected = args or (list(SMOKE_FIGURES) if smoke else list(figures))
     print("name,us_per_call,derived")

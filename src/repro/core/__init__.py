@@ -15,6 +15,12 @@ Data-plane subsystems (paper §4.2):
              gather, dictionary encode, utf8 sort keys, bulk upper)
   decache  — shared deserialization cache
   dag      — DAGs, node lifecycle state machine, sandboxes, share wrapper
+  ingest   — streaming ingest loop: zarquet.StreamWriter micro-batch
+             commits (ACK/at-least-once, bounded in-flight window)
+             driving IncrementalRecompute — per-row-group fingerprinted
+             DAGs whose stable prefix stays CACHED, so each ACKed
+             micro-batch recomputes only its own cone while refcounted
+             snapshots serve queries concurrently
 
 Control-plane subsystems (paper §3.1/§3.3, layered — docs/ARCHITECTURE.md):
   sched.policy     — scheduling priority protocol + registry (SCHEDULES):
@@ -64,7 +70,10 @@ from .dag import (CACHED, DAG, InvalidTransition, NodeSpec, NodeState,
 from .deanon import KernelZero
 from .decache import DeCache
 from .fingerprint import (code_fingerprint, file_fingerprint,
-                          fingerprint_dag, node_fingerprint)
+                          fingerprint_dag, node_fingerprint,
+                          source_fingerprint)
+from .ingest import IncrementalRecompute, RefreshStats
+from .zarquet import StreamWriter
 from .flight import (FlightClient, FlightError, FlightServer,
                      FlightWorkerError, FlightWorkerLost, FlightWorkerPool,
                      WireError, decode_message, encode_message, frame_refs)
@@ -87,7 +96,8 @@ __all__ = [
     "StoreStats", "alloc_aligned", "CACHED", "DAG", "InvalidTransition",
     "NodeSpec", "NodeState", "Sandbox", "VALID_TRANSITIONS",
     "Manifest", "ManifestEntry", "code_fingerprint", "file_fingerprint",
-    "fingerprint_dag", "node_fingerprint",
+    "fingerprint_dag", "node_fingerprint", "source_fingerprint",
+    "IncrementalRecompute", "RefreshStats", "StreamWriter",
     "KernelZero", "DeCache", "Executor", "POLICIES", "RMConfig",
     "ResourceManager", "WORKERS_MODES", "make_executor",
     "AdmissionController", "EvictionPolicy", "SCHEDULES",

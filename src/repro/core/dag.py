@@ -44,6 +44,14 @@ class NodeSpec:
     #                                    # plan optimizer narrows loaders
     #                                    # so unused columns are never
     #                                    # read, decompressed or charged
+    row_groups: Optional[tuple] = None   # row-group subset of a stream
+    #                                    # zarquet source (None = whole
+    #                                    # file) — the incremental-
+    #                                    # recompute driver pins loaders
+    #                                    # to committed groups, whose
+    #                                    # content hashes are immutable,
+    #                                    # so an append invalidates only
+    #                                    # the new tail's consumers
     keep_output: bool = False            # survive DAG completion (sinks
     #                                    # consumed by an external reader)
 
@@ -107,7 +115,9 @@ class NodeState:
             return self.fingerprint
         return (self.spec.source, tuple(sorted(self.spec.dict_columns)),
                 None if self.spec.columns is None
-                else tuple(sorted(self.spec.columns)))
+                else tuple(sorted(self.spec.columns)),
+                None if self.spec.row_groups is None
+                else tuple(self.spec.row_groups))
 
     def transition(self, new_status: str) -> None:
         """Move through the lifecycle, validating against

@@ -49,6 +49,11 @@ FP_VERSION = 1
 #: reset_caches() (benchmarks simulate fresh processes with it)
 _FILE_HASH_CACHE: Dict[tuple, str] = {}
 
+#: per-row-group content hashes of stream zarquet footers, same key
+#: discipline as _FILE_HASH_CACHE (an append changes size/mtime, so the
+#: new footer is re-read exactly once)
+_GROUP_HASH_CACHE: Dict[tuple, List[Optional[str]]] = {}
+
 _ADDR_REPR = re.compile(r" at 0x[0-9a-fA-F]+")
 
 
@@ -87,6 +92,7 @@ def _stable(obj) -> str:
 def reset_caches() -> None:
     """Drop the in-memory hash caches (fresh-process simulation)."""
     _FILE_HASH_CACHE.clear()
+    _GROUP_HASH_CACHE.clear()
 
 
 def file_fingerprint(path: str) -> str:
@@ -103,6 +109,38 @@ def file_fingerprint(path: str) -> str:
     h = d.hexdigest()
     _FILE_HASH_CACHE[key] = h
     return h
+
+
+def source_fingerprint(path: str, row_groups=None) -> str:
+    """Content identity of a loader's source.
+
+    Whole-file loads hash the file bytes (``file_fingerprint``).  A
+    row-group-scoped load of a *stream* zarquet file instead hashes the
+    selected groups' per-group content hashes from the committed footer:
+    committed group extents are immutable, so these identities are
+    stable across appends — an append leaves every existing loader's
+    fingerprint (and its cached output) intact and invalidates only
+    consumers of the new tail.  Selection order matters (the output is
+    one batch per group, in order).  Group-scoped reads of files without
+    per-group hashes (batch files) fall back to whole-file content plus
+    the selection."""
+    if row_groups is None:
+        return file_fingerprint(path)
+    st = os.stat(path)
+    key = (os.path.abspath(path), st.st_size, st.st_mtime_ns)
+    hashes = _GROUP_HASH_CACHE.get(key)
+    if hashes is None:
+        from . import zarquet
+        meta = zarquet.read_footer(path)
+        hashes = [g.get("hash") for g in (meta.get("groups") or ())]
+        _GROUP_HASH_CACHE[key] = hashes
+    sel = []
+    for g in row_groups:
+        if not 0 <= g < len(hashes) or hashes[g] is None:
+            return (f"{file_fingerprint(path)}"
+                    f":rg{','.join(str(i) for i in row_groups)}")
+        sel.append(hashes[g])
+    return "rg:" + hashlib.sha256(";".join(sel).encode()).hexdigest()
 
 
 def code_fingerprint(fn, _seen=None) -> Optional[str]:
@@ -207,10 +245,11 @@ def node_fingerprint(spec, input_fps: List[str],
     if op is None:
         return None
     source_fp = None
+    row_groups = getattr(spec, "row_groups", None)
     if spec.source is not None:
         try:
-            source_fp = file_fingerprint(spec.source)
-        except OSError:
+            source_fp = source_fingerprint(spec.source, row_groups)
+        except (OSError, ValueError, AssertionError):
             return None
     payload_dict = {
         "v": FP_VERSION, "op": op, "source": source_fp,
@@ -222,6 +261,11 @@ def node_fingerprint(spec, input_fps: List[str],
     cols = getattr(spec, "columns", None)
     if cols is not None:
         payload_dict["columns"] = sorted(cols)
+    # likewise row-group subsets (streaming ingest): selection order is
+    # output order, so the key keeps the given order; omitted for
+    # whole-file loads so pre-existing manifests keep hitting
+    if row_groups is not None:
+        payload_dict["row_groups"] = [int(g) for g in row_groups]
     payload = json.dumps(payload_dict, sort_keys=True)
     return hashlib.sha256(payload.encode()).hexdigest()
 

@@ -6,7 +6,8 @@ Unix-domain socket:
 
     {"op": "exec", "label", "mode", "fn": <pickled callable>,
      "inputs": [<SIPC wire frame>, ...]}
-    {"op": "load", "label", "mode", "source", "dict_columns", "columns"}
+    {"op": "load", "label", "mode", "source", "dict_columns", "columns",
+     "row_groups"}
     {"op": "exec_chain", "mode", "steps": [<step>, ...],
      "inputs": [<SIPC wire frame>, ...]}
     {"op": "ping"} / {"op": "shutdown"}
@@ -138,6 +139,7 @@ def _run_step(step, store, kz, Sandbox, zarquet, mode, inputs):
         table = zarquet.read_table(step["source"],
                                    dict_columns=tuple(step["dict_columns"]),
                                    columns=step.get("columns"),
+                                   row_groups=step.get("row_groups"),
                                    on_buffer=sb.register_anon,
                                    reader_threads=step.get("reader_threads"))
         return sb.write_output(table, label=label)
@@ -204,6 +206,7 @@ def _handle(req, store, kz, Sandbox, zarquet) -> Dict[str, Any]:
                     step["source"],
                     dict_columns=tuple(step["dict_columns"]),
                     columns=step.get("columns"),
+                    row_groups=step.get("row_groups"),
                     on_buffer=sb.register_anon,
                     reader_threads=step.get("reader_threads"))
             else:
@@ -236,6 +239,7 @@ def _handle(req, store, kz, Sandbox, zarquet) -> Dict[str, Any]:
                          "source": req["source"],
                          "dict_columns": req["dict_columns"],
                          "columns": req.get("columns"),
+                         "row_groups": req.get("row_groups"),
                          "reader_threads": req.get("reader_threads")},
                         store, kz, Sandbox, zarquet, mode, [])
     else:

@@ -70,10 +70,21 @@ class Scan(LNode):
         self.dict_columns = tuple(dict_columns)
 
     def args_key(self):
-        return f"{self.path!r},cols={self.columns!r}," \
+        # canonicalize the column subset to footer order (via schema()):
+        # a scan's identity is *which* columns it loads, never the order
+        # the user spelled them — read_table assembles in footer order
+        # regardless — so scan(p, ["a","b"]) and scan(p, ["b","a"]) must
+        # be one loader for subplan dedup, the compiler memo and the
+        # cross-run manifest, not two loaders with double loaded bytes
+        cols = None if self.columns is None else tuple(self.schema())
+        return f"{self.path!r},cols={cols!r}," \
                f"dict={tuple(sorted(self.dict_columns))!r}"
 
     def schema(self):
+        """Output column names — deliberately in *footer order* (the
+        order ``zarquet.read_table`` assembles), restricted to
+        ``columns`` when set; the order the user passed to ``scan()`` is
+        irrelevant.  Unknown names raise KeyError."""
         names = getattr(self, "_footer_names", None)
         if names is None:
             names = [cm["name"] for cm in
@@ -130,6 +141,18 @@ class Filter(LNode):
     kind = "filter"
 
     def __init__(self, child: LNode, predicate: Expr):
+        # validate at construction, not at runtime: a predicate over
+        # columns the child does not produce must fail in BOTH modes.
+        # Without this, pushdown_filters would commute such a filter
+        # below the Project that dropped the column and the plan would
+        # "work" under optimize=True while crashing under optimize=False
+        # — the optimizer must never repair an invalid plan
+        have = child.schema()
+        missing = predicate.columns() - set(have)
+        if missing:
+            raise KeyError(
+                f"filter {predicate!r}: no such column(s) "
+                f"{sorted(missing)} in the input schema {have}")
         self.children = (child,)
         self.predicate = predicate
 

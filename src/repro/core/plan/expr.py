@@ -16,7 +16,12 @@ attributes) with three properties the rest of the stack depends on:
   are plain boolean algebra over those masks.  Because each conjunct
   evaluates independently of its siblings, the optimizer may split a
   top-level ``&`` and push the pieces to different join sides without
-  changing the result.
+  changing the result.  Nulls are *tested* with
+  ``col(...).is_null()``/``is_not_null()`` — ``lit(None)`` is rejected
+  at construction because every comparison against it would silently be
+  False.  Arithmetic is IEEE with warnings contained (``np.errstate``):
+  ``x/0 → ±inf``, ``0/0 → NaN``, and NaN fails every comparison, so
+  undefined rows drop out of the mask like null rows do.
 
 Evaluation is vectorized per record batch: primitive and dict-encoded
 numeric columns compare via numpy on the logical values; utf8 equality
@@ -33,7 +38,7 @@ from typing import Optional, Set, Tuple
 import numpy as np
 
 __all__ = ["Expr", "Col", "Lit", "Cmp", "BoolOp", "Not", "Arith",
-           "col", "lit", "eval_predicate", "split_conjuncts",
+           "IsNull", "col", "lit", "eval_predicate", "split_conjuncts",
            "and_all", "EVAL_FP"]
 
 
@@ -74,6 +79,16 @@ class Expr:
 
     def __invert__(self):
         return Not(self)
+
+    # null tests -----------------------------------------------------------
+    def is_null(self) -> "IsNull":
+        """True exactly on null rows — the *only* way to test for nulls
+        (a comparison against a null is always False, and ``lit(None)``
+        is rejected for that reason)."""
+        return IsNull(self)
+
+    def is_not_null(self) -> "IsNull":
+        return IsNull(self, negate=True)
 
     # arithmetic -----------------------------------------------------------
     def __add__(self, other):
@@ -139,7 +154,15 @@ class Lit(Expr):
     def __init__(self, value):
         if isinstance(value, np.generic):    # np.float64(3) reprs unstably
             value = value.item()
-        assert value is None or isinstance(
+        if value is None:
+            # SQL three-valued logic is deliberately not implemented: a
+            # null literal would make every comparison silently False
+            raise TypeError(
+                "lit(None)/literal None has no comparison semantics "
+                "(a null row is never ==, !=, < or > anything); test "
+                "for nulls with col(...).is_null() / "
+                "col(...).is_not_null() instead")
+        assert isinstance(
             value, (bool, int, float, str, bytes)), type(value)
         self.value = value
 
@@ -150,7 +173,7 @@ class Lit(Expr):
         pass
 
     def _value(self, batch):
-        if isinstance(self.value, (str, bytes)) or self.value is None:
+        if isinstance(self.value, (str, bytes)):
             raise TypeError(f"{self!r} is not numeric")
         return self.value, None
 
@@ -213,11 +236,30 @@ class Cmp(Expr):
         if not isinstance(a, Col):
             raise TypeError(f"unsupported utf8 comparison: {self!r}")
         ca = batch.column(a.name)
-        if isinstance(b, Lit):
+        # kinds must match on both sides (same contract as join keys,
+        # ops.hash_keys) — named error instead of a bare assert deep in
+        # the byte-compare path
+        if isinstance(b, Col):
+            cb = batch.column(b.name)
+            if ca._kindof() != "utf8" or cb._kindof() != "utf8":
+                raise TypeError(
+                    f"comparison {self!r}: {a.name!r} vs {b.name!r}: "
+                    f"{ca._kindof()} vs {cb._kindof()} columns (utf8 "
+                    f"compares only against utf8)")
+            eq = _utf8_eq_pair(ca, cb)
+        elif isinstance(b, Lit):
+            if not isinstance(b.value, (str, bytes)):
+                raise TypeError(
+                    f"comparison {self!r}: column {a.name!r} is utf8 but "
+                    f"{b!r} is {type(b.value).__name__} (utf8 compares "
+                    f"only against utf8)")
+            if ca._kindof() != "utf8":
+                raise TypeError(
+                    f"comparison {self!r}: column {a.name!r} is "
+                    f"{ca._kindof()} but {b!r} is utf8 (utf8 compares "
+                    f"only against utf8)")
             needle = b.value.encode() if isinstance(b.value, str) else b.value
             eq = _utf8_eq_scalar(ca, needle)
-        elif isinstance(b, Col):
-            eq = _utf8_eq_pair(ca, batch.column(b.name))
         else:
             raise TypeError(f"unsupported utf8 comparison: {self!r}")
         valid = ca.valid_mask()
@@ -292,6 +334,35 @@ class Not(Expr):
         return ~self.expr.mask(batch)
 
 
+class IsNull(Expr):
+    """Null test — works on every column kind (including utf8, which has
+    no numeric ``_value``) and on computed expressions (null iff any
+    input column is null on that row)."""
+
+    def __init__(self, expr: Expr, negate: bool = False):
+        self.expr = expr
+        self.negate = bool(negate)
+
+    def __repr__(self):
+        return f"{self.expr!r}.is_{'not_' if self.negate else ''}null()"
+
+    def _collect(self, out):
+        self.expr._collect(out)
+
+    def mask(self, batch):
+        if isinstance(self.expr, Col):
+            valid = batch.column(self.expr.name).valid_mask()
+        else:
+            _, valid = self.expr._value(batch)
+            if valid is None:
+                valid = np.ones(batch.num_rows, dtype=bool)
+            else:
+                valid = np.asarray(valid)
+                if valid.ndim == 0:         # literal-only expression
+                    valid = np.full(batch.num_rows, bool(valid))
+        return valid if self.negate else ~valid
+
+
 class Arith(Expr):
     def __init__(self, op: str, left: Expr, right: Expr):
         assert op in ("+", "-", "*", "/"), op
@@ -307,14 +378,22 @@ class Arith(Expr):
     def _value(self, batch):
         av, avalid = self.left._value(batch)
         bv, bvalid = self.right._value(batch)
-        if self.op == "+":
-            v = av + bv
-        elif self.op == "-":
-            v = av - bv
-        elif self.op == "*":
-            v = av * bv
-        else:
-            v = av / bv
+        # IEEE semantics, warnings suppressed (they must not escape
+        # eval_predicate — callers running under `-W error` would crash
+        # on data-dependent values): x/0 -> ±inf, 0/0 -> NaN, float
+        # overflow -> inf.  NaN then fails every comparison, so rows
+        # whose expression is undefined drop out of the mask exactly
+        # like null rows do.  Note `/` is numpy true division: int/int
+        # promotes to float64
+        with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+            if self.op == "+":
+                v = av + bv
+            elif self.op == "-":
+                v = av - bv
+            elif self.op == "*":
+                v = av * bv
+            else:
+                v = av / bv
         if avalid is None:
             valid = bvalid
         elif bvalid is None:
@@ -373,7 +452,7 @@ def and_all(exprs) -> Expr:
 #: every cached filtered/fused-join output (same contract as ops.join
 #: pinning the relational vkernels)
 EVAL_FP = (Cmp.mask, Cmp._utf8_mask, BoolOp.mask, Not.mask, Col.mask,
-           Col._value, Lit._value, Arith._value,
+           Col._value, Lit._value, Arith._value, IsNull.mask,
            _utf8_eq_scalar, _utf8_eq_pair)
 
 eval_predicate.__fp_includes__ = EVAL_FP

@@ -83,6 +83,12 @@ class WorkerPoolExecutor:
         #                       # manifest (marked CACHED, never executed)
         self._lock = threading.RLock()
         self._cond = threading.Condition(self._lock)
+        # run() resets per-run state (_active/_attach/_inflight), so one
+        # instance must never run two batches concurrently; the gate
+        # serializes concurrent submitters (e.g. a streaming-ingest
+        # refresh thread and serving threads sharing one executor)
+        # instead of corrupting each other's run
+        self._run_gate = threading.Lock()
         self._active: Dict[int, DAG] = {}
         self._attach: Dict[int, list] = {}
         self._inflight: Dict[Tuple[int, str], NodeState] = {}
@@ -91,6 +97,10 @@ class WorkerPoolExecutor:
 
     # -- entry point -------------------------------------------------------
     def run(self, dags: List[DAG], deadline_s: float = 3600.0) -> float:
+        with self._run_gate:
+            return self._run_gated(dags, deadline_s)
+
+    def _run_gated(self, dags: List[DAG], deadline_s: float) -> float:
         t0 = time.perf_counter()
         self._t0 = t0
         self._deadline = deadline_s
@@ -395,7 +405,8 @@ class WorkerPoolExecutor:
 
         table = zarquet.read_table(
             st.spec.source, dict_columns=st.spec.dict_columns,
-            columns=st.spec.columns, on_buffer=on_buffer,
+            columns=st.spec.columns, row_groups=st.spec.row_groups,
+            on_buffer=on_buffer,
             reader_threads=getattr(self.rm.cfg, "reader_threads", None))
         with self._lock:
             return sb.write_output(table, label=st.name)
@@ -554,14 +565,17 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
     def socket_bytes(self) -> int:
         return self._pool.socket_bytes if self._pool is not None else 0
 
-    def run(self, dags: List[DAG], deadline_s: float = 3600.0) -> float:
+    def _run_gated(self, dags: List[DAG], deadline_s: float = 3600.0
+                   ) -> float:
+        # under the base class's run gate: chain planning resets
+        # per-run state, so it must not race an in-progress run
         self._ensure_pool()
         self._chain_next = {}
         self._chain_claims = {}
         if self._chain_enabled:
             for d in dags:
                 self._plan_chains(d)
-        return super().run(dags, deadline_s)
+        return super()._run_gated(dags, deadline_s)
 
     def close(self) -> None:
         if self._pool is not None:
@@ -725,6 +739,7 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
                     "source": n.spec.source,
                     "dict_columns": tuple(n.spec.dict_columns),
                     "columns": n.spec.columns,
+                    "row_groups": n.spec.row_groups,
                     "reader_threads": getattr(self.rm.cfg,
                                               "reader_threads", None),
                     "echo": self._chain_echo(n, is_tail)}
@@ -903,6 +918,7 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
             {"op": "load", "label": st.name, "source": st.spec.source,
              "dict_columns": tuple(st.spec.dict_columns),
              "columns": st.spec.columns,
+             "row_groups": st.spec.row_groups,
              "reader_threads": getattr(self.rm.cfg, "reader_threads",
                                        None)})
         return self._adopt_reply(reply, st, sb)

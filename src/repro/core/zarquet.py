@@ -29,11 +29,26 @@ the allocator-provided page-aligned destination buffer (zstd stream
 memoryview) instead of materializing an intermediate full-size ``bytes``
 and memcpy-ing it over.
 
-Layout:  [MAGIC][buffer blob .... ][footer json][footer_len u64][MAGIC]
+Batch layout:  [MAGIC][buffer blob .... ][footer json][footer_len u64][MAGIC]
+
+Stream layout (``StreamWriter``) generalizes this to append-only *row
+groups*: every commit appends the new groups' blobs plus a fresh footer
+describing **all** groups, then atomically advances a sidecar commit
+pointer (``<path>.commit``).  Superseded footers stay behind as dead
+bytes — committed blob extents are immutable, so readers that mapped an
+older version keep working, and a crash mid-append is invisible (the
+pointer still names the previous durable footer; reopening truncates
+the torn tail and the producer re-sends unACKed batches —
+at-least-once).  Stream footers carry ``version`` (monotonic) and
+``groups`` (per-group column metadata + a content hash that
+``core/fingerprint.py`` uses so an append invalidates only consumers of
+the new tail).
 """
 
 from __future__ import annotations
 
+import binascii
+import hashlib
 import io
 import json
 import os
@@ -159,22 +174,28 @@ def _decomp_into(blob: bytes, dest: np.ndarray, codec: str) -> None:
             f"(got {pos}, want {rlen})")
 
 
-def write_table(path: str, table: Table, level: int = 1,
-                codec: str = DEFAULT_CODEC) -> None:
-    if codec == "zstd" and zstandard is None:
-        raise RuntimeError("zstd codec requested but 'zstandard' is not "
-                           "installed")
-    t = table.combine()
-    b = t.batches[0]
+def _encode_group(b, level: int, codec: str, off: int,
+                  with_hash: bool = False):
+    """Compress one RecordBatch into blobs + column metadata starting at
+    file offset ``off``.  ``with_hash`` additionally computes the group's
+    content hash: sha256 over the *uncompressed* stored representation
+    (column names, types, buffer names and raw bytes), so group identity
+    is codec- and placement-independent."""
     blobs: List[bytes] = []
     cols_meta = []
-    off = len(MAGIC)
+    d = hashlib.sha256() if with_hash else None
     for f, c in zip(b.schema.fields, b.columns):
         if c.type.is_dict:
             c = c.decode_dictionary()       # store plain; re-encode at read
         bufs_meta = []
+        if d is not None:
+            d.update(json.dumps([f.name, c.type.to_json(),
+                                 c.length]).encode())
         for bname, arr in c.buffers():
             raw = np.ascontiguousarray(arr)
+            if d is not None:
+                d.update(bname.encode())
+                d.update(raw.view(np.uint8).reshape(-1).data)
             blob = _comp(raw, level, codec)
             bufs_meta.append({"name": bname, "off": off, "clen": len(blob),
                               "rlen": raw.nbytes, "np": str(raw.dtype)})
@@ -184,6 +205,17 @@ def write_table(path: str, table: Table, level: int = 1,
                           "type": (c.type.to_json()),
                           "nrows": c.length,
                           "buffers": bufs_meta})
+    return blobs, cols_meta, (d.hexdigest() if d is not None else None), off
+
+
+def write_table(path: str, table: Table, level: int = 1,
+                codec: str = DEFAULT_CODEC) -> None:
+    if codec == "zstd" and zstandard is None:
+        raise RuntimeError("zstd codec requested but 'zstandard' is not "
+                           "installed")
+    t = table.combine()
+    b = t.batches[0]
+    blobs, cols_meta, _, _ = _encode_group(b, level, codec, len(MAGIC))
     footer = json.dumps({"columns": cols_meta, "nrows": b.num_rows,
                          "codec": codec}).encode()
     with open(path, "wb") as fh:
@@ -195,21 +227,80 @@ def write_table(path: str, table: Table, level: int = 1,
         fh.write(MAGIC)
 
 
+def _commit_path(path: str) -> str:
+    return path + ".commit"
+
+
+def _read_commit_pointer(path: str) -> Optional[dict]:
+    """Parse the sidecar commit pointer; ``None`` when absent/corrupt
+    (fall back to the physical tail — correct for quiescent files)."""
+    try:
+        with open(_commit_path(path), "rb") as fh:
+            ptr = json.loads(fh.read().decode())
+        body = f"{ptr['end']}:{ptr['version']}".encode()
+        if ptr.get("crc") != (binascii.crc32(body) & 0xFFFFFFFF):
+            return None
+        return ptr
+    except (OSError, ValueError, KeyError):
+        return None
+
+
+def _write_commit_pointer(path: str, end: int, version: int,
+                          sync: bool = True) -> None:
+    """Atomically advance the commit pointer (tmp + ``os.replace``):
+    readers see either the previous durable footer or the new one,
+    never a torn tail."""
+    body = f"{end}:{version}".encode()
+    ptr = json.dumps({"end": end, "version": version,
+                      "crc": binascii.crc32(body) & 0xFFFFFFFF}).encode()
+    tmp = _commit_path(path) + ".tmp"
+    with open(tmp, "wb") as fh:
+        fh.write(ptr)
+        fh.flush()
+        if sync:
+            os.fsync(fh.fileno())
+    os.replace(tmp, _commit_path(path))
+
+
+def committed_end(path: str) -> int:
+    """Byte offset just past the last durably committed footer: the
+    commit pointer when a valid sidecar exists (stream files), else the
+    physical file size (batch files / quiescent streams)."""
+    ptr = _read_commit_pointer(path)
+    if ptr is not None:
+        return int(ptr["end"])
+    return os.path.getsize(path)
+
+
 def read_footer(path: str) -> dict:
+    """Read the footer of a batch or stream zarquet file.
+
+    Stream footers (``"groups"`` present) are normalized so batch-era
+    consumers keep working: ``meta["columns"]`` mirrors the schema of the
+    first group (all groups share it) and ``meta["nrows"]`` is the total
+    across groups.  For stream files the *committed* footer is read (the
+    sidecar pointer names it), so an in-progress or torn append is never
+    observed."""
+    end = committed_end(path)
     with open(path, "rb") as fh:
-        fh.seek(-12, os.SEEK_END)
+        fh.seek(end - 12)
         tail = fh.read(12)
         assert tail[-4:] == MAGIC, "not a zarquet file"
         (flen,) = struct.unpack("<Q", tail[:8])
-        fh.seek(-(12 + flen), os.SEEK_END)
-        return json.loads(fh.read(flen).decode())
+        fh.seek(end - 12 - flen)
+        meta = json.loads(fh.read(flen).decode())
+    groups = meta.get("groups")
+    if groups is not None and "columns" not in meta:
+        meta["columns"] = groups[0]["columns"] if groups else []
+    return meta
 
 
 def read_table(path: str, dict_columns: Sequence[str] = (),
                allocator: Callable[[int], np.ndarray] = alloc_aligned,
                on_buffer: Optional[Callable[[np.ndarray], None]] = None,
                reader_threads: Optional[int] = None,
-               columns: Optional[Sequence[str]] = None) -> Table:
+               columns: Optional[Sequence[str]] = None,
+               row_groups: Optional[Sequence[int]] = None) -> Table:
     """Deserialize to Arrow.  ``allocator`` controls where uncompressed
     buffers land (page-aligned by default: the de-anonymization fast path).
     ``on_buffer`` lets the share wrapper register each fresh buffer as
@@ -228,31 +319,55 @@ def read_table(path: str, dict_columns: Sequence[str] = (),
     columns are never read, decompressed or allocated — their bytes stay
     on disk.  Output column order is footer order restricted to the
     selection (order of the ``columns`` sequence itself is irrelevant);
-    unknown names raise ``KeyError``."""
+    unknown names raise ``KeyError``.
+
+    ``row_groups`` restricts a *stream* file read to a subset of its
+    committed row groups (indices into the footer's ``groups`` list, in
+    the given order); unselected groups' bytes stay on disk.  The result
+    is one RecordBatch per selected group — callers that need a single
+    contiguous batch ``combine()``.  Batch files are a single group 0."""
     meta = read_footer(path)
     codec = meta.get("codec", "zstd")   # pre-codec files were always zstd
     dict_set = set(dict_columns)
-    cols_meta = meta["columns"]
-    if columns is not None:
-        want = set(columns)
-        missing = want - {cm["name"] for cm in cols_meta}
-        if missing:
-            raise KeyError(f"zarquet {path}: no such column(s) "
-                           f"{sorted(missing)}")
-        cols_meta = [cm for cm in cols_meta if cm["name"] in want]
-        if not cols_meta:
-            raise KeyError(f"zarquet {path}: empty column selection")
-    # 1) allocate destinations + record blob extents (footer order)
+    groups = meta.get("groups")
+    if groups is None:
+        groups = [{"columns": meta["columns"], "nrows": meta["nrows"]}]
+    if row_groups is not None:
+        bad = [g for g in row_groups if not 0 <= g < len(groups)]
+        if bad:
+            raise IndexError(
+                f"zarquet {path}: no such row group(s) {bad} "
+                f"(file has {len(groups)})")
+        groups = [groups[g] for g in row_groups]
+    if not groups:
+        raise ValueError(f"zarquet {path}: stream has no committed row "
+                         f"groups yet")
+    per_group: List[list] = []          # selected cols_meta per group
+    for gi, grp in enumerate(groups):
+        cols_meta = grp["columns"]
+        if columns is not None:
+            want = set(columns)
+            missing = want - {cm["name"] for cm in cols_meta}
+            if missing:
+                raise KeyError(f"zarquet {path}: no such column(s) "
+                               f"{sorted(missing)}")
+            cols_meta = [cm for cm in cols_meta if cm["name"] in want]
+            if not cols_meta:
+                raise KeyError(f"zarquet {path}: empty column selection")
+        per_group.append(cols_meta)
+    # 1) allocate destinations + record blob extents (group, footer order)
     spans: List[tuple] = []             # (file_off, clen) per buffer
     dests: List[np.ndarray] = []
-    for cm in cols_meta:
-        for bm in cm["buffers"]:
-            spans.append((bm["off"], bm["clen"]))
-            dests.append(allocator(bm["rlen"]))
-    # 2) decompress directly into the destinations, in parallel.  Blobs
-    # are read per job and dropped as soon as they are consumed, so peak
-    # memory is destinations + the in-flight blobs, never + the whole
-    # compressed file
+    for cols_meta in per_group:
+        for cm in cols_meta:
+            for bm in cm["buffers"]:
+                spans.append((bm["off"], bm["clen"]))
+                dests.append(allocator(bm["rlen"]))
+    # 2) decompress directly into the destinations, in parallel — one
+    # pool across every selected group.  Blobs are read per job and
+    # dropped as soon as they are consumed, so peak memory is
+    # destinations + the in-flight blobs, never + the whole compressed
+    # file
     n_threads = reader_threads if reader_threads is not None \
         else _default_readers()
     jobs = [i for i, d in enumerate(dests) if d.nbytes]
@@ -273,30 +388,34 @@ def read_table(path: str, dict_columns: Sequence[str] = (),
         else:
             for i in jobs:
                 _decomp_job(i)
-    # 3) register buffers + assemble columns (calling thread, footer order)
-    fields, cols = [], []
+    # 3) register buffers + assemble columns (calling thread, footer
+    # order within each group; one RecordBatch per group)
+    batches: List[RecordBatch] = []
     it = iter(dests)
-    for cm in cols_meta:
-        bufs: Dict[str, np.ndarray] = {}
-        for bm in cm["buffers"]:
-            out = next(it)
-            if on_buffer is not None:
-                on_buffer(out)
-            bufs[bm["name"]] = out.view(np.dtype(bm["np"]))
-        t = ArrowType.from_json(cm["type"])
-        validity = bufs.get("validity")
-        if t.is_utf8:
-            col = Column.utf8(bufs["offsets"].view(np.int64),
-                              bufs["values"].view(np.uint8), validity)
-            if cm["name"] in dict_set:
-                col = _dict_encode_col(col, allocator, on_buffer)
-        else:
-            col = Column(t, cm["nrows"],
-                         bufs["values"].view(np.dtype(t.np_dtype)),
-                         validity=validity)
-        fields.append(Field(cm["name"], col.type))
-        cols.append(col)
-    return Table.from_batch(Schema(fields), cols)
+    for cols_meta in per_group:
+        fields, cols = [], []
+        for cm in cols_meta:
+            bufs: Dict[str, np.ndarray] = {}
+            for bm in cm["buffers"]:
+                out = next(it)
+                if on_buffer is not None:
+                    on_buffer(out)
+                bufs[bm["name"]] = out.view(np.dtype(bm["np"]))
+            t = ArrowType.from_json(cm["type"])
+            validity = bufs.get("validity")
+            if t.is_utf8:
+                col = Column.utf8(bufs["offsets"].view(np.int64),
+                                  bufs["values"].view(np.uint8), validity)
+                if cm["name"] in dict_set:
+                    col = _dict_encode_col(col, allocator, on_buffer)
+            else:
+                col = Column(t, cm["nrows"],
+                             bufs["values"].view(np.dtype(t.np_dtype)),
+                             validity=validity)
+            fields.append(Field(cm["name"], col.type))
+            cols.append(col)
+        batches.append(RecordBatch(Schema(fields), cols))
+    return Table(batches)
 
 
 def _dict_encode_col(col: Column, allocator, on_buffer) -> Column:
@@ -315,6 +434,181 @@ def _dict_encode_col(col: Column, allocator, on_buffer) -> Column:
             on_buffer(a)
     dic = Column.utf8(offsets, values)
     return Column.dictionary_encoded(codes_buf, dic, validity=col.validity)
+
+
+# --------------------------------------------------------------------------
+# streaming ingest (append-oriented micro-batch writer)
+# --------------------------------------------------------------------------
+
+class StreamWriter:
+    """Append-oriented zarquet writer: micro-batches in, row groups out.
+
+    Lifecycle (the Zerobus ingest shape): open/create the stream →
+    ``ingest()`` micro-batches (buffered; a bounded in-flight window of
+    ``max_inflight`` unACKed batches triggers an automatic commit) →
+    ``flush()`` to force a commit → ``close()``.  A commit appends one
+    row group per pending micro-batch, writes a fresh footer describing
+    all groups with a monotonically increasing ``version``, fsyncs, and
+    only then advances the sidecar commit pointer — the durability
+    point.  Every micro-batch in the commit is then ACKed (sequence
+    numbers via ``poll_acks()`` and/or the ``on_ack`` callback).
+
+    Delivery is at-least-once: a batch whose ACK was observed is durable
+    and will never be lost; a crash before the pointer advanced leaves a
+    torn tail that reopening truncates, and the producer re-sends
+    whatever it never saw ACKed.  Committed group extents are immutable,
+    so concurrent readers of older versions are undisturbed and
+    per-group content hashes stay valid forever.
+    """
+
+    def __init__(self, path: str, level: int = 1,
+                 codec: str = DEFAULT_CODEC, max_inflight: int = 8,
+                 sync: bool = True,
+                 on_ack: Optional[Callable[[List[int], int], None]] = None):
+        if codec == "zstd" and zstandard is None:
+            raise RuntimeError("zstd codec requested but 'zstandard' is "
+                               "not installed")
+        self.path = path
+        self.level = level
+        self.codec = codec
+        self.max_inflight = max(1, int(max_inflight))
+        self.sync = sync
+        self.on_ack = on_ack
+        self._lock = threading.Lock()
+        self._pending: List[tuple] = []         # (seq, combined batch)
+        self._acked: List[int] = []
+        self._next_seq = 0
+        self._names: Optional[List[str]] = None
+        self._groups: List[dict] = []
+        self._nrows = 0
+        if os.path.exists(path) and os.path.getsize(path) > len(MAGIC):
+            self._recover()
+        else:
+            self.version = 0
+            self._fh = open(path, "wb")
+            self._fh.write(MAGIC)
+            self._end = len(MAGIC)
+            self._commit_footer()               # v0: readable when empty
+
+    def _recover(self) -> None:
+        """Reopen an existing stream for append: honor the commit
+        pointer, drop any torn tail past it, resume at the committed
+        version."""
+        meta = read_footer(self.path)
+        if meta.get("groups") is None:
+            raise ValueError(
+                f"zarquet {self.path}: batch file, not a stream "
+                f"(write_table output cannot be appended to)")
+        if meta.get("codec", "zstd") != self.codec:
+            self.codec = meta["codec"]          # stick with the file's codec
+        self.version = meta["version"]
+        self._groups = list(meta["groups"])
+        self._nrows = meta["nrows"]
+        if self._groups:
+            self._names = [cm["name"] for cm in self._groups[0]["columns"]]
+        end = committed_end(self.path)
+        self._fh = open(self.path, "r+b")
+        if os.path.getsize(self.path) > end:
+            self._fh.truncate(end)              # torn (uncommitted) tail
+        self._end = end
+
+    # -- ingest side -------------------------------------------------------
+
+    @property
+    def inflight(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def ingest(self, table: Table) -> int:
+        """Buffer one micro-batch; returns its sequence number.  The
+        batch is *not* durable until a commit ACKs it.  When the
+        in-flight window is full the call commits synchronously
+        (bounded-window backpressure)."""
+        b = table.combine().batches[0]
+        names = [f.name for f in b.schema.fields]
+        with self._lock:
+            if self._names is None:
+                self._names = names
+            elif names != self._names:
+                raise ValueError(
+                    f"stream {self.path}: micro-batch schema {names} does "
+                    f"not match the stream schema {self._names}")
+            seq = self._next_seq
+            self._next_seq += 1
+            self._pending.append((seq, b))
+            full = len(self._pending) >= self.max_inflight
+        if full:
+            self.flush()
+        return seq
+
+    def flush(self) -> int:
+        """Commit all pending micro-batches (one row group each, one
+        footer+pointer write total), fsync, advance the pointer, ACK.
+        Returns the new footer version (unchanged if nothing pending)."""
+        with self._lock:
+            if not self._pending:
+                return self.version
+            pending, self._pending = self._pending, []
+            off = self._end
+            self._fh.seek(off)
+            new_groups = []
+            for _seq, b in pending:
+                blobs, cols_meta, ghash, off = _encode_group(
+                    b, self.level, self.codec, off, with_hash=True)
+                for blob in blobs:
+                    self._fh.write(blob)
+                new_groups.append({"columns": cols_meta,
+                                   "nrows": b.num_rows, "hash": ghash})
+            self._groups.extend(new_groups)
+            self._nrows += sum(g["nrows"] for g in new_groups)
+            self.version += 1
+            self._write_footer_locked(off)
+            for seq, _b in pending:
+                self._acked.append(seq)
+            acked = [seq for seq, _b in pending]
+            version = self.version
+        if self.on_ack is not None:
+            self.on_ack(acked, version)
+        return version
+
+    def _write_footer_locked(self, off: int) -> None:
+        footer = json.dumps({"groups": self._groups, "nrows": self._nrows,
+                             "version": self.version,
+                             "codec": self.codec}).encode()
+        self._fh.write(footer)
+        self._fh.write(struct.pack("<Q", len(footer)))
+        self._fh.write(MAGIC)
+        self._fh.flush()
+        if self.sync:
+            os.fsync(self._fh.fileno())
+        self._end = off + len(footer) + 8 + len(MAGIC)
+        _write_commit_pointer(self.path, self._end, self.version,
+                              sync=self.sync)
+
+    def _commit_footer(self) -> None:
+        with self._lock:
+            self._fh.seek(self._end)
+            self._write_footer_locked(self._end)
+
+    def poll_acks(self) -> List[int]:
+        """Drain and return the sequence numbers ACKed since the last
+        poll (commit order)."""
+        with self._lock:
+            out, self._acked = self._acked, []
+            return out
+
+    def close(self) -> None:
+        """Flush pending batches and release the file handle."""
+        self.flush()
+        with self._lock:
+            if not self._fh.closed:
+                self._fh.close()
+
+    def __enter__(self) -> "StreamWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 # --------------------------------------------------------------------------

@@ -11,6 +11,12 @@ of the pipeline (paper Fig 6 'slice': no new bytes) and handed to
 ``device_put``.  Multiple trainers / epochs / eval jobs reading the same
 shard share one physical copy through the DeCache (paper Fig 5), and
 intermediate memory is governed by the RM's admission + eviction.
+
+Shards may also be *streams* (``zarquet.StreamWriter`` output, see
+``make_text_stream``): each committed row group gets its own
+load→[joinf]→pack DAG pinned with ``row_groups=(g,)``, so a shard that
+grew since the last epoch recomputes only its new micro-batches' cones
+while every old group fingerprint-hits the manifest.
 """
 
 from __future__ import annotations
@@ -79,28 +85,50 @@ def join_filter_fn(tables: List[Table], on: str = "doc",
 join_filter_fn.__fp_includes__ = (ops.filter_join, _keep_mask)
 
 
+def _gen_text_table(rng, base: int, rows: int) -> Table:
+    words = ["the", "quick", "brown", "fox", "jumps", "over", "lazy",
+             "dog", "zero", "copy", "arrow", "pipeline", "kernel",
+             "memory", "shared", "data"]
+    texts = [" ".join(rng.choice(words, size=rng.integers(8, 24)))
+             for _ in range(rows)]
+    return Table.from_pydict({
+        "doc": np.arange(base, base + rows, dtype=np.int64),
+        "text": texts})
+
+
 def make_text_shards(root: str, n_shards: int, rows_per_shard: int,
                      seed: int = 0) -> List[str]:
     """Synthetic corpus shards (zarquet files with 'doc' id + 'text'
     columns; doc ids are globally unique across shards so a metadata
     table written by ``make_doc_meta`` joins against every shard)."""
     rng = np.random.default_rng(seed)
-    words = ["the", "quick", "brown", "fox", "jumps", "over", "lazy",
-             "dog", "zero", "copy", "arrow", "pipeline", "kernel",
-             "memory", "shared", "data"]
     paths = []
     os.makedirs(root, exist_ok=True)
     for s in range(n_shards):
-        texts = [" ".join(rng.choice(words, size=rng.integers(8, 24)))
-                 for _ in range(rows_per_shard)]
-        base = s * rows_per_shard
-        t = Table.from_pydict({
-            "doc": np.arange(base, base + rows_per_shard, dtype=np.int64),
-            "text": texts})
+        t = _gen_text_table(rng, s * rows_per_shard, rows_per_shard)
         p = os.path.join(root, f"shard-{s:04d}.zq")
         zarquet.write_table(p, t)
         paths.append(p)
     return paths
+
+
+def make_text_stream(root: str, n_batches: int, rows_per_batch: int,
+                     seed: int = 0, base_doc: int = 0) -> str:
+    """Synthetic *streaming* corpus shard: the same 'doc'+'text' schema
+    as ``make_text_shards``, but committed as ``n_batches`` row groups
+    through ``zarquet.StreamWriter`` — the shape an ingest frontier
+    produces.  Append more micro-batches later by reopening the path
+    with ``StreamWriter``; the pipeline recomputes only the new groups'
+    cones."""
+    rng = np.random.default_rng(seed)
+    os.makedirs(root, exist_ok=True)
+    p = os.path.join(root, "stream-shard.zq")
+    with zarquet.StreamWriter(p) as w:
+        for b in range(n_batches):
+            w.ingest(_gen_text_table(rng, base_doc + b * rows_per_batch,
+                                     rows_per_batch))
+            w.flush()
+    return p
 
 
 def make_doc_meta(root: str, n_docs: int, keep_frac: float = 0.75,
@@ -179,36 +207,56 @@ class ZerrowDataPipeline:
         return functools.partial(pack_fn, batch=self.cfg.batch,
                                  seq_len=self.cfg.seq_len)
 
+    def _shard_groups(self, path: str) -> Optional[int]:
+        """Committed row-group count of a *stream* shard, None for batch
+        shards (``write_table`` output)."""
+        groups = zarquet.read_footer(path).get("groups")
+        return None if groups is None else len(groups)
+
     def _run_shards(self, paths: List[str]) -> List:
         """One DAG per shard, submitted together: with ``workers > 1`` the
         loader decompressions overlap in the executor's worker pool.
         With ``meta_path`` each DAG grows a metadata loader (one DeCache-
         shared deserialization for all shards) and a join+filter stage
-        between load and pack."""
+        between load and pack.
+
+        A *stream* shard (``StreamWriter`` output) becomes one DAG per
+        committed row group, each loader pinned with ``row_groups=(g,)``:
+        packing is per-micro-batch, and because committed groups'
+        content hashes never change, re-running after an append
+        fingerprint-hits every old group's load→[joinf]→pack cone and
+        recomputes only the new tail (with ``cache_root`` set)."""
         dags = []
         fn = self._pack_fn()
         meta = self.cfg.meta_path
         for path in paths:
-            est = max(os.path.getsize(path) * 8, 1 << 20)
+            n_groups = self._shard_groups(path)
+            size = os.path.getsize(path)
+            est = max(size * 8 // (n_groups or 1), 1 << 20)
             # projection pruning (same loader knob core/plan's optimizer
             # targets): without the metadata join only 'text' is ever
             # read, so the 'doc' id column is never decoded; the join
             # needs the id, so the meta path loads the full shard
             cols = None if meta else ("text",)
-            nodes = [NodeSpec("load", source=path, est_mem=est,
-                              columns=cols)]
-            pack_dep = "load"
-            if meta:
-                nodes.append(NodeSpec(
-                    "meta", source=meta, dict_columns=("lang",),
-                    est_mem=max(os.path.getsize(meta) * 8, 1 << 20)))
-                nodes.append(NodeSpec(
-                    "joinf", fn=join_filter_fn,
-                    deps=["load", "meta"], est_mem=est))
-                pack_dep = "joinf"
-            nodes.append(NodeSpec("pack", fn=fn, deps=[pack_dep],
-                                  est_mem=est // 2, keep_output=True))
-            dags.append(DAG(nodes, name=f"pipe-{os.path.basename(path)}"))
+            units = [None] if n_groups is None else \
+                [(g,) for g in range(n_groups)]
+            for rg in units:
+                nodes = [NodeSpec("load", source=path, est_mem=est,
+                                  columns=cols, row_groups=rg)]
+                pack_dep = "load"
+                if meta:
+                    nodes.append(NodeSpec(
+                        "meta", source=meta, dict_columns=("lang",),
+                        est_mem=max(os.path.getsize(meta) * 8, 1 << 20)))
+                    nodes.append(NodeSpec(
+                        "joinf", fn=join_filter_fn,
+                        deps=["load", "meta"], est_mem=est))
+                    pack_dep = "joinf"
+                nodes.append(NodeSpec("pack", fn=fn, deps=[pack_dep],
+                                      est_mem=est // 2, keep_output=True))
+                tag = "" if rg is None else f"@g{rg[0]}"
+                dags.append(DAG(nodes,
+                                name=f"pipe-{os.path.basename(path)}{tag}"))
         self.ex.run(dags)
         # keep_output=True: the packed messages survive DAG completion;
         # we own their release

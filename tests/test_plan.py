@@ -500,3 +500,176 @@ def test_diff_rerun_recomputes_only_affected_cone(tmp_path):
     runs_diff, hits_diff = run()
     assert (runs_diff, hits_diff) == (4, 1), \
         f"expected (4 runs, 1 hit), got ({runs_diff}, {hits_diff})"
+
+
+# ---------------------------------------------------------------------------
+# plan-layer correctness regressions (streaming-ingest PR)
+# ---------------------------------------------------------------------------
+
+def test_scan_key_ignores_column_spelling_order(tmp_path):
+    """A scan's identity is WHICH columns it loads, never the order the
+    user spelled them (read_table assembles in footer order regardless):
+    reordered spellings must be one loader, not double loaded bytes."""
+    rng = np.random.default_rng(11)
+    po, _, o_pd, _ = _star(str(tmp_path), rng, 80, 8, "int", 0.0)
+    s1 = Scan(po, ("pad", "amount"))
+    s2 = Scan(po, ("amount", "pad"))
+    assert s1.key() == s2.key()
+    # schema() is footer order (cust, amount, pad) restricted to the set
+    assert s1.schema() == s2.schema() == ["amount", "pad"]
+    # a different SUBSET is still a different loader
+    assert Scan(po, ("amount",)).key() != s1.key()
+    plans = {
+        "hi": scan(po, columns=["pad", "amount"]).filter(col("amount") > 3),
+        "lo": scan(po, columns=["amount", "pad"]).filter(col("amount") < 0),
+    }
+    for optimize in (False, True):
+        cp = compile_plans(plans, optimize=optimize)
+        loaders = [n for n in cp.dag.nodes.values() if n.spec.source]
+        # naive lowers per-occurrence (the hand-wired baseline); the
+        # optimizer's key()-memo collapses the reordered spellings to ONE
+        assert len(loaders) == (1 if optimize else 2), \
+            f"reordered scans compiled to {len(loaders)} loaders"
+        store, ex = _thread_env(tmp_path, f"s1-{optimize}")
+        out = _run_plans(store, ex, plans, optimize)
+        store.close()
+        assert out["hi"]["amount"] == \
+            [v for v in o_pd["amount"] if v > 3]
+        assert out["lo"]["amount"] == \
+            [v for v in o_pd["amount"] if v < 0]
+
+
+def test_filter_over_project_fails_in_both_modes(tmp_path):
+    """A predicate over a column the child does not produce is an
+    invalid plan.  It must fail identically whether or not the optimizer
+    runs — pushdown must never 'repair' it by commuting the filter below
+    the Project that dropped the column.  The check fires at plan build
+    (before either mode is even chosen)."""
+    rng = np.random.default_rng(12)
+    po, _, o_pd, _ = _star(str(tmp_path), rng, 60, 8, "int", 0.0)
+    base = scan(po).select("amount")
+    with pytest.raises(KeyError, match=r"no such column\(s\) \['pad'\]"):
+        base.filter(col("pad") > lit(1.0))
+    # the same shape over a produced column runs in both modes
+    good = base.filter(col("amount") > lit(1.0))
+    outs = {}
+    for optimize in (False, True):
+        store, ex = _thread_env(tmp_path, f"s2-{optimize}")
+        outs[optimize] = _run_plans(store, ex, {"q": good}, optimize)["q"]
+        store.close()
+    assert outs[False] == outs[True]
+    assert outs[True]["amount"] == [v for v in o_pd["amount"] if v > 1.0]
+
+
+def test_utf8_numeric_comparison_raises_named_typeerror():
+    """Kind-mismatched comparisons die with a TypeError naming both
+    sides and their kinds (the ops.hash_keys contract), never a bare
+    AssertionError from the byte-compare internals."""
+    b = Table.from_pydict({
+        "s": Column.from_strings(["x", "y", "z"]),
+        "a": np.arange(3, dtype=np.int64)}).combine().batches[0]
+    with pytest.raises(TypeError, match=r"'s' vs 'a': utf8 vs prim"):
+        eval_predicate(b, col("s") == col("a"))
+    with pytest.raises(TypeError, match=r"column 's' is utf8 but lit\(3\)"):
+        eval_predicate(b, col("s") == lit(3))
+    with pytest.raises(TypeError,
+                       match=r"column 'a' is prim but lit\('x'\)"):
+        eval_predicate(b, col("a") == lit("x"))
+    # matched kinds still work
+    assert eval_predicate(b, col("s") == lit("y")).tolist() == \
+        [False, True, False]
+
+
+def test_div_by_zero_semantics_and_null_tests(tmp_path):
+    """Expression eval is warning-clean under -W error: x/0 follows
+    IEEE (±inf, 0/0 = NaN) and NaN fails every comparison.  lit(None)
+    is rejected with a pointer to the null tests, and
+    is_null()/is_not_null() work end-to-end on prim AND utf8 columns."""
+    import warnings
+    b = Table.from_pydict({
+        "a": np.array([-2.0, 0.0, 3.0]),
+        "d": np.zeros(3)}).combine().batches[0]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        m = eval_predicate(b, (col("a") / col("d")) > lit(1.0))
+    # -2/0 -> -inf (False), 0/0 -> NaN (False), 3/0 -> +inf (True)
+    assert m.tolist() == [False, False, True]
+    with pytest.raises(TypeError, match="is_null"):
+        lit(None)
+    with pytest.raises(TypeError, match="is_null"):
+        col("a") == None                        # noqa: E711 - the trap
+    assert repr(col("a").is_null()) == "col('a').is_null()"
+    assert repr(col("a").is_not_null()) == "col('a').is_not_null()"
+    rng = np.random.default_rng(13)
+    n = 60
+    av = rng.random(n) >= 0.3
+    sv = rng.random(n) >= 0.4
+    t = Table.from_pydict({
+        "a": Column.primitive(rng.integers(0, 9, n).astype(np.float64),
+                              pack_validity(av)),
+        "s": Column.from_strings([f"v{i % 5}" for i in range(n)],
+                                 validity=pack_validity(sv))})
+    po = os.path.join(str(tmp_path), "nulls.zq")
+    zarquet.write_table(po, t)
+    t_pd = t.to_pydict()
+    cases = [(col("a").is_null(), [i for i in range(n) if not av[i]]),
+             (col("s").is_not_null(), [i for i in range(n) if sv[i]])]
+    for ci, (pred, keep) in enumerate(cases):
+        outs = {}
+        for optimize in (False, True):
+            store, ex = _thread_env(tmp_path, f"s4-{ci}-{optimize}")
+            outs[optimize] = _run_plans(
+                store, ex, {"q": scan(po).filter(pred)}, optimize)["q"]
+            store.close()
+        assert outs[False] == outs[True]
+        assert outs[True]["s"] == [t_pd["s"][i] for i in keep]
+        assert outs[True]["a"] == [t_pd["a"][i] for i in keep]
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           kind=st.sampled_from(["int", "utf8"]),
+           perm=st.permutations(["cust", "amount", "pad"]),
+           pred_i=st.integers(0, 3))
+    def test_property_plan_fixes_optimized_equals_naive(
+            tmp_path_factory, seed, kind, perm, pred_i):
+        """optimized == naive == per-row reference on plans mixing the
+        regression surfaces: reordered scan columns, filter over a
+        project, utf8/numeric predicates, div-by-zero and null tests."""
+        tmp = str(tmp_path_factory.mktemp("plan-fix-prop"))
+        rng = np.random.default_rng(seed)
+        po, _, o_pd, _ = _star(tmp, rng, 90, 8, kind, 0.1)
+        preds = [
+            col("amount") > lit(0),
+            (col("amount") / lit(0)) > lit(1),      # +inf/NaN/-inf path
+            col("cust").is_not_null(),
+            (col("cust") == lit("k03")) if kind == "utf8"
+            else (col("cust") > lit(2)),
+        ]
+        plan = (scan(po, columns=list(perm))
+                .select("cust", "amount").filter(preds[pred_i]))
+        store = BufferStore(swap_dir=os.path.join(tmp, "swap"))
+        rm = ResourceManager(store, RMConfig())
+        ex = Executor(store, rm)
+        try:
+            naive = _run_plans(store, ex, {"q": plan}, optimize=False)["q"]
+            opt = _run_plans(store, ex, {"q": plan}, optimize=True)["q"]
+        finally:
+            store.close()
+        assert opt == naive
+
+        def keep(i):
+            amt, cust = o_pd["amount"][i], o_pd["cust"][i]
+            if pred_i in (0, 1):
+                # amount is never null; amt/0 > 1 iff +inf iff amt > 0
+                return amt > 0
+            if pred_i == 2:
+                return cust is not None
+            if kind == "utf8":
+                return cust == "k03"
+            return cust is not None and cust > 2
+
+        rows = [i for i in range(len(o_pd["amount"])) if keep(i)]
+        assert opt["cust"] == [o_pd["cust"][i] for i in rows]
+        assert opt["amount"] == [o_pd["amount"][i] for i in rows]
