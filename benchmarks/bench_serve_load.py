@@ -1,0 +1,234 @@
+"""Multi-tenant serving under overload and injected faults (the
+robustness headline number).
+
+Two arms over the same skewed, bursty request mix:
+
+  * **overload** (thread mode) — hundreds of concurrent request streams
+    against a deliberately small memory budget, a bounded admission
+    queue, per-tenant budgets and enforced deadlines.  The runtime must
+    *degrade by policy*: excess load is shed with typed outcomes
+    (``shed:overloaded`` / ``shed:tenant_budget`` / ``shed:deadline``),
+    hopeless deadlines miss cleanly, and everything that completes is
+    verified correct — never OOM-churn, never a wedged queue.
+  * **faults** (process mode) — the same mix while the fault plane
+    periodically SIGKILLs workers mid-request and injects stragglers
+    (``ZERROW_FAULTS=worker_kill=...,worker_slow=...``, inherited by
+    the spawned pool).  Retries + pool healing must absorb the crashes:
+    zero wrong results, bounded p99 inflation, pool alive at the end.
+
+Every request's op is *self-checking* (it validates a checksum of its
+loaded shard before computing), so a completed outcome IS a verified
+result — any torn or misrouted data plane surfaces as a failed outcome,
+and both arms gate on zero of those.
+
+Recorded per arm: p50/p99 completed latency, shed counts by reason,
+deadline-miss rate, eviction/spill/storm counters, reshare hit-rate and
+copied bytes per completed request.
+
+    PYTHONPATH=src python -m benchmarks.run serve_load
+
+Full-size results land in BENCH_serve_load.json.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from repro.core import DAG, NodeSpec, ops, zarquet
+
+from .common import Csv, make_env, timed, write_source
+
+SMOKE = os.environ.get("ZERROW_BENCH_SMOKE") == "1"
+N_STREAMS = 12 if SMOKE else 200       # concurrent request streams
+N_SHARDS = 3 if SMOKE else 8
+N_BURSTS = 3 if SMOKE else 8           # arrivals are bursty, not uniform
+BURST_GAP_S = 0.03 if SMOKE else 0.25  # inter-burst spacing: near service
+#                                      # capacity, so bursts overload the
+#                                      # queue but the steady state drains
+COL_BYTES = 1 << 14 if SMOKE else 1 << 17
+EST = 1 << 19 if SMOKE else 1 << 21    # per-load admission estimate
+TIGHT_DEADLINE_S = 0.08                # every 7th request races this
+# periodic SIGKILL every 47th op per worker plus a 10ms straggler delay
+# every 7th: enough kills to exercise retry + pool healing several times
+# over the run, few enough to stay inside the pool's bounded respawn
+# budget (workers*8) so the arm proves absorption, not exhaustion
+FAULTS = "worker_kill=kill@/47,worker_slow=delay:0.01@/7"
+
+
+def check_and_add(tables, expect=0):
+    """Self-checking request op: refuse to produce output from a shard
+    whose content does not hash to what the client expected."""
+    got = int(tables[0].combine().batches[0].column("i0").to_numpy().sum())
+    if got != expect:
+        raise ValueError(f"WRONG RESULT: shard checksum {got} != {expect}")
+    return ops.add_columns_compute(tables[0], "i0", "i1", "n0")
+
+
+def _shards(tmpdir):
+    paths, checks = [], []
+    for s in range(N_SHARDS):
+        t = zarquet.gen_int_table(4, COL_BYTES, seed=100 + s)
+        paths.append(write_source(tmpdir, f"shard{s}.zq", t))
+        checks.append(int(
+            t.combine().batches[0].column("i0").to_numpy().sum()))
+    return paths, checks
+
+
+def _request_dag(i, paths, checks):
+    """Deterministic skewed mix: tenant 'hot' sends 70% of traffic (and
+    one hot request in ten is oversized past its budget), every 7th
+    request carries a tight deadline, the rest are generous."""
+    s = i % N_SHARDS
+    hot = (i % 10) < 7
+    tenant = "hot" if hot else f"cold{i % 3}"
+    est = EST
+    if i % 10 == 5:                    # hot (5 < 7) and oversized:
+        est = 64 << 20                 # can never fit tenant 'hot''s budget
+    deadline = time.monotonic() + (
+        TIGHT_DEADLINE_S if i % 7 == 3 else 60.0)
+    return DAG([
+        NodeSpec("load", source=paths[s], est_mem=est),
+        NodeSpec("op", fn=functools.partial(check_and_add,
+                                            expect=checks[s]),
+                 deps=["load"], est_mem=est // 2),
+    ], name=f"req{i}", tenant=tenant, deadline=deadline)
+
+
+def _run_arm(label, *, workers_mode, workers, faults=None):
+    if faults:
+        # stays set for the whole arm: the flight pool spawns lazily on
+        # the first submit, and workers inherit the env at spawn time
+        os.environ["ZERROW_FAULTS"] = faults
+    env = make_env(workers=workers, workers_mode=workers_mode,
+                   memory_limit=48 << 20,
+                   policy="rollback", schedule="fair",
+                   admission=True,
+                   max_queue_depth=4 if SMOKE else 24,
+                   enforce_deadlines=True,
+                   tenant_budgets={"hot": 24 << 20},
+                   max_node_retries=3, retry_backoff_s=0.02)
+    try:
+        paths, checks = _shards(env.tmpdir)
+        stats0 = env.store.stats.snapshot()
+        tickets = [None] * N_STREAMS
+        per_burst = max(N_STREAMS // N_BURSTS, 1)
+
+        def client(i):
+            time.sleep(BURST_GAP_S * (i // per_burst))  # bursty arrivals
+            tickets[i] = env.ex.submit(_request_dag(i, paths, checks))
+            tickets[i].wait(timeout=300)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(N_STREAMS)]
+        with timed() as t_arm:
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+        env.ex.drain(timeout=60)
+
+        outcomes = [t.outcome for t in tickets]
+        lats = [t.latency for t in tickets if t.outcome == "completed"]
+        s = dict(env.rm.serve_stats)
+        stats1 = env.store.stats.snapshot()
+        if workers_mode == "process":
+            wstats = dict(getattr(env.ex, "worker_stats", {}))
+            for k in ("bytes_copied", "reshare_hits", "reshare_misses"):
+                stats1[k] += wstats.get(k, 0)
+
+        # -- gates: typed outcomes, balanced ledger, zero wrong results --
+        assert None not in outcomes, "a ticket never resolved"
+        assert all(o == "completed" or o.startswith("shed:")
+                   or o in ("deadline_miss", "poisoned")
+                   for o in outcomes), \
+            f"untyped/failed outcome in {label}: {set(outcomes)}"
+        assert not any("WRONG RESULT" in repr(t.dag.error)
+                       for t in tickets if t.dag.error is not None), \
+            "a completed request served corrupt data"
+        assert s["offered"] == s["admitted"] + s["shed"], s
+        assert s["admitted"] == (s["completed"] + s["deadline_misses"]
+                                 + s["poisoned"] + s["failed"]), s
+        assert env.rm.admission.reserved == 0
+        assert lats, f"{label}: nothing completed"
+        if workers_mode == "process":
+            assert env.ex._pool.live_workers >= 1, "pool died"
+
+        hits = stats1["reshare_hits"] - stats0["reshare_hits"]
+        misses = stats1["reshare_misses"] - stats0["reshare_misses"]
+        copied = stats1["bytes_copied"] - stats0["bytes_copied"]
+        p50 = float(np.percentile(lats, 50))
+        p99 = float(np.percentile(lats, 99))
+        res = {
+            "arm": label, "streams": N_STREAMS, "wall_s": t_arm[1],
+            "completed": s["completed"], "shed": s["shed"],
+            "shed_overloaded": s["shed_overloaded"],
+            "shed_tenant_budget": s["shed_tenant_budget"],
+            "shed_deadline": s["shed_deadline"],
+            "shed_quarantined": s["shed_quarantined"],
+            "deadline_misses": s["deadline_misses"],
+            "deadline_miss_rate": s["deadline_misses"] / max(
+                s["admitted"], 1),
+            "poisoned": s["poisoned"], "failed": s["failed"],
+            "p50_s": p50, "p99_s": p99,
+            "evictions": dict(env.rm.evictions),
+            "reshare_hit_rate": hits / max(hits + misses, 1),
+            "copied_bytes_per_completed": copied // max(s["completed"], 1),
+        }
+        if workers_mode == "process":
+            res["worker_retries"] = env.ex.worker_retries
+            res["pool_respawns"] = env.ex._pool.respawns
+            res["live_workers"] = env.ex._pool.live_workers
+        Csv.add(f"serve_load_{label}", p99,
+                f"completed={s['completed']}/{N_STREAMS};"
+                f"shed={s['shed']};misses={s['deadline_misses']};"
+                f"p50us={p50 * 1e6:.0f};p99us={p99 * 1e6:.0f}")
+        return res
+    finally:
+        env.close()
+        os.environ.pop("ZERROW_FAULTS", None)
+
+
+def main() -> None:
+    base = _run_arm("overload", workers_mode="thread",
+                    workers=2 if SMOKE else 4)
+    fault = _run_arm("faults", workers_mode="process", workers=2,
+                     faults=FAULTS)
+
+    # graceful degradation: injected crashes/stragglers inflate the tail
+    # boundedly — they must not starve completion or poison anything
+    assert fault["completed"] >= 1 and fault["failed"] == 0
+    assert fault["poisoned"] == 0, \
+        "periodic (non-repeating) faults must never quarantine an op"
+    if not SMOKE:   # full size pushes every worker past the kill period
+        assert fault["worker_retries"] >= 1, \
+            "injected worker kills never exercised the retry path"
+    assert fault["p99_s"] <= max(50 * base["p99_s"], 10.0), \
+        f"fault-arm p99 {fault['p99_s']:.2f}s is unbounded vs " \
+        f"{base['p99_s']:.2f}s"
+
+    results = {"smoke": SMOKE, "streams": N_STREAMS, "shards": N_SHARDS,
+               "faults": FAULTS, "arms": [base, fault]}
+    if SMOKE:
+        print(f"# smoke: {base['completed']}+{fault['completed']} "
+              f"completed, {base['shed']}+{fault['shed']} shed, "
+              f"{fault['worker_retries']} retries absorbed, zero wrong "
+              f"results; BENCH_serve_load.json left untouched")
+        return
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_serve_load.json")
+    with open(out, "w") as fh:
+        json.dump(results, fh, indent=2)
+    print(f"# wrote {out}: overload p99 {base['p99_s'] * 1e3:.1f}ms "
+          f"({base['shed']} shed, {base['deadline_misses']} misses), "
+          f"fault-arm p99 {fault['p99_s'] * 1e3:.1f}ms with "
+          f"{fault['worker_retries']} worker retries, zero wrong results")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,9 +21,12 @@ import sys
 #: diff re-run recomputes only the affected fingerprint cone; 'ingest'
 #: asserts streaming micro-batch refreshes are bit-identical to a full
 #: recompute while executing strictly fewer nodes per batch than a
-#: cold run, with queries served concurrently throughout.
+#: cold run, with queries served concurrently throughout; 'serve_load'
+#: asserts the overload/fault story — typed shed outcomes, a balanced
+#: admission ledger, bounded fault-arm p99, and zero wrong results
+#: while workers are being killed mid-request.
 SMOKE_FIGURES = ("fig2", "fig6", "concurrency", "flight", "diffcache",
-                 "kernels", "join", "query", "ingest")
+                 "kernels", "join", "query", "ingest", "serve_load")
 
 
 def main() -> None:
@@ -35,9 +38,10 @@ def main() -> None:
         os.environ["ZERROW_BENCH_SMOKE"] = "1"
     from . import (bench_concurrency, bench_diffcache, bench_flight,
                    bench_ingest, bench_join, bench_kernels, bench_query,
-                   fig2_copy_latency, fig4_copy_avoidance, fig5_decache,
-                   fig6_resharing, fig7_depth, fig8_dict_repeats,
-                   fig9_dict_norepeats, fig10_eviction, roofline_table)
+                   bench_serve_load, fig2_copy_latency,
+                   fig4_copy_avoidance, fig5_decache, fig6_resharing,
+                   fig7_depth, fig8_dict_repeats, fig9_dict_norepeats,
+                   fig10_eviction, roofline_table)
     figures = {
         "fig2": fig2_copy_latency.main,       # copy-avoidance latency
         "fig4": fig4_copy_avoidance.main,     # KernelZero vs memory limit
@@ -55,6 +59,7 @@ def main() -> None:
         "join": bench_join.main,              # hash join + group-by engine
         "query": bench_query.main,            # plan frontend + optimizer
         "ingest": bench_ingest.main,          # streaming ingest + serving
+        "serve_load": bench_serve_load.main,  # overload + fault resilience
     }
     selected = args or (list(SMOKE_FIGURES) if smoke else list(figures))
     print("name,us_per_call,derived")

@@ -58,7 +58,9 @@ Register a new policy by subclassing ``EvictionPolicy`` (decorate with
 and selecting it by name in ``RMConfig``.
 """
 
-from . import vkernels
+from . import faultplane, vkernels
+from .faultplane import (FaultInjected, FaultPlane, StragglerDetector,
+                         PLANE)
 from .arrow import (ArrowType, Column, Field, RecordBatch, Schema, Table,
                     BOOL, FLOAT32, FLOAT64, INT8, INT16, INT32, INT64,
                     UINT8, UINT64, UTF8, dict_of, pack_validity,
@@ -81,9 +83,10 @@ from .manifest import Manifest, ManifestEntry
 from .rm import (Executor, POLICIES, RMConfig, ResourceManager,
                  WORKERS_MODES, make_executor)
 from .sched import (AdmissionController, EvictionPolicy,
-                    ProcessWorkerExecutor, SCHEDULES, SchedulePolicy,
-                    WorkerPoolExecutor, get_eviction, get_schedule,
-                    register_eviction, register_schedule)
+                    NodePoisonedError, ProcessWorkerExecutor, SCHEDULES,
+                    SchedulePolicy, Ticket, WorkerPoolExecutor,
+                    get_eviction, get_schedule, register_eviction,
+                    register_schedule)
 from .sipc import (AddressMap, BufRef, SipcMessage, SipcReader, SipcWriter)
 from . import plan
 
@@ -101,9 +104,11 @@ __all__ = [
     "KernelZero", "DeCache", "Executor", "POLICIES", "RMConfig",
     "ResourceManager", "WORKERS_MODES", "make_executor",
     "AdmissionController", "EvictionPolicy", "SCHEDULES",
-    "SchedulePolicy", "ProcessWorkerExecutor", "WorkerPoolExecutor",
-    "get_eviction", "get_schedule",
+    "SchedulePolicy", "NodePoisonedError", "ProcessWorkerExecutor",
+    "Ticket", "WorkerPoolExecutor", "get_eviction", "get_schedule",
     "register_eviction", "register_schedule",
+    "FaultInjected", "FaultPlane", "PLANE", "StragglerDetector",
+    "faultplane",
     "AddressMap", "BufRef", "SipcMessage", "SipcReader", "SipcWriter",
     "FlightClient", "FlightError", "FlightServer", "FlightWorkerError",
     "FlightWorkerLost", "FlightWorkerPool", "WireError", "decode_message",

@@ -145,8 +145,18 @@ class DAG:
             DAG._next_id += 1
             self.id = DAG._next_id
         self.name = name or f"dag{self.id}"
-        self.deadline = deadline        # for the deadline-aware policy
+        self.deadline = deadline        # for the deadline-aware policy;
+        #                               # enforced against time.monotonic()
+        #                               # when RMConfig.enforce_deadlines
         self.tenant = tenant or self.name   # fair-share grouping key
+        # serving-plane outcome channel (core/sched/executor.py):
+        # cancelled stops further claims (in-flight nodes drain); outcome
+        # is a typed terminal string — "completed", "shed:<reason>",
+        # "deadline_miss", "poisoned", "failed:<exc>" — or None while the
+        # DAG is still live; error carries the poisoning/failing exception
+        self.cancelled = False
+        self.outcome: Optional[str] = None
+        self.error: Optional[BaseException] = None
         self.nodes: Dict[str, NodeState] = {s.name: NodeState(s, self)
                                             for s in nodes}
         self.children: Dict[str, List[str]] = {n: [] for n in self.nodes}
@@ -175,6 +185,8 @@ class DAG:
         return out
 
     def runnable(self) -> List[NodeState]:
+        if self.cancelled:
+            return []               # cooperative cancel: no new claims
         out = []
         for st in self.nodes.values():
             if st.status in (WAITING, EVICTED):
@@ -185,6 +197,10 @@ class DAG:
         return out
 
     def all_done(self) -> bool:
+        if self.cancelled:
+            # a cancelled DAG is finished once its in-flight nodes drain
+            return not any(st.status == RUNNING
+                           for st in self.nodes.values())
         return all(st.status in COMPLETE for st in self.nodes.values())
 
 

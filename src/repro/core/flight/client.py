@@ -13,9 +13,13 @@ import pickle
 import socket
 from typing import List, Optional
 
+from .. import faultplane
 from ..buffers import BufferStore
 from ..sipc import SipcMessage
 from .wire import decode_message, encode_message, recv_frame, send_frame
+
+faultplane.register_hook("client_call", "flight client: fail/stall a "
+                         "ticket-exchange call before it hits the wire")
 
 
 class FlightError(RuntimeError):
@@ -28,14 +32,23 @@ class FlightClient:
         self.store = store or BufferStore(backing="file")
         if self.store.backing != "file":
             raise ValueError("FlightClient requires a file-backed store")
+        self.timeout = timeout
         self.sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
         self.sock.settimeout(timeout)
         self.sock.connect(sock_path)
         self.wire_bytes = 0
 
     def _call(self, req: dict) -> dict:
-        self.wire_bytes += send_frame(self.sock, pickle.dumps(req))
-        raw = recv_frame(self.sock)
+        faultplane.fire("client_call")
+        try:
+            self.wire_bytes += send_frame(self.sock, pickle.dumps(req))
+            raw = recv_frame(self.sock)
+        except socket.timeout:
+            # a half-finished exchange leaves the stream unframed; the
+            # typed error lets callers retire this client cleanly
+            raise FlightError(
+                f"flight client timed out after {self.timeout}s during "
+                f"{req.get('op')!r}") from None
         self.wire_bytes += len(raw) + 8
         reply = pickle.loads(raw)
         if not reply.get("ok"):

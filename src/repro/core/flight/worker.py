@@ -56,14 +56,27 @@ import shutil
 import socket
 import tempfile
 import threading
+import time
 import traceback
 import uuid
 from typing import Any, Dict, List, Optional, Tuple
 
+from .. import faultplane
 from .wire import (WireError, decode_message, encode_message, frame_refs,
                    recv_frame, send_frame)
 
 _SPAWN = mp.get_context("spawn")      # never fork: jax/threads unsafe
+
+# Worker-side fault points (fired in the worker process, armed through the
+# inherited environment — ZERROW_FAULTS crosses the spawn boundary):
+faultplane.register_hook("worker_kill", "flight worker: die (kill) or "
+                         "raise before handling a request")
+faultplane.register_hook("worker_slow", "flight worker: delay before "
+                         "handling a request (straggler simulation)")
+faultplane.register_hook("worker_stall", "flight worker: stall before "
+                         "sending the reply (parent timeout path)")
+faultplane.register_hook("worker_chain_kill", "flight worker: die between "
+                         "exec_chain steps (mid-chain crash)")
 
 
 # --------------------------------------------------------------------------
@@ -108,11 +121,19 @@ def worker_main(sock_path: str, data_dir: str) -> None:
             if op == "ping":
                 send_frame(sock, pickle.dumps({"ok": True, "pid": os.getpid()}))
                 continue
+            real_op = op in ("exec", "load", "exec_chain")
+            if real_op:
+                # injected mid-request faults (never on warm/control ops,
+                # so pool startup stays deterministic under injection)
+                faultplane.fire("worker_slow")
+                faultplane.fire("worker_kill")
             try:
                 reply = _handle(req, store, kz, Sandbox, zarquet)
             except BaseException as e:  # noqa: BLE001 — report, don't die
                 reply = {"ok": False, "error": repr(e),
                          "traceback": traceback.format_exc()}
+            if real_op:
+                faultplane.fire("worker_stall")
             send_frame(sock, pickle.dumps(reply))
             if op == "exec_chain" and reply.get("ok"):
                 _forget_chain(store, [e["msg"] for e in reply["chain"]])
@@ -201,6 +222,7 @@ def _handle(req, store, kz, Sandbox, zarquet) -> Dict[str, Any]:
         vals = [reader.read_table(m) for m in inputs]
         chain, msgs = [], []
         for i, step in enumerate(req["steps"]):
+            faultplane.fire("worker_chain_kill")
             if step["kind"] == "load":
                 table = zarquet.read_table(
                     step["source"],
@@ -295,12 +317,13 @@ class FlightWorkerLost(FlightWorkerError):
 class _Future:
     """Reply slot for one in-flight request (threading.Event based)."""
 
-    __slots__ = ("_ev", "_result", "_exc")
+    __slots__ = ("_ev", "_result", "_exc", "t0")
 
     def __init__(self):
         self._ev = threading.Event()
         self._result = None
         self._exc: Optional[BaseException] = None
+        self.t0 = 0.0      # submit instant, for service-time health EWMA
 
     def set_result(self, r) -> None:
         self._result = r
@@ -341,6 +364,7 @@ class WorkerHandle:
         self._plock = threading.Lock()       # guards _pending
         self._pending: "collections.deque[_Future]" = collections.deque()
         self._on_reply = None    # pool wake-up callback
+        self._health = None      # pool's StragglerDetector (keyed by pid)
         self._recv_thread: Optional[threading.Thread] = None
 
     def start(self) -> None:
@@ -360,6 +384,7 @@ class WorkerHandle:
         """Send one request frame; returns the future its reply fills."""
         payload = pickle.dumps(obj)
         fut = _Future()
+        fut.t0 = time.monotonic()
         with self._send_lock:
             if self.broken:
                 raise FlightWorkerLost(
@@ -417,6 +442,12 @@ class WorkerHandle:
                     f"worker pid={getattr(self.proc, 'pid', '?')} sent an "
                     "unsolicited frame"))
                 return
+            health = self._health
+            if health is not None and fut.t0:
+                # service time (queue + compute) into the shared
+                # straggler detector, keyed by worker pid
+                health.update(getattr(self.proc, "pid", 0),
+                              time.monotonic() - fut.t0)
             try:
                 fut.set_result(pickle.loads(raw))
             except Exception as e:   # noqa: BLE001 — undecodable reply
@@ -495,46 +526,81 @@ class FlightWorkerPool:
         self._handles: List[WorkerHandle] = []
         self._cv = threading.Condition()
         self._closed = False
+        self._connect_timeout = connect_timeout
+        # crash-recovery respawn accounting (``ensure_workers``): bounded
+        # so a fault that kills every replacement cannot fork-bomb
+        self._spawn_lock = threading.Lock()
+        self._next_worker = 0
+        self.respawns = 0
+        self.max_respawns = workers * 8
+        # shared per-worker service-time EWMA + straggler flagging — the
+        # same detector runtime/fault.py's FleetMonitor uses for
+        # training-fleet heartbeats (see core/faultplane.py)
+        self.health = faultplane.StragglerDetector()
 
-        listener = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-        listener.bind(self._sock_path)
-        listener.listen(workers)
-        listener.settimeout(connect_timeout)
+        # the listener stays open for the pool's lifetime: crash recovery
+        # respawns workers through it long after startup
+        self._listener = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        self._listener.bind(self._sock_path)
+        self._listener.listen(workers)
+        self._listener.settimeout(connect_timeout)
+        new = self._spawn_batch(workers, fatal=True)
+        self._warm(new)
+
+    def _spawn_batch(self, n: int, fatal: bool = False
+                     ) -> List[WorkerHandle]:
+        """Spawn ``n`` workers and pair their hello-pid connections.
+        ``fatal`` (initial startup): an incomplete batch terminates the
+        spawned procs and raises; otherwise (crash-recovery respawn) the
+        stragglers are terminated and the paired survivors returned."""
         procs = []
+        for _ in range(n):
+            i = self._next_worker
+            self._next_worker += 1
+            p = _SPAWN.Process(
+                target=worker_main,
+                args=(self._sock_path,
+                      os.path.join(self.data_root, f"w{i}")),
+                name=f"zerrow-flight-{i}", daemon=True)
+            p.start()
+            procs.append(p)
+        by_pid = {p.pid: p for p in procs}
+        new: List[WorkerHandle] = []
         try:
-            for i in range(workers):
-                p = _SPAWN.Process(
-                    target=worker_main,
-                    args=(self._sock_path,
-                          os.path.join(self.data_root, f"w{i}")),
-                    name=f"zerrow-flight-{i}", daemon=True)
-                p.start()
-                procs.append(p)
-            by_pid = {p.pid: p for p in procs}
-            for _ in procs:
-                conn, _ = listener.accept()
-                conn.settimeout(connect_timeout)
+            while by_pid:
+                conn, _ = self._listener.accept()
+                conn.settimeout(self._connect_timeout)
                 hello = pickle.loads(recv_frame(conn))
                 conn.settimeout(None)
-                h = WorkerHandle(by_pid.pop(hello["hello"]), conn)
+                p = by_pid.pop(hello.get("hello"), None)
+                if p is None:
+                    conn.close()      # not from this batch: drop it
+                    continue
+                h = WorkerHandle(p, conn)
                 h._on_reply = self._wake
-                self._handles.append(h)
-        except socket.timeout:
-            for p in procs:
+                h._health = self.health
+                new.append(h)
+        except (socket.timeout, ConnectionError, WireError, OSError):
+            for p in by_pid.values():
                 p.terminate()
-            raise FlightWorkerError(
-                f"worker pool: only {len(self._handles)}/{workers} workers "
-                "connected before timeout")
-        finally:
-            listener.close()
-        for h in self._handles:
+            if fatal:
+                for h in new:
+                    h.retire()
+                raise FlightWorkerError(
+                    f"worker pool: only {len(new)}/{n} workers "
+                    "connected before timeout")
+        self._handles.extend(new)
+        for h in new:
             h.start()
-        # cold-start amortization: eat each worker's one-time first-
-        # request costs here, off the request path, across all workers
-        # at once (best-effort: a worker that dies warming up is simply
-        # retired, like any other failure)
+        return new
+
+    def _warm(self, handles: List[WorkerHandle]) -> None:
+        """Cold-start amortization: eat each worker's one-time first-
+        request costs off the request path, across all workers at once
+        (best-effort: a worker that dies warming up is simply retired,
+        like any other failure)."""
         warm = []
-        for h in self._handles:
+        for h in handles:
             try:
                 warm.append((h, h.submit({"op": "warm",
                                           "mode": self.sipc_mode})))
@@ -542,9 +608,38 @@ class FlightWorkerPool:
                 pass
         for h, fut in warm:
             try:
-                h.complete(fut, {"op": "warm"}, timeout=connect_timeout)
+                h.complete(fut, {"op": "warm"},
+                           timeout=self._connect_timeout)
             except FlightWorkerError:
                 pass
+
+    def ensure_workers(self) -> int:
+        """Crash recovery: re-grow the pool back to its configured size.
+        Called by the executor's retry path when the pool has thinned.
+        Bounded by ``max_respawns`` total replacement workers — a
+        poisoned op that kills every replacement must exhaust its node
+        retries, not the host's process table.  Returns the live count."""
+        with self._spawn_lock:
+            if self._closed:
+                return self.live_workers
+            missing = self.workers - self.live_workers
+            if missing <= 0:
+                return self.live_workers
+            allowed = min(missing, self.max_respawns - self.respawns)
+            if allowed <= 0:
+                return self.live_workers
+            new = self._spawn_batch(allowed)
+            self.respawns += len(new)
+            self._warm(new)
+        self._wake()                  # submit waiters can route again
+        return self.live_workers
+
+    def stragglers(self) -> Tuple[List[int], float]:
+        """(straggler pids, median service EWMA) over live workers —
+        same flagging rule as runtime.fault.FleetMonitor."""
+        alive = {getattr(h.proc, "pid", 0)
+                 for h in self._handles if not h.broken}
+        return self.health.flag(alive)
 
     def _wake(self) -> None:
         with self._cv:
@@ -625,6 +720,10 @@ class FlightWorkerPool:
         if self._closed:
             return
         self._closed = True
+        try:
+            self._listener.close()
+        except OSError:
+            pass
         for h in self._handles:
             if not h.broken:      # retired handles have dead/closed sockets
                 try:

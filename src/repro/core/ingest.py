@@ -37,12 +37,17 @@ from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Callable, List, Optional
 
-from . import ops, zarquet
+from . import faultplane, ops, zarquet
 from .arrow import Table
 from .dag import DAG, NodeSpec
 from .sipc import SipcReader
 
 UserFn = Callable[[List[Table]], Table]
+
+faultplane.register_hook("refresh_pre_swap", "ingest: fail a refresh "
+                         "after the DAG ran but before the served "
+                         "snapshot swaps (readers must keep the old "
+                         "version)")
 
 
 @dataclass
@@ -114,7 +119,9 @@ class IncrementalRecompute:
                  reduce_fn: Optional[UserFn] = None,
                  dict_columns: tuple = (),
                  columns: Optional[tuple] = None,
-                 name: Optional[str] = None):
+                 name: Optional[str] = None,
+                 tenant: str = "default",
+                 deadline_s: Optional[float] = None):
         if rm.manifest is None:
             raise ValueError(
                 "IncrementalRecompute needs cross-run fingerprint caching "
@@ -130,6 +137,11 @@ class IncrementalRecompute:
         self.dict_columns = tuple(dict_columns)
         self.columns = None if columns is None else tuple(columns)
         self._name = name or f"ingest-{os.path.basename(path)}"
+        # admission identity of refresh DAGs: the per-tenant memory
+        # budget and (when enforcement is on) the per-refresh deadline
+        # apply to recompute work like to any other submitted DAG
+        self.tenant = tenant
+        self.deadline_s = deadline_s
         self._lock = threading.Lock()
         self._snap: Optional[_Snapshot] = None
         self.last = RefreshStats(0, 0, 0, 0, 0, 0.0)
@@ -173,10 +185,32 @@ class IncrementalRecompute:
         nodes.append(NodeSpec("reduce", fn=self.reduce_fn,
                               deps=reduce_deps, est_mem=est * k,
                               keep_output=True))
-        dag = DAG(nodes, name=f"{self._name}-v{version}")
+        deadline = None if self.deadline_s is None \
+            else time.monotonic() + self.deadline_s
+        dag = DAG(nodes, name=f"{self._name}-v{version}",
+                  tenant=self.tenant, deadline=deadline)
         runs0, hits0 = self.ex.node_runs, self.ex.cache_hits
         wall = self.ex.run([dag])
-        new = _Snapshot(dag.nodes["reduce"].output, version, self.store)
+        out = dag.nodes["reduce"].output
+        if dag.cancelled or out is None:
+            # shed / deadline-missed / poisoned refresh: the served
+            # snapshot is untouched — readers keep the previous version
+            raise RuntimeError(
+                f"{self._name}: refresh v{version} did not complete "
+                f"(outcome={dag.outcome!r})")
+        try:
+            injected = faultplane.fire("refresh_pre_swap")
+        except BaseException:
+            _release_msg(out, self.store)
+            raise
+        if injected in ("torn", "corrupt"):
+            # kill/raise execute inside fire(); delay/stall just slow the
+            # swap down — only the write-mangling actions abort it here
+            _release_msg(out, self.store)
+            raise RuntimeError(
+                f"{self._name}: refresh v{version} aborted pre-swap "
+                "(injected)")
+        new = _Snapshot(out, version, self.store)
         with self._lock:
             old, self._snap = self._snap, new
         if old is not None:

@@ -31,10 +31,12 @@ and drops entries whose object files are missing or short — so a reopened
 manifest contains exactly the journaled complete outputs, each remappable
 with zero bytes copied via ``decode_message``/``adopt_file``.
 
-Fault injection: setting ``ZERROW_CRASH=<point>:<n>`` in the environment
-SIGKILLs the process the n-th time the named publish fault point is
-reached (``CRASH_POINTS``).  ``torn_journal`` writes half a record before
-dying — the torn-tail case recovery must survive.
+Fault injection goes through ``core.faultplane``: the legacy
+``ZERROW_CRASH=<point>:<n>`` env spelling still SIGKILLs the process the
+n-th time the named publish fault point is reached (``CRASH_POINTS``),
+and the same points also accept any ``ZERROW_FAULTS`` / programmatic
+action.  ``torn_journal`` writes half a record before dying — the
+torn-tail case recovery must survive.
 """
 
 from __future__ import annotations
@@ -44,13 +46,14 @@ import hashlib
 import json
 import os
 import shutil
-import signal
 import struct
 import threading
 import zlib
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Dict, Optional
+
+from . import faultplane
 
 REC_MAGIC = b"ZMF1"
 _REC_HEAD = struct.Struct("<4sII")      # magic, payload_len, crc32(payload)
@@ -59,26 +62,23 @@ _REC_HEAD = struct.Struct("<4sII")      # magic, payload_len, crc32(payload)
 CRASH_POINTS = ("pre_link", "post_link", "pre_journal", "torn_journal",
                 "pre_fsync", "post_fsync")
 
-_crash_hits: Dict[str, int] = {}
-
-
-def _crash_armed(point: str) -> bool:
-    """True when ZERROW_CRASH=point:n names this point and this is the
-    n-th time it is reached (the occurrence that must die)."""
-    spec = os.environ.get("ZERROW_CRASH")
-    if not spec:
-        return False
-    want, _, n = spec.partition(":")
-    if want != point:
-        return False
-    _crash_hits[point] = _crash_hits.get(point, 0) + 1
-    return _crash_hits[point] >= int(n or 1)
+faultplane.register_hook("pre_link", "manifest publish: object hashed, "
+                         "before the hard link into objects/")
+faultplane.register_hook("post_link", "manifest publish: object linked, "
+                         "before its fsync")
+faultplane.register_hook("pre_journal", "manifest publish: objects durable, "
+                         "before the journal append")
+faultplane.register_hook("torn_journal", "manifest publish: half the "
+                         "journal record written, then SIGKILL")
+faultplane.register_hook("pre_fsync", "manifest publish: record appended, "
+                         "before the journal fsync")
+faultplane.register_hook("post_fsync", "manifest publish: journal fsync'd "
+                         "(entry committed), before the in-memory update")
 
 
 def _maybe_crash(point: str) -> None:
-    """SIGKILL ourselves at an injected fault point (ZERROW_CRASH=point:n)."""
-    if _crash_armed(point):
-        os.kill(os.getpid(), signal.SIGKILL)
+    """Report a publish fault point (kill/raise/delay per installed spec)."""
+    faultplane.fire(point)
 
 
 def _fsync_fd_of(path: str) -> None:
@@ -129,8 +129,15 @@ class Manifest:
         self.entries: Dict[str, ManifestEntry] = {}
         self.dropped_torn = 0        # torn tail records discarded
         self.dropped_incomplete = 0  # journaled but objects missing/short
+        self.dropped_corrupt = 0     # content hash mismatch (verify mode)
         self.published = 0
         self.object_copies = 0       # cross-device publishes (copied, not linked)
+        # verify-on-adopt: when on, _objects_intact re-hashes every
+        # objects/-relative ref against its content-addressed name, so
+        # at-rest corruption (bit rot, a torn copy) is detected instead
+        # of served.  Off by default — hashing costs a full read; the
+        # size check alone already catches truncation.
+        self.verify_objects = bool(os.environ.get("ZERROW_VERIFY_OBJECTS"))
         self._lock = threading.Lock()
         flags = os.O_WRONLY | os.O_CREAT | os.O_APPEND
         self._log_fd = os.open(self.log_path, flags, 0o644)
@@ -191,6 +198,13 @@ class Manifest:
                     return False
             except OSError:
                 return False
+            if self.verify_objects and not os.path.isabs(path):
+                # content-addressed: the object's basename IS its hash
+                # (hash_file caches by (path, size, mtime_ns), so the
+                # re-read cost is paid once per changed file)
+                if hash_file(p) != os.path.basename(path):
+                    self.dropped_corrupt += 1
+                    return False
         return True
 
     def resolve(self, path: str) -> str:
@@ -250,12 +264,12 @@ class Manifest:
                 return e                # racing thread journaled it first
             _maybe_crash("pre_journal")
             with _flocked(self._log_fd):
-                if _crash_armed("torn_journal"):
+                if faultplane.fire("torn_journal") == "torn":
                     # write half the record, then die: recovery must
                     # discard this torn tail (flock dies with us)
                     os.write(self._log_fd,
                              record[:max(len(record) // 2, 1)])
-                    os.kill(os.getpid(), signal.SIGKILL)
+                    faultplane.kill()
                 # one append: the commit point
                 os.write(self._log_fd, record)
                 _maybe_crash("pre_fsync")

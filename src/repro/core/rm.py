@@ -26,7 +26,7 @@ default ``workers=1`` reproduces the seed's sequential semantics exactly.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import FrozenSet, List, Optional, Tuple
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
 
 from .buffers import BufferStore, OOMError
 from .dag import NodeState
@@ -84,6 +84,35 @@ class RMConfig:
     #                              # DAG segments as one exec_chain
     #                              # request (intermediates stay worker-
     #                              # local); False = per-node dispatch
+    # -- overload & fault model (multi-tenant serving) ---------------------
+    tenant_budgets: Optional[Dict[str, int]] = None   # per-tenant memory
+    #                              # reservation ceilings (bytes); a DAG
+    #                              # whose largest node cannot ever fit its
+    #                              # tenant's budget is shed at offer time,
+    #                              # and admission refuses claims that
+    #                              # would push a tenant past its ceiling
+    max_queue_depth: Optional[int] = None   # bounded admission queue: at
+    #                              # most this many DAGs queued+active per
+    #                              # executor; excess offers are shed with
+    #                              # outcome "shed:overloaded" (None = no
+    #                              # bound: batch mode, never sheds)
+    overload_threshold: float = 1.0   # shed deadline-hopeless DAGs when
+    #                              # (queue depth fraction) x (reservation
+    #                              # pressure) reaches this
+    enforce_deadlines: bool = False   # interpret DAG.deadline against
+    #                              # time.monotonic() and cancel DAGs past
+    #                              # it (False: deadline is an ordering
+    #                              # hint only — the seed semantics)
+    max_node_retries: int = 3      # process mode: transport-failure
+    #                              # (FlightWorkerLost) retries per request
+    #                              # before the op is quarantined as
+    #                              # poisoned and fails its DAG
+    retry_backoff_s: float = 0.05  # base of the capped exponential backoff
+    #                              # between those retries
+    verify_objects: bool = False   # manifest verify-on-adopt: re-hash
+    #                              # objects against their content address
+    #                              # before serving them (catches at-rest
+    #                              # corruption at full-read cost)
 
 
 def make_executor(store: BufferStore, rm: "ResourceManager",
@@ -118,9 +147,22 @@ class ResourceManager:
             self.manifest = store.manifest
         self.decache = DeCache(store, enabled=config.decache,
                                manifest=self.manifest)
+        if self.manifest is not None and config.verify_objects:
+            self.manifest.verify_objects = True
         self.evictions = {"uncache": 0, "rollback": 0, "limitdrop": 0,
-                          "spill": 0}
+                          "spill": 0, "storm_breaks": 0}
         self.cache_stats = {"hits": 0, "published": 0, "adopted_bytes": 0}
+        # serving-plane outcome counters (admission layer writes them);
+        # the invariant the bench gates on: offered == admitted + shed,
+        # and admitted == completed + deadline_misses + poisoned + failed
+        self.serve_stats = {"offered": 0, "admitted": 0, "shed": 0,
+                            "shed_overloaded": 0, "shed_deadline": 0,
+                            "shed_tenant_budget": 0, "shed_quarantined": 0,
+                            "deadline_misses": 0, "poisoned": 0,
+                            "failed": 0, "completed": 0}
+        #: poison keys (code fingerprints) of ops that repeatedly killed
+        #: their worker — DAGs containing one are shed at offer time
+        self.quarantined: Set[str] = set()
         self.completed_nodes: List[NodeState] = []   # eviction candidates
         self.schedule = get_schedule(config.schedule)
         self.admission = AdmissionController(self)
@@ -140,6 +182,23 @@ class ResourceManager:
                       extra_protect: FrozenSet[Tuple[int, str]] = frozenset(),
                       ) -> None:
         self.admission.make_room_for(node, extra_protect)
+
+    # -- poison quarantine (process-mode permanent failures) ---------------
+    @staticmethod
+    def poison_key(fn) -> Optional[str]:
+        """Stable identity for a user op across DAG instances, so a
+        quarantine entered by one request also sheds the next request
+        carrying the same op.  Loader nodes (fn=None) are never
+        quarantined — worker death while loading is environmental, not
+        the op's fault."""
+        if fn is None:
+            return None
+        from .fingerprint import code_fingerprint
+        fp = code_fingerprint(fn)
+        if fp is not None:
+            return fp
+        return f"{getattr(fn, '__module__', '?')}:" \
+               f"{getattr(fn, '__qualname__', repr(fn))}"
 
     # -- memory-freeing sequence (delegated to the eviction layer) ---------
     MAX_EVICTIONS_PER_ALLOC = EvictionPolicy.MAX_EVICTIONS_PER_ALLOC

@@ -11,7 +11,8 @@ from .admission import AdmissionController
 from .eviction import (AdaptiveEviction, EvictionPolicy, KswapEviction,
                        LimitDropEviction, NoEviction, POLICIES,
                        RollbackEviction, get_eviction, register_eviction)
-from .executor import ProcessWorkerExecutor, WorkerPoolExecutor
+from .executor import (NodePoisonedError, ProcessWorkerExecutor, Ticket,
+                       WorkerPoolExecutor)
 from .policy import (BreadthFirst, DeadlineAware, DepthFirst, FairShare,
                      SCHEDULES, SchedulePolicy, get_schedule,
                      register_schedule)
@@ -21,7 +22,8 @@ __all__ = [
     "AdaptiveEviction", "EvictionPolicy", "KswapEviction",
     "LimitDropEviction", "NoEviction", "POLICIES", "RollbackEviction",
     "get_eviction", "register_eviction",
-    "ProcessWorkerExecutor", "WorkerPoolExecutor",
+    "NodePoisonedError", "ProcessWorkerExecutor", "Ticket",
+    "WorkerPoolExecutor",
     "BreadthFirst", "DeadlineAware", "DepthFirst", "FairShare",
     "SCHEDULES", "SchedulePolicy", "get_schedule", "register_schedule",
 ]

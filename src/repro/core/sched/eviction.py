@@ -75,7 +75,14 @@ class EvictionPolicy:
             return freed
         n_evicted = 0
         for st in self.victims(protect, extra_protect):
-            if freed >= need or n_evicted >= self.MAX_EVICTIONS_PER_ALLOC:
+            if freed >= need:
+                break
+            if n_evicted >= self.MAX_EVICTIONS_PER_ALLOC:
+                # storm bound tripped: the node runs over budget rather
+                # than the RM rolling back half the fleet's progress.
+                # Counted so the overload bench can prove the eviction
+                # loop degraded (bounded) instead of livelocking.
+                rm.evictions["storm_breaks"] += 1
                 break
             got = self.evict(st)
             freed += got

@@ -54,6 +54,60 @@ from .. import zarquet
 _WAIT = object()
 
 
+class NodePoisonedError(RuntimeError):
+    """A node op killed its worker ``max_node_retries`` times in a row.
+
+    The op is treated as permanently poisonous: its code fingerprint is
+    quarantined on the RM (subsequent DAGs carrying it are shed with
+    ``"shed:quarantined"``) and *its own DAG* fails with outcome
+    ``"poisoned"`` — the pool is healed and every other DAG keeps
+    running.  ``fns`` carries the candidate culprit callables (the whole
+    segment for a chain dispatch, where the killer step is unknowable —
+    the worker died before saying which)."""
+
+    def __init__(self, msg: str):
+        super().__init__(msg)
+        self.fns: list = []
+
+
+class Ticket:
+    """Serving-plane handle for one submitted DAG (``Executor.submit``).
+
+    Resolves when the DAG reaches a terminal outcome — "completed",
+    "shed:<reason>" (never ran), "deadline_miss", "poisoned", or
+    "failed:<exc>".  ``wait`` never raises: overload is data, not an
+    exception, in a serving loop."""
+
+    def __init__(self, dag: DAG):
+        self.dag = dag
+        self.submitted_at = time.monotonic()
+        self.finished_at: Optional[float] = None
+        self._ev = threading.Event()
+
+    def _resolve(self) -> None:
+        self.finished_at = time.monotonic()
+        self._ev.set()
+
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> Optional[str]:
+        """Block until terminal; returns the outcome (None on timeout)."""
+        self._ev.wait(timeout)
+        return self.dag.outcome if self._ev.is_set() else None
+
+    @property
+    def outcome(self) -> Optional[str]:
+        return self.dag.outcome
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Submit-to-terminal seconds (sheds resolve in microseconds)."""
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+
 class WorkerPoolExecutor:
     """Pull-based executor: workers repeatedly (schedule -> execute ->
     complete) until every submitted DAG is done.
@@ -94,11 +148,98 @@ class WorkerPoolExecutor:
         self._inflight: Dict[Tuple[int, str], NodeState] = {}
         self._loading: Set[tuple] = set()
         self._error: Optional[BaseException] = None
+        # serving-plane submission (submit/Ticket): offered DAGs queue
+        # here and a lazily started dispatcher thread runs them in waves
+        # through the normal run gate
+        self._submit_cv = threading.Condition(threading.Lock())
+        self._pending_tickets: List[Ticket] = []
+        self._dispatcher: Optional[threading.Thread] = None
+        self._shutdown = False
 
     # -- entry point -------------------------------------------------------
     def run(self, dags: List[DAG], deadline_s: float = 3600.0) -> float:
         with self._run_gate:
             return self._run_gated(dags, deadline_s)
+
+    # -- serving-plane submission ------------------------------------------
+    def submit(self, dag: DAG, now: Optional[float] = None) -> Ticket:
+        """Offer one DAG to the bounded admission queue.  Returns a
+        :class:`Ticket` immediately: shed DAGs resolve on the spot with a
+        typed ``"shed:<reason>"`` outcome (no exception, no execution);
+        admitted DAGs run in dispatcher waves and resolve when terminal.
+        Safe to call concurrently from many request threads."""
+        ticket = Ticket(dag)
+        if self.rm.admission.offer(dag, now) is not None:
+            ticket._resolve()
+            return ticket
+        with self._submit_cv:
+            self._pending_tickets.append(ticket)
+            if self._dispatcher is None:
+                self._dispatcher = threading.Thread(
+                    target=self._dispatch_loop, name="zerrow-dispatch",
+                    daemon=True)
+                self._dispatcher.start()
+            self._submit_cv.notify_all()
+        return ticket
+
+    def _dispatch_loop(self) -> None:
+        """Run admitted DAGs in waves: everything queued when the run
+        gate frees executes as one batch (sharing loads/cache hits), so
+        burst arrivals amortize while the queue bound caps the wave."""
+        while True:
+            with self._submit_cv:
+                while not self._pending_tickets and not self._shutdown:
+                    self._submit_cv.wait(timeout=0.1)
+                if not self._pending_tickets and self._shutdown:
+                    return
+                wave, self._pending_tickets = self._pending_tickets, []
+            adm = self.rm.admission
+            enforcing = getattr(self.rm.cfg, "enforce_deadlines", False)
+            now, live = time.monotonic(), []
+            for t in wave:
+                d = t.dag
+                if enforcing and d.deadline is not None \
+                        and now >= d.deadline and not d.cancelled:
+                    # expired while queued: already admitted, so this is
+                    # a miss (not a shed) — cancel without running
+                    d.outcome = "deadline_miss"
+                    d.cancelled = True
+                    adm.count("deadline_misses")
+                    adm.finished(d)
+                    t._resolve()
+                    continue
+                live.append(t)
+            if not live:
+                continue
+            try:
+                self.run([t.dag for t in live])
+            except BaseException as e:
+                # a run-level failure (scheduler error, pool loss past
+                # recovery) fails the DAGs that did not finish; the
+                # serving loop keeps accepting
+                for t in live:
+                    d = t.dag
+                    if d.outcome is None:
+                        d.outcome = f"failed:{type(e).__name__}"
+                        d.error = e
+                        d.cancelled = True
+                        adm.finished(d)
+            for t in live:
+                t._resolve()
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted DAG has resolved and stop the
+        dispatcher (the executor remains usable; a later ``submit``
+        restarts it)."""
+        with self._submit_cv:
+            self._shutdown = True
+            self._submit_cv.notify_all()
+            d = self._dispatcher
+        if d is not None:
+            d.join(timeout)
+        with self._submit_cv:
+            self._dispatcher = None
+            self._shutdown = False
 
     def _run_gated(self, dags: List[DAG], deadline_s: float) -> float:
         t0 = time.perf_counter()
@@ -135,8 +276,7 @@ class WorkerPoolExecutor:
             try:
                 self._execute(st)
             except BaseException:
-                self._inflight.pop((st.dag.id, st.name), None)
-                self.rm.admission.unreserve(st)
+                self._release_claim_locked(st)
                 raise
             self._publish_output(st)
             with self._cond:
@@ -172,13 +312,21 @@ class WorkerPoolExecutor:
                         self._cond.wait(timeout=0.1)
             try:
                 self._execute(st)
+            except NodePoisonedError as e:
+                # permanent op failure: quarantine the op and fail ONLY
+                # this DAG — peers and the pool keep serving
+                with self._cond:
+                    self._release_claim_locked(st)
+                    if st.status == RUNNING:
+                        st.transition(WAITING)
+                    self._poison_locked(st, e)
+                    self._cond.notify_all()
+                continue
             except BaseException as e:
                 with self._cond:
                     if self._error is None:
                         self._error = e
-                    if self._inflight.pop((st.dag.id, st.name),
-                                          None) is not None:
-                        self.rm.admission.unreserve(st)
+                    self._release_claim_locked(st)
                     self._cond.notify_all()
                 return
             self._publish_output(st)
@@ -194,6 +342,13 @@ class WorkerPoolExecutor:
         while True:
             if time.perf_counter() - self._t0 > self._deadline:
                 raise TimeoutError("executor deadline exceeded")
+            if getattr(self.rm.cfg, "enforce_deadlines", False):
+                now = time.monotonic()
+                for d in self._active.values():
+                    if not d.cancelled and d.deadline is not None \
+                            and now >= d.deadline:
+                        self._cancel_dag_locked(d, "deadline_miss")
+                self._finish_done_dags()
             if not self._active:
                 return None
             cands = self._collect()
@@ -438,13 +593,42 @@ class WorkerPoolExecutor:
             pass
 
     # -- completion bookkeeping (RM critical section) ----------------------
+    def _release_claim_locked(self, st: NodeState) -> None:
+        """Release a claimed node's inflight entry + admission reservation
+        exactly once.  Pop-guarded: completion and error paths can both
+        reach a claim, and a double unreserve would corrupt the books
+        (``unreserve`` now raises on imbalance rather than asserting)."""
+        if self._inflight.pop((st.dag.id, st.name), None) is not None:
+            self.rm.admission.unreserve(st)
+
+    def _cancel_dag_locked(self, dag: DAG, outcome: str) -> None:
+        """Cooperative cancellation: no new claims (``runnable`` goes
+        empty), in-flight nodes drain through their normal completion
+        path, and the DAG finishes with the given outcome once drained."""
+        dag.cancelled = True
+        if dag.outcome is None:
+            dag.outcome = outcome
+        if outcome == "deadline_miss":
+            self.rm.admission.count("deadline_misses")
+
+    def _poison_locked(self, st: NodeState, e: NodePoisonedError) -> None:
+        """Quarantine a permanently failing op and cancel its DAG."""
+        fns = getattr(e, "fns", None) or [st.spec.fn]
+        keys = {self.rm.poison_key(fn) for fn in fns}
+        keys.discard(None)          # loaders are never quarantined
+        self.rm.quarantined.update(keys)
+        self.rm.admission.count("poisoned")
+        st.dag.error = e
+        self._cancel_dag_locked(st.dag, "poisoned")
+        self._finish_done_dags()
+
     def _complete_locked(self, st: NodeState) -> None:
         st.transition(DONE)
         st.runs += 1
         if st not in self.rm.completed_nodes:
             self.rm.completed_nodes.append(st)
-        self._inflight.pop((st.dag.id, st.name), None)
-        self.rm.admission.unreserve(st)
+        self._release_claim_locked(st)
+        self.rm.admission.note_latency(st.exec_latency)
         # NOTE: outputs are retained until DAG completion (paper §3.1) —
         # freeing earlier would defeat rollback and share-aware eviction.
         self._finish_done_dags()
@@ -461,11 +645,16 @@ class WorkerPoolExecutor:
 
     def _finish_dag(self, dag: DAG, attachments: list) -> None:
         dag.done = True
+        if dag.outcome is None:
+            dag.outcome = "completed"
         for st in dag.nodes.values():
             if st in self.rm.completed_nodes:
                 self.rm.completed_nodes.remove(st)
-            if st.spec.keep_output:
-                continue   # external consumer owns it (releases the msg)
+            # external consumers own keep_output sinks (they release the
+            # msg) — unless the DAG was cancelled, in which case no
+            # consumer will ever read the partial result
+            if st.spec.keep_output and not dag.cancelled:
+                continue
             # release everything except messages the DeCache owns (the
             # entry's own msg — shared by every DAG keyed on it; this
             # includes CACHED loaders repaired via a decache attach,
@@ -476,6 +665,7 @@ class WorkerPoolExecutor:
                 st.sandbox.destroy()
         for e in attachments:
             self.rm.decache.detach(e)
+        self.rm.admission.finished(dag)
 
     def reshare_stats(self) -> Dict[str, int]:
         """Writer-side copy-avoidance counters for every SIPC write this
@@ -492,7 +682,9 @@ class WorkerPoolExecutor:
                 "bytes_copied": s.bytes_copied}
 
     def close(self) -> None:
-        """Release executor resources (no-op for the thread pool)."""
+        """Release executor resources (the thread pool only has the
+        dispatcher thread to stop)."""
+        self.drain(timeout=30.0)
 
 
 class ProcessWorkerExecutor(WorkerPoolExecutor):
@@ -578,7 +770,8 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
         return super()._run_gated(dags, deadline_s)
 
     def close(self) -> None:
-        if self._pool is not None:
+        super().close()             # stop the dispatcher first: a late
+        if self._pool is not None:  # wave must not hit a closed pool
             self._pool.close()
             self._pool = None
 
@@ -686,8 +879,7 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
             if len(claimed) != len(group):
                 # partial admission: roll the group back, truncate here
                 for s in claimed:
-                    self._inflight.pop((st.dag.id, s.name), None)
-                    self.rm.admission.unreserve(s)
+                    self._release_claim_locked(s)
                     s.transition(WAITING)
                     self.node_runs -= 1
                 break
@@ -703,15 +895,18 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
         t0 = time.perf_counter()
         try:
             self._execute_chain(chain)
-        except BaseException:
+        except BaseException as e:
+            # a chain's worker dies without saying which step killed it,
+            # so quarantine must cover the whole shipped segment
+            if isinstance(e, NodePoisonedError) and not e.fns:
+                e.fns = [n.spec.fn for n in chain
+                         if n.spec.fn is not None]
             # revert the suffix claims so a later run can redo them
             # node-by-node; the head's cleanup is the caller's normal
             # error path
             with self._cond:
                 for n in chain[1:]:
-                    if self._inflight.pop((n.dag.id, n.name),
-                                          None) is not None:
-                        self.rm.admission.unreserve(n)
+                    self._release_claim_locked(n)
                     if n.status == RUNNING:
                         n.transition(WAITING)
                 self._cond.notify_all()
@@ -851,22 +1046,48 @@ class ProcessWorkerExecutor(WorkerPoolExecutor):
     # -- remote execution ---------------------------------------------------
     def _request(self, obj: dict) -> dict:
         """Pool request with crash recovery: a request that dies with its
-        worker (SIGKILL, OOM, socket desync) is retried on a surviving
-        worker — requests carry only references, so a replay is free and
-        side-effect-safe.  In-op exceptions are never retried (they are
-        deterministic), and when the whole pool is dead the error
-        propagates to the executor's normal failure path, which releases
-        the node's RM reservation."""
+        worker (SIGKILL, OOM, socket desync) is retried with capped
+        exponential backoff — requests carry only references, so a
+        replay is free and side-effect-safe.  A single death retries on
+        the surviving peers; once the pool thins below half strength it
+        is re-grown first, so repeated deaths cannot drain it.  Past
+        ``max_node_retries`` the op is declared poisoned: the pool is
+        healed and :class:`NodePoisonedError` fails *this DAG only* (the
+        worker loop quarantines the op's fingerprint).  In-op exceptions
+        are never retried — they are deterministic."""
         from ..flight.worker import FlightWorkerLost
+        cfg = self.rm.cfg
+        max_retries = max(int(getattr(cfg, "max_node_retries", 3)), 1)
+        backoff = float(getattr(cfg, "retry_backoff_s", 0.05))
         attempts = 0
         while True:
             try:
                 return self._pool.request(obj)
-            except FlightWorkerLost:
+            except FlightWorkerLost as e:
                 attempts += 1
-                if self._pool.live_workers == 0 or attempts > self.workers:
-                    raise
+                if attempts > max_retries:
+                    self._heal_pool()
+                    raise NodePoisonedError(
+                        f"op {obj.get('label', '?')!r} lost its worker "
+                        f"{attempts} times ({e}); quarantining") from e
+                if self._pool.live_workers < max(1, self.workers // 2):
+                    self._heal_pool()
+                if self._pool.live_workers == 0:
+                    # respawn failed outright: nothing left to retry on
+                    raise NodePoisonedError(
+                        f"op {obj.get('label', '?')!r} lost its worker "
+                        f"and the pool could not be re-grown") from e
                 self.worker_retries += 1
+                time.sleep(min(backoff * (2 ** (attempts - 1)), 1.0))
+
+    def _heal_pool(self) -> None:
+        """Re-grow the worker pool back to strength (best-effort: spawn
+        failure surfaces as an empty pool at the call site, never as an
+        exception replacing the one being handled)."""
+        try:
+            self._pool.ensure_workers()
+        except Exception:
+            pass
 
     def _accumulate_stats(self, reply: dict) -> None:
         for k, v in (reply.get("stats") or {}).items():

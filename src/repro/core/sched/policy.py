@@ -11,9 +11,20 @@ Built-in policies:
               paper's default).
   breadth   — shallowest first: models concurrently-started DAGs.
   fair      — least-progressed tenant first (multi-tenant fair share):
-              no tenant's DAGs run ahead while another's starve.
+              no tenant's DAGs run ahead while another's starve.  The
+              per-tenant memory ceilings (``RMConfig.tenant_budgets``,
+              enforced by the admission layer) are the other half of the
+              isolation story: fair ordering shares the workers, budgets
+              share the memory.
   deadline  — earliest-deadline-first over ``DAG.deadline``, depth-first
               within a DAG; deadline-less DAGs run last.
+
+Ordering vs enforcement: a policy only *orders* candidates.  With
+``RMConfig.enforce_deadlines`` on, ``DAG.deadline`` is additionally
+interpreted against ``time.monotonic()`` — the executor cancels DAGs
+past it and the admission layer sheds offers that are already hopeless
+(see ``core/sched/admission.py``); with it off (default), deadlines
+remain a pure ordering hint with no clock semantics, the seed behaviour.
 
 Register a custom policy with :func:`register_schedule`; select it by name
 via ``RMConfig(schedule=...)``.
@@ -98,8 +109,11 @@ class FairShare(SchedulePolicy):
 
 @register_schedule
 class DeadlineAware(SchedulePolicy):
-    """Earliest-deadline-first over ``DAG.deadline`` (seconds, caller's
-    clock — only the ordering matters), depth-first within a DAG."""
+    """Earliest-deadline-first over ``DAG.deadline``, depth-first within
+    a DAG.  For ordering, any monotone clock works; only when
+    ``RMConfig.enforce_deadlines`` is set must deadlines be
+    ``time.monotonic()`` instants, since the executor then compares them
+    against that clock to cancel overdue DAGs."""
 
     name = "deadline"
 

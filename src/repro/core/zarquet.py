@@ -65,7 +65,7 @@ try:
 except ImportError:                       # clean environment: stdlib only
     zstandard = None
 
-from . import vkernels
+from . import faultplane, vkernels
 from .arrow import (ArrowType, Column, Field, RecordBatch, Schema, Table,
                     UTF8)
 from .buffers import alloc_aligned
@@ -245,6 +245,29 @@ def _read_commit_pointer(path: str) -> Optional[dict]:
         return None
 
 
+#: StreamWriter commit fault points, in execution order (the stream
+#: analog of manifest.CRASH_POINTS; see tests/test_faultplane.py)
+STREAM_CRASH_POINTS = ("stream_pre_blob", "stream_torn_blob",
+                       "stream_pre_footer", "stream_torn_footer",
+                       "stream_pre_sidecar", "stream_torn_sidecar",
+                       "stream_post_commit")
+
+faultplane.register_hook("stream_pre_blob", "StreamWriter flush: before "
+                         "the first row-group blob write")
+faultplane.register_hook("stream_torn_blob", "StreamWriter flush: half a "
+                         "row-group blob written, then SIGKILL")
+faultplane.register_hook("stream_pre_footer", "StreamWriter commit: blobs "
+                         "written, before the footer")
+faultplane.register_hook("stream_torn_footer", "StreamWriter commit: half "
+                         "the footer written, then SIGKILL")
+faultplane.register_hook("stream_pre_sidecar", "StreamWriter commit: "
+                         "footer fsync'd, before the sidecar pointer")
+faultplane.register_hook("stream_torn_sidecar", "StreamWriter commit: "
+                         "sidecar tmp fsync'd, SIGKILL before os.replace")
+faultplane.register_hook("stream_post_commit", "StreamWriter commit: "
+                         "pointer replaced (batch durably committed)")
+
+
 def _write_commit_pointer(path: str, end: int, version: int,
                           sync: bool = True) -> None:
     """Atomically advance the commit pointer (tmp + ``os.replace``):
@@ -259,7 +282,11 @@ def _write_commit_pointer(path: str, end: int, version: int,
         fh.flush()
         if sync:
             os.fsync(fh.fileno())
+    if faultplane.fire("stream_torn_sidecar") == "torn":
+        faultplane.kill()       # tmp durable, pointer not replaced: the
+                                # reader must still see the OLD commit
     os.replace(tmp, _commit_path(path))
+    faultplane.fire("stream_post_commit")
 
 
 def committed_end(path: str) -> int:
@@ -494,7 +521,20 @@ class StreamWriter:
         """Reopen an existing stream for append: honor the commit
         pointer, drop any torn tail past it, resume at the committed
         version."""
-        meta = read_footer(self.path)
+        try:
+            meta = read_footer(self.path)
+        except (AssertionError, ValueError, KeyError, struct.error):
+            if _read_commit_pointer(self.path) is not None:
+                raise
+            # torn during the *first* footer write, before any sidecar
+            # pointer existed: no commit ever completed, so no batch can
+            # have been ACKed — recover to an empty stream
+            self.version = 0
+            self._fh = open(self.path, "r+b")
+            self._fh.truncate(len(MAGIC))
+            self._end = len(MAGIC)
+            self._commit_footer()
+            return
         if meta.get("groups") is None:
             raise ValueError(
                 f"zarquet {self.path}: batch file, not a stream "
@@ -551,11 +591,18 @@ class StreamWriter:
             pending, self._pending = self._pending, []
             off = self._end
             self._fh.seek(off)
+            faultplane.fire("stream_pre_blob")
             new_groups = []
             for _seq, b in pending:
                 blobs, cols_meta, ghash, off = _encode_group(
                     b, self.level, self.codec, off, with_hash=True)
                 for blob in blobs:
+                    if faultplane.fire("stream_torn_blob") == "torn":
+                        # half a blob past the committed footer: reopen
+                        # must truncate it (nothing was ACKed)
+                        self._fh.write(blob[:max(len(blob) // 2, 1)])
+                        self._fh.flush()
+                        faultplane.kill()
                     self._fh.write(blob)
                 new_groups.append({"columns": cols_meta,
                                    "nrows": b.num_rows, "hash": ghash})
@@ -575,12 +622,20 @@ class StreamWriter:
         footer = json.dumps({"groups": self._groups, "nrows": self._nrows,
                              "version": self.version,
                              "codec": self.codec}).encode()
+        faultplane.fire("stream_pre_footer")
+        if faultplane.fire("stream_torn_footer") == "torn":
+            # half the footer, no pointer advance: the sidecar still
+            # names the previous footer, so reopen recovers to it
+            self._fh.write(footer[:max(len(footer) // 2, 1)])
+            self._fh.flush()
+            faultplane.kill()
         self._fh.write(footer)
         self._fh.write(struct.pack("<Q", len(footer)))
         self._fh.write(MAGIC)
         self._fh.flush()
         if self.sync:
             os.fsync(self._fh.fileno())
+        faultplane.fire("stream_pre_sidecar")
         self._end = off + len(footer) + 8 + len(MAGIC)
         _write_commit_pointer(self.path, self._end, self.version,
                               sync=self.sync)

@@ -10,7 +10,11 @@ failure hooks so the policies are testable:
     applied to training-in-time: recompute beats babysitting a sick node).
   * straggler mitigation           — per-worker step-time EWMA; a worker
     slower than ``straggler_factor`` x the fleet median is marked for
-    replacement *between* checkpoint intervals (no global desync).
+    replacement *between* checkpoint intervals (no global desync).  The
+    EWMA + median-factor rule itself lives in
+    ``core.faultplane.StragglerDetector`` — the same detector the flight
+    worker pool uses for serving-plane request health, so the training
+    and serving planes share one definition of "straggler".
   * elastic re-mesh                — a new mesh (e.g. 512 -> 448 chips)
     restores the same checkpoint with new shardings (restore(..,
     shardings=...)): data-parallel size changes, model state is intact.
@@ -22,6 +26,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
+from ..core.faultplane import StragglerDetector
 from .checkpoint import CheckpointStore
 
 
@@ -30,7 +35,7 @@ class WorkerState:
     worker_id: int
     last_step: int = -1
     last_beat: float = 0.0
-    step_ewma: float = 0.0
+    step_ewma: float = 0.0    # mirror of the shared detector's EWMA
     failed: bool = False
     straggler: bool = False
 
@@ -51,6 +56,9 @@ class FleetMonitor:
         self.workers = {i: WorkerState(i) for i in range(n_workers)}
         self.global_step = 0
         self.events: List[dict] = []
+        self.health = StragglerDetector(alpha=cfg.ewma,
+                                        factor=cfg.straggler_factor,
+                                        min_peers=3)
 
     # -- heartbeats ----------------------------------------------------------
     def heartbeat(self, worker_id: int, step: int, step_time: float,
@@ -58,9 +66,7 @@ class FleetMonitor:
         w = self.workers[worker_id]
         w.last_step = step
         w.last_beat = now if now is not None else time.monotonic()
-        a = self.cfg.ewma
-        w.step_ewma = step_time if w.step_ewma == 0 \
-            else a * step_time + (1 - a) * w.step_ewma
+        w.step_ewma = self.health.update(worker_id, step_time)
         self.global_step = max(self.global_step, step)
 
     # -- failure detection -----------------------------------------------------
@@ -78,22 +84,23 @@ class FleetMonitor:
 
     # -- stragglers --------------------------------------------------------------
     def detect_stragglers(self) -> List[int]:
-        alive = [w for w in self.workers.values() if not w.failed
-                 and w.step_ewma > 0]
-        if len(alive) < 3:
+        alive = {w.worker_id for w in self.workers.values()
+                 if not w.failed}
+        slow_ids, median = self.health.flag(alive)
+        if median == 0.0:               # fewer than min_peers populated
             return []
-        times = sorted(w.step_ewma for w in alive)
-        median = times[len(times) // 2]
+        slow = set(slow_ids)
         out = []
-        for w in alive:
-            slow = w.step_ewma > self.cfg.straggler_factor * median
-            if slow and not w.straggler:
+        for wid in alive:
+            w = self.workers[wid]
+            if w.step_ewma <= 0:
+                continue
+            if wid in slow and not w.straggler:
                 w.straggler = True
-                self.events.append({"kind": "straggler",
-                                    "worker": w.worker_id,
+                self.events.append({"kind": "straggler", "worker": wid,
                                     "ewma": w.step_ewma, "median": median})
-                out.append(w.worker_id)
-            elif not slow:
+                out.append(wid)
+            elif wid not in slow:
                 w.straggler = False
         return out
 

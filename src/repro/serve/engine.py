@@ -76,11 +76,20 @@ class ZerrowPromptSource:
                  memory_limit: Optional[int] = None,
                  cache_root: Optional[str] = None,
                  store: Optional[BufferStore] = None,
-                 rm: Optional[ResourceManager] = None):
+                 rm: Optional[ResourceManager] = None,
+                 tenant: str = "default",
+                 deadline_s: Optional[float] = None):
         self.paths = list(shard_paths)
         self.batch = batch
         self.max_new = max_new
         self.max_prompt_len = max_prompt_len
+        # admission identity: shard DAGs carry the source's tenant (for
+        # budget isolation) and an optional per-run deadline; when the RM
+        # enforces deadlines, shard loads past it are cancelled and
+        # surface as ``missed_shards`` instead of stalling the engine
+        self.tenant = tenant
+        self.deadline_s = deadline_s
+        self.missed_shards = 0
         backing = ("file" if workers_mode == "process" or cache_root
                    else "ram")
         self.store = store or BufferStore(backing=backing, root=cache_root)
@@ -94,17 +103,25 @@ class ZerrowPromptSource:
 
     def batches(self) -> Iterator[List[Request]]:
         dags = []
+        deadline = None if self.deadline_s is None \
+            else time.monotonic() + self.deadline_s
         for p in self.paths:
             est = max(os.path.getsize(p) * 8, 1 << 20)
             dags.append(DAG([
                 NodeSpec("load", source=p, est_mem=est),
                 NodeSpec("prompts", fn=passthrough_fn, deps=["load"],
                          est_mem=est // 4, keep_output=True),
-            ], name=f"prompts-{os.path.basename(p)}"))
+            ], name=f"prompts-{os.path.basename(p)}",
+                tenant=self.tenant, deadline=deadline))
         self.ex.run(dags)
         pending: List[Request] = []
         for dag in dags:
             msg = dag.nodes["prompts"].output
+            if dag.cancelled or msg is None:
+                # shed / deadline-missed shard: the engine degrades to
+                # fewer prompts rather than crashing on a None output
+                self.missed_shards += 1
+                continue
             table = SipcReader(self.store).read_table(msg)
             col = table.combine().batches[0].column("text")
             for i in range(col.length):

@@ -1,0 +1,348 @@
+"""The unified fault-injection plane, and what it proves.
+
+Unit half: FaultPlane parsing (env + legacy spelling), selector
+semantics (@n, @/n, @p...s...), action execution, determinism, counters,
+and the shared StragglerDetector.
+
+Crash half: a StreamWriter subprocess ingests micro-batches while a
+fault point in the commit sequence SIGKILLs it; reopening must truncate
+the torn tail and preserve exactly the at-least-once contract — every
+ACKed batch present once, no phantom bytes, stream still appendable.
+The default lane kills at each commit point once; the stress lane
+repeats each point across several commit indices.
+
+Plus corrupt-object detection: a content-addressed object flipped at
+rest is dropped (never adopted) when verify-on-adopt is armed.
+"""
+
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (BufferStore, KernelZero, Sandbox, SipcReader,
+                        StreamWriter, Table)
+from repro.core import faultplane, zarquet
+from repro.core.faultplane import (FaultInjected, FaultPlane,
+                                   StragglerDetector, _parse_env,
+                                   _parse_spec)
+from repro.core.zarquet import STREAM_CRASH_POINTS
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(autouse=True)
+def _clean_plane(monkeypatch):
+    monkeypatch.delenv("ZERROW_FAULTS", raising=False)
+    monkeypatch.delenv("ZERROW_CRASH", raising=False)
+    faultplane.PLANE.reset()
+    yield
+    faultplane.PLANE.reset()
+
+
+# ---------------------------------------------------------------------------
+# parsing
+# ---------------------------------------------------------------------------
+
+def test_parse_spec_forms():
+    s = _parse_spec("pt=raise")
+    assert (s.point, s.action, s.at) == ("pt", "raise", 1)
+    s = _parse_spec("pt=delay:0.25@3")
+    assert (s.action, s.arg, s.at) == ("delay", 0.25, 3)
+    s = _parse_spec("pt=kill@/4")
+    assert s.every == 4
+    s = _parse_spec("pt=raise@p0.5s7")
+    assert (s.p, s.seed) == (0.5, 7)
+    # malformed tokens never take the runtime down
+    for bad in ("", "pt", "pt=", "=kill", "pt=notanaction",
+                "pt=delay:xyz", "pt=kill@bogus"):
+        assert _parse_spec(bad) is None, bad
+
+
+def test_parse_env_legacy_crash_spelling():
+    specs = _parse_env("", "pre_journal:3")
+    assert specs["pre_journal"].action == "kill"
+    assert specs["pre_journal"].at == 3
+    # a "torn" point maps to the torn action (call site tears its write)
+    specs = _parse_env("", "torn_journal:2")
+    assert specs["torn_journal"].action == "torn"
+    # ZERROW_FAULTS wins over the legacy var for the same point
+    specs = _parse_env("pre_journal=raise", "pre_journal:1")
+    assert specs["pre_journal"].action == "raise"
+
+
+# ---------------------------------------------------------------------------
+# selector + action semantics
+# ---------------------------------------------------------------------------
+
+def test_at_selector_fires_nth_hit_and_later():
+    pl = FaultPlane()
+    pl.install("pt", "raise", at=3)
+    assert pl.fire("pt") is None
+    assert pl.fire("pt") is None
+    with pytest.raises(FaultInjected):
+        pl.fire("pt")
+    with pytest.raises(FaultInjected):
+        pl.fire("pt")                      # ...and every later hit
+    assert pl.hits("pt") == 4 and pl.fired("pt") == 2
+
+
+def test_every_selector_is_periodic():
+    pl = FaultPlane()
+    pl.install("pt", "torn", every=3)
+    got = [pl.fire("pt") for _ in range(9)]
+    assert got == [None, None, "torn"] * 3
+
+
+def test_probabilistic_selector_is_seed_deterministic():
+    a, b = FaultPlane(), FaultPlane()
+    a.install("pt", "torn", p=0.4, seed=11)
+    b.install("pt", "torn", p=0.4, seed=11)
+    seq_a = [a.fire("pt") for _ in range(50)]
+    seq_b = [b.fire("pt") for _ in range(50)]
+    assert seq_a == seq_b                  # same seed, same hit order
+    assert "torn" in seq_a and None in seq_a
+
+
+def test_count_caps_total_fires():
+    pl = FaultPlane()
+    pl.install("pt", "torn", count=2)
+    got = [pl.fire("pt") for _ in range(5)]
+    assert got.count("torn") == 2
+
+
+def test_delay_action_sleeps_then_continues():
+    pl = FaultPlane()
+    pl.install("pt", "delay", arg=0.05)
+    t0 = time.monotonic()
+    assert pl.fire("pt") == "delay"
+    assert time.monotonic() - t0 >= 0.05
+
+
+def test_env_specs_reparse_on_change(monkeypatch):
+    pl = FaultPlane()
+    assert pl.fire("pt") is None
+    monkeypatch.setenv("ZERROW_FAULTS", "pt=raise")
+    with pytest.raises(FaultInjected):
+        pl.fire("pt")
+    monkeypatch.setenv("ZERROW_FAULTS", "")
+    assert pl.fire("pt") is None           # disarmed live
+    # programmatic beats env
+    monkeypatch.setenv("ZERROW_FAULTS", "pt=raise")
+    pl.install("pt", "torn")
+    assert pl.fire("pt") == "torn"
+
+
+def test_corrupt_file_flips_in_place(tmp_path):
+    p = str(tmp_path / "blob")
+    with open(p, "wb") as fh:
+        fh.write(b"abcdef")
+    faultplane.corrupt_file(p, offset=2, nbytes=2)
+    assert open(p, "rb").read() == b"ab\x9c\x9bef"
+    faultplane.corrupt_file(p, offset=2, nbytes=2)   # XOR is an involution
+    assert open(p, "rb").read() == b"abcdef"
+
+
+# ---------------------------------------------------------------------------
+# StragglerDetector
+# ---------------------------------------------------------------------------
+
+def test_straggler_detector_ewma_and_flagging():
+    d = StragglerDetector(alpha=0.5, factor=1.7, min_peers=3)
+    assert d.update("a", 1.0) == 1.0       # first sample seeds the EWMA
+    assert d.update("a", 2.0) == pytest.approx(1.5)
+    d.update("b", 1.0)
+    # below min_peers: no verdicts, median 0
+    assert d.flag() == ([], 0.0)
+    d.update("c", 1.0)
+    d.update("slow", 5.0)
+    slow, median = d.flag()
+    assert slow == ["slow"] and median > 0
+    # restricting to a key set excludes the straggler from the population
+    slow, _ = d.flag({"a", "b", "c"})
+    assert slow == []
+    d.drop("slow")
+    assert d.ewma("slow") == 0.0
+
+
+def test_fleet_monitor_uses_shared_detector():
+    from repro.runtime.fault import FaultConfig, FleetMonitor
+    m = FleetMonitor(4, FaultConfig(straggler_factor=1.5))
+    for step in range(4):
+        for w in range(4):
+            m.heartbeat(w, step, 3.0 if w == 2 else 1.0)
+    assert isinstance(m.health, StragglerDetector)
+    assert m.detect_stragglers() == [2]
+    assert m.workers[2].step_ewma == pytest.approx(m.health.ewma(2))
+
+
+# ---------------------------------------------------------------------------
+# StreamWriter crash matrix (subprocess: the faults SIGKILL for real)
+# ---------------------------------------------------------------------------
+
+ROWS = 40
+
+_WRITER = r"""
+import os, sys
+import numpy as np
+sys.path.insert(0, {src!r})
+from repro.core import StreamWriter, Table
+
+path, n = sys.argv[1], int(sys.argv[2])
+w = StreamWriter(path, max_inflight=2,
+                 on_ack=lambda seqs, v: [print(f"ACKED {{s}}", flush=True)
+                                         for s in seqs])
+for i in range(n):
+    print(f"INGEST {{i}}", flush=True)
+    w.ingest(Table.from_pydict(
+        {{"seq": np.full({rows}, i, dtype=np.int64),
+          "x": np.arange({rows}, dtype=np.int64) * (i + 1)}}))
+w.close()
+print("DONE", flush=True)
+"""
+
+
+def _run_stream_writer(path, n=6, faults=None, crash=None, timeout=120):
+    env = dict(os.environ,
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    env.pop("ZERROW_FAULTS", None)
+    env.pop("ZERROW_CRASH", None)
+    if faults:
+        env["ZERROW_FAULTS"] = faults
+    if crash:
+        env["ZERROW_CRASH"] = crash
+    out = subprocess.run(
+        [sys.executable, "-c",
+         _WRITER.format(src=os.path.abspath(SRC), rows=ROWS),
+         str(path), str(n)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    acked = [int(l.split()[1]) for l in out.stdout.splitlines()
+             if l.startswith("ACKED ")]
+    return out, acked
+
+
+def _verify_stream(path, acked, n):
+    """The at-least-once recovery contract, checked from a fresh reader."""
+    # reopening for append truncates any torn (uncommitted) tail
+    w = StreamWriter(str(path))
+    w.close()
+    assert os.path.getsize(path) == zarquet.committed_end(str(path))
+    meta = zarquet.read_footer(str(path))
+    if meta["nrows"] == 0:
+        assert acked == []                 # nothing ACKed, nothing owed
+        return set()
+    t = zarquet.read_table(str(path))
+    seqs = np.asarray(t.combine().batches[0].column("seq").values[:t.num_rows])
+    present, counts = np.unique(seqs, return_counts=True)
+    present = set(int(s) for s in present)
+    # every ACKed batch survived; nothing appears twice; no phantoms
+    assert set(acked) <= present, f"ACKed batch lost: {set(acked) - present}"
+    assert all(c == ROWS for c in counts), "duplicate or torn row group"
+    assert present <= set(range(n))
+    # per-row content intact for every recovered group
+    for g in present:
+        rows = np.asarray(
+            t.combine().batches[0].column("x").values[:t.num_rows])[
+                seqs == g]
+        assert np.array_equal(rows, np.arange(ROWS, dtype=np.int64) * (g + 1))
+    return present
+
+
+def _stream_crash_case(tmp_path, point, at, n=6):
+    # commit-sequence points are hit once per commit (the v0 footer plus
+    # one per flush of max_inflight=2 batches): n batches give 1 + n/2
+    # hits, so n must scale with the target hit index
+    n = max(n, (at + 1) * 2)
+    p = tmp_path / "stream.zq"
+    out, acked = _run_stream_writer(p, n=n,
+                                    faults=f"{point}=torn@{at}"
+                                    if "torn" in point
+                                    else f"{point}=kill@{at}")
+    assert out.returncode != 0, f"{point}@{at}: writer survived injection"
+    present = _verify_stream(p, acked, n)
+    # the stream must remain appendable after recovery
+    w = StreamWriter(str(p))
+    w.ingest(Table.from_pydict(
+        {"seq": np.full(ROWS, 99, dtype=np.int64),
+         "x": np.full(ROWS, 7, dtype=np.int64)}))
+    w.close()
+    t = zarquet.read_table(str(p))
+    assert t.num_rows == (len(present) + 1) * ROWS
+
+
+def test_stream_writer_clean_run_acks_everything(tmp_path):
+    p = tmp_path / "stream.zq"
+    out, acked = _run_stream_writer(p, n=6)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert sorted(acked) == list(range(6))
+    assert _verify_stream(p, acked, 6) == set(range(6))
+
+
+@pytest.mark.parametrize("point", STREAM_CRASH_POINTS)
+def test_stream_writer_crash_at_each_point(tmp_path, point):
+    _stream_crash_case(tmp_path, point, at=2)
+
+
+@pytest.mark.stress
+@pytest.mark.parametrize("point", STREAM_CRASH_POINTS)
+@pytest.mark.parametrize("at", [1, 3, 5])
+def test_stream_writer_crash_matrix(tmp_path, point, at):
+    _stream_crash_case(tmp_path, point, at=at)
+
+
+def test_stream_writer_legacy_crash_spelling_still_kills(tmp_path):
+    p = tmp_path / "stream.zq"
+    out, acked = _run_stream_writer(p, n=6, crash="stream_pre_sidecar:1")
+    assert out.returncode != 0
+    _verify_stream(p, acked, 6)
+
+
+# ---------------------------------------------------------------------------
+# corrupt-object detection (verify-on-adopt)
+# ---------------------------------------------------------------------------
+
+def _mk_table(i):
+    rng = np.random.default_rng(2000 + i)
+    return Table.from_pydict(
+        {"a": rng.integers(0, 1 << 40, size=200).astype(np.int64)})
+
+
+def test_corrupt_object_dropped_on_adopt(tmp_path, monkeypatch):
+    root = str(tmp_path / "cache")
+    store = BufferStore(backing="file", root=root)
+    kz = KernelZero(store)
+    for i in range(2):
+        sb = Sandbox(store, kz, f"w{i}", mode="zero")
+        msg = sb.write_output(_mk_table(i), label=f"t{i}")
+        store.publish(f"fp{i}", msg, label=f"t{i}")
+    store.close()
+
+    # bit-rot one object at rest, between runs
+    objdir = os.path.join(root, "objects")
+    victim = sorted(os.listdir(objdir))[0]
+    faultplane.corrupt_file(os.path.join(objdir, victim),
+                            offset=16, nbytes=4)
+
+    # without verification the rot goes unnoticed (size/existence pass)
+    store = BufferStore.reopen(root)
+    assert len(store.manifest.entries) == 2
+    assert store.manifest.dropped_corrupt == 0
+    store.close()
+
+    # verify-on-adopt re-hashes and refuses the corrupt entry
+    monkeypatch.setenv("ZERROW_VERIFY_OBJECTS", "1")
+    store = BufferStore.reopen(root)
+    try:
+        man = store.manifest
+        assert man.dropped_corrupt >= 1
+        assert len(man.entries) == 1
+        # the surviving entry still decodes to its exact content
+        fp = next(iter(man.entries))
+        msg = man.decode(fp, store, label=fp)
+        got = SipcReader(store).read_table(msg)
+        assert got.equals(_mk_table(int(fp[2:])))
+    finally:
+        store.close()

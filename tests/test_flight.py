@@ -369,24 +369,43 @@ def test_worker_crash_mid_node_is_retried(tmp_path):
         fstore.close()
 
 
-def test_all_workers_lost_fails_cleanly(tmp_path):
-    """When the whole pool dies the node fails with FlightWorkerError and
-    every RM reservation is released — no stuck in-flight state."""
+def test_poison_op_quarantined_pool_survives(tmp_path):
+    """An op that SIGKILLs its worker on every attempt exhausts its node
+    retries and poisons *its own DAG* — run() returns (no raise), the
+    DAG lands in the typed 'poisoned' outcome, every RM reservation
+    drains, the offending fn is quarantined, and the pool heals back to
+    at least one live worker so later DAGs still run."""
     paths = _write_shards(str(tmp_path), n=1)
     fstore = _file_store(tmp_path)
-    rm = ResourceManager(fstore, RMConfig(workers=1,
-                                          workers_mode="process"))
+    rm = ResourceManager(fstore, RMConfig(workers=1, workers_mode="process",
+                                          max_node_retries=2,
+                                          retry_backoff_s=0.01))
     ex = ProcessWorkerExecutor(fstore, rm, workers=1)
     dag = DAG([
         NodeSpec("load", source=paths[0], est_mem=1 << 22),
         NodeSpec("op", fn=crash_always_op, deps=["load"], est_mem=1 << 22),
     ], name="doomed")
     try:
-        with pytest.raises(FlightWorkerError):
-            ex.run([dag])
+        ex.run([dag])                       # returns; does NOT raise
+        assert dag.outcome == "poisoned"
+        assert dag.cancelled
+        assert rm.serve_stats["poisoned"] == 1
+        assert rm.quarantined                # the killer fn is blacklisted
         assert rm.admission.reserved == 0
         assert ex._inflight == {}
-        assert ex._pool.live_workers == 0
+        assert ex._pool.respawns >= 1        # replacements were spawned
+        assert ex._pool.live_workers >= 1    # ...and the pool healed
+
+        # the pool is still usable: an innocent DAG completes normally
+        dag2 = DAG([
+            NodeSpec("load", source=paths[0], est_mem=1 << 22),
+            NodeSpec("op", fn=filter_even_op, deps=["load"], est_mem=1 << 22,
+                     keep_output=True),
+        ], name="innocent")
+        ex.run([dag2])
+        assert dag2.all_done() and dag2.outcome == "completed"
+        t = SipcReader(fstore).read_table(dag2.nodes["op"].output)
+        assert t.num_rows > 0
     finally:
         ex.close()
         fstore.close()
