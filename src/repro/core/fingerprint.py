@@ -201,8 +201,15 @@ def _code_fingerprint(fn, _seen=None) -> Optional[str]:
     # explicit dependency declaration: callables reached through a module
     # attribute (``vkernels.hash_keys``) are invisible to the direct-
     # global scan above; an op can declare them in ``__fp_includes__`` so
-    # editing the kernel invalidates the op's cached outputs
-    for i, dep in enumerate(getattr(fn, "__fp_includes__", ()) or ()):
+    # editing the kernel invalidates the op's cached outputs.  A
+    # *callable* __fp_includes__ is invoked at fingerprint time to
+    # produce the tuple — how the relational ops bind to whichever
+    # kernel backend ``ZERROW_KERNEL_BACKEND`` currently selects, so a
+    # backend flip changes the fingerprint (kdispatch.fp_includes_join)
+    includes = getattr(fn, "__fp_includes__", ()) or ()
+    if callable(includes):
+        includes = includes() or ()
+    for i, dep in enumerate(includes):
         inner = _code_fingerprint(dep, _seen)
         if inner is None:
             return None

@@ -59,6 +59,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from . import kdispatch as kd
 from . import vkernels
 from .arrow import (Column, Field, RecordBatch, Schema, Table, UTF8,
                     pack_validity, type_for_np)
@@ -232,13 +233,13 @@ def _key_hashes(batch: RecordBatch, keys: Sequence[str],
         elif c.type.is_dict:
             d = c.dictionary
             hd = vkernels.hash_var(d.offsets, d.values) \
-                if d.type.is_utf8 else vkernels.hash_fixed(
+                if d.type.is_utf8 else kd.hash_fixed(
                     d.values.astype(cast[name], copy=False))
             parts.append(hd[c.values])
         else:
-            parts.append(vkernels.hash_fixed(
+            parts.append(kd.hash_fixed(
                 c.values.astype(cast[name], copy=False)))
-    return vkernels.combine_hashes(parts, n), valid
+    return kd.combine_hashes(parts, n), valid
 
 
 def _key_cast_map(lb: RecordBatch, rb: RecordBatch,
@@ -316,8 +317,8 @@ def _join_gather_indices(lb: RecordBatch, rb: RecordBatch,
     pidx = np.nonzero(lvalid)[0]
     bidx = np.nonzero(rvalid)[0]
     pi, bi = vkernels.hash_join_probe(rh[bidx], lh[pidx])
-    li = vkernels.filter_join_gather(pidx, pi)
-    ri = vkernels.filter_join_gather(bidx, bi)
+    li = kd.filter_join_gather(pidx, pi)
+    ri = kd.filter_join_gather(bidx, bi)
     keep = np.ones(len(li), dtype=bool)
     for k in keys:
         keep &= _key_pairs_equal(lb.column(k), li, rb.column(k), ri)
@@ -497,7 +498,7 @@ def group_by(table: Table, keys: Union[str, Sequence[str]],
         fields.append(Field(k, c.type))
         cols.append(c)
     for out_name, (col_name, how) in aggs.items():
-        reducer = vkernels.GROUPED_REDUCERS[how]
+        reducer = kd.GROUPED_REDUCERS[how]
         c = b.column(col_name)
         if how == "count":
             v = np.empty(c.length, dtype=np.int64)    # values unused
@@ -539,18 +540,17 @@ def filter_join_node(tables: Sequence[Table], on, how: str = "inner",
                        left_mask=left_mask, right_mask=right_mask)
 
 
-#: the relational ops reach their kernels through the ``vkernels`` module
-#: attribute, which the fingerprint's direct-global scan does not chase;
-#: declaring them here makes a kernel edit invalidate every cached
-#: join/group-by output (differential reruns recompute the affected side)
-join.__fp_includes__ = (
-    vkernels.combine_hashes, vkernels.hash_fixed,
-    vkernels.hash_var, vkernels.hash_join_probe,
-    vkernels.filter_join_gather, vkernels.bytes_rows_equal)
-group_by.__fp_includes__ = (
-    vkernels.group_ranges, vkernels.grouped_count, vkernels.grouped_sum,
-    vkernels.grouped_min, vkernels.grouped_max, vkernels.grouped_mean,
-    vkernels.dict_encode_var, vkernels.sort_keys_var)
+#: the relational ops reach their kernels through module attributes,
+#: which the fingerprint's direct-global scan does not chase; declaring
+#: them here makes a kernel edit invalidate every cached join/group-by
+#: output (differential reruns recompute the affected side).  The
+#: declarations are *callables* resolved at fingerprint time by
+#: ``kdispatch``: they always fold in the numpy vkernels and, when
+#: ``ZERROW_KERNEL_BACKEND=pallas`` is active, additionally the backend
+#: tag + live Pallas kernels — so flipping the backend or editing a
+#: Pallas kernel invalidates exactly these cones too
+join.__fp_includes__ = kd.fp_includes_join
+group_by.__fp_includes__ = kd.fp_includes_group_by
 join_node.__fp_includes__ = join.__fp_includes__
 group_by_node.__fp_includes__ = group_by.__fp_includes__
 #: fused and unfused plans fingerprint distinctly: filter_join's own code

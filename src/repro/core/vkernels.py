@@ -76,6 +76,16 @@ Ops reached from the query frontend (``core/plan/``) pin their kernels
 via ``__fp_includes__`` (``ops.filter_join`` chains down to
 ``filter_join_gather``), so editing a kernel here invalidates cached
 plan outputs exactly as it invalidates hand-wired ones.
+
+This module is also the *reference semantics* for the accelerator
+backend: ``core/kdispatch.py`` (``ZERROW_KERNEL_BACKEND=pallas``) may
+route hashing, join gathers, and the integer segment reducers to the
+Pallas ports in ``repro.kernels.relational`` — but only kernels the
+differential harness proves bit-identical to the functions here are
+admitted, and order-sensitive float reductions (``grouped_sum``'s
+sequential ``np.bincount`` accumulation, ``reduceat`` extreme ties)
+stay on this code path by registry.  Behavior changes here are contract
+changes for both backends.
 """
 
 from __future__ import annotations

@@ -166,3 +166,92 @@ def test_dict_decode(rng, R, W, M, bm):
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(ref.dict_decode_ref(codes, dic)),
         rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# gather edge cases: empty inputs, odd widths, domain validation
+# ---------------------------------------------------------------------------
+
+def test_take_rows_zero_indices(rng):
+    vals = jnp.asarray(rng.normal(size=(9, 7)), jnp.float32)
+    out = ops.take_rows(vals, jnp.asarray([], jnp.int32))
+    assert out.shape == (0, 7) and out.dtype == vals.dtype
+
+
+def test_take_rows_out_of_range_raises(rng):
+    vals = jnp.asarray(rng.normal(size=(9, 7)), jnp.float32)
+    with pytest.raises(IndexError, match="out of range"):
+        ops.take_rows(vals, jnp.asarray([0, 9], jnp.int32))
+    with pytest.raises(IndexError, match="out of range"):
+        ops.take_rows(vals, jnp.asarray([-1], jnp.int32))
+
+
+def test_dict_decode_zero_codes(rng):
+    dic = jnp.asarray(rng.normal(size=(5, 4)), jnp.float32)
+    out = ops.dict_decode(jnp.asarray([], jnp.int32), dic)
+    assert out.shape == (0, 4) and out.dtype == dic.dtype
+
+
+@pytest.mark.parametrize("M", [1, 7, 103, 257])
+def test_dict_decode_length_not_block_multiple(rng, M):
+    """Any code count works: the wrapper pads M up to the block size and
+    slices the pad rows back off."""
+    dic = jnp.asarray(rng.normal(size=(6, 8)), jnp.float32)
+    codes = jnp.asarray(rng.integers(0, 6, (M,)), jnp.int32)
+    out = ops.dict_decode(codes, dic, bm=64)
+    assert out.shape == (M, 8)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(dic)[np.asarray(codes)])
+
+
+def test_dict_decode_out_of_range_codes_raise(rng):
+    """A code outside the dictionary raises instead of silently decoding
+    garbage (the one-hot matmul would emit zero rows)."""
+    dic = jnp.asarray(rng.normal(size=(5, 4)), jnp.float32)
+    with pytest.raises(IndexError, match="out of range"):
+        ops.dict_decode(jnp.asarray([0, 5], jnp.int32), dic)
+    with pytest.raises(IndexError, match="out of range"):
+        ops.dict_decode(jnp.asarray([-1], jnp.int32), dic)
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode resolution: explicit env override beats device sniffing
+# ---------------------------------------------------------------------------
+
+def test_default_interpret_env_override(monkeypatch):
+    monkeypatch.setenv("ZERROW_PALLAS_INTERPRET", "1")
+    assert ops.default_interpret() is True
+    monkeypatch.setenv("ZERROW_PALLAS_INTERPRET", "0")
+    assert ops.default_interpret() is False
+    monkeypatch.setenv("ZERROW_PALLAS_INTERPRET", "yes")
+    with pytest.raises(ValueError, match="ZERROW_PALLAS_INTERPRET"):
+        ops.default_interpret()
+    # unset (and empty) fall back to device sniffing
+    monkeypatch.setenv("ZERROW_PALLAS_INTERPRET", "")
+    assert ops.default_interpret() == (not ops.on_tpu())
+    monkeypatch.delenv("ZERROW_PALLAS_INTERPRET")
+    assert ops.default_interpret() == (not ops.on_tpu())
+
+
+def test_interpret_override_takes_effect_per_call(rng, monkeypatch):
+    """The override is read at call time, not baked into a jit trace:
+    flipping the env var between two calls of the *same* wrapper
+    changes the lowering.  On a CPU backend, '0' (force compiled) must
+    reach the kernel and fail with Pallas's interpret-only CPU error —
+    a stale trace would silently keep interpreting."""
+    if ops.on_tpu():
+        pytest.skip("compiled mode is the normal path on TPU")
+    vals = jnp.asarray(rng.integers(0, 100, (8, 16)), jnp.int32)
+    idx = jnp.asarray(rng.integers(0, 8, (32,)), jnp.int32)
+    monkeypatch.setenv("ZERROW_PALLAS_INTERPRET", "1")
+    a = np.asarray(ops.take_rows(vals, idx))
+    np.testing.assert_array_equal(a, np.asarray(vals)[np.asarray(idx)])
+    monkeypatch.setenv("ZERROW_PALLAS_INTERPRET", "0")
+    with pytest.raises(ValueError, match="[Ii]nterpret"):
+        ops.take_rows(vals, idx)
+    monkeypatch.setenv("ZERROW_PALLAS_INTERPRET", "1")
+    np.testing.assert_array_equal(np.asarray(ops.take_rows(vals, idx)), a)
+
+
+def test_on_tpu_matches_backend():
+    assert ops.on_tpu() == (jax.default_backend() == "tpu")

@@ -1,0 +1,596 @@
+"""Eligibility harness for the Pallas relational kernels.
+
+Admission to the ``ZERROW_KERNEL_BACKEND=pallas`` path is decided here:
+every kernel in ``repro.kernels.relational`` must be **bit-identical**
+(values AND dtypes) to its ``core/vkernels.py`` numpy reference, which
+must itself match a per-row naive Python reference — across dtype mixes
+(int32/int64/uint64/float64 including -0.0 and NaN), null fractions,
+duplicate-heavy keys, zero-row and empty(all-null)-group inputs.
+Kernels the registry marks ineligible (the order-sensitive float
+reductions) are asserted to *stay* on the numpy path even with the
+pallas backend active, and the demotion machinery is proven to pull a
+kernel whose bits regress.  The fingerprint section pins the cache
+contract: flipping the backend or editing a Pallas kernel invalidates
+exactly the join/group-by cones (manifest adoption counts asserted,
+mirroring the PR 5 ``__fp_includes__`` tests).
+
+Everything here runs interpret-mode on accelerator-less CI runners; the
+seeded-numpy sweeps always run, and a hypothesis property (stress lane)
+widens the input space when hypothesis is installed.
+"""
+import functools
+import os
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax", reason="pallas kernels need jax")
+
+from repro.core import (BufferStore, DAG, Executor, NodeSpec, RMConfig,
+                        ResourceManager, SipcReader, code_fingerprint)
+from repro.core import fingerprint, kdispatch as kd, ops, vkernels, zarquet
+from repro.core.arrow import Column, Table, pack_validity
+from repro.kernels import relational as rel
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+_M64 = (1 << 64) - 1
+
+
+@pytest.fixture
+def pallas_backend(monkeypatch):
+    monkeypatch.setenv("ZERROW_KERNEL_BACKEND", "pallas")
+    yield
+    kd.reset_demotions()
+
+
+# ---------------------------------------------------------------------------
+# per-row naive references (pure Python ints — no numpy accumulation)
+# ---------------------------------------------------------------------------
+
+def _py_mix64(h: int) -> int:
+    h ^= h >> 30
+    h = (h * 0xBF58476D1CE4E5B9) & _M64
+    h ^= h >> 27
+    h = (h * 0x94D049BB133111EB) & _M64
+    return h ^ (h >> 31)
+
+
+def _py_bits(v, dtype) -> int:
+    if np.issubdtype(dtype, np.floating):
+        if v == 0:
+            v = abs(v) * 0            # -0.0 canonicalizes to +0.0
+        return int(np.asarray(v, dtype).view(f"u{np.dtype(dtype).itemsize}"))
+    return int(np.asarray(v, dtype).view(f"u{np.dtype(dtype).itemsize}"))
+
+
+def py_hash_fixed(values: np.ndarray) -> np.ndarray:
+    g = 0x9E3779B97F4A7C15
+    return np.array([_py_mix64(_py_bits(v, values.dtype) ^ g)
+                     for v in values], dtype=np.uint64)
+
+
+def py_combine(col_hashes, n) -> np.ndarray:
+    g = 0x9E3779B97F4A7C15
+    out = []
+    for i in range(n):
+        h = g
+        for col in col_hashes:
+            h = _py_mix64((h * g ^ int(col[i])) & _M64)
+        out.append(h)
+    return np.array(out, dtype=np.uint64) if n else np.empty(0, np.uint64)
+
+
+def py_segreduce(op, values, order, starts, valid):
+    """Per-group loop reference for the integer reducers; returns
+    (vals, counts) in the reducer's output dtype contract."""
+    n = len(order)
+    ends = list(starts[1:]) + [n]
+    vals, counts = [], []
+    v = values.astype(np.uint8) if values.dtype == np.bool_ else values
+    acc_t = np.uint64 if v.dtype == np.uint64 else np.int64
+    for s, e in zip(starts, ends):
+        rows = [order[i] for i in range(s, e)
+                if valid is None or valid[order[i]]]
+        counts.append(len(rows))
+        if op == "count":
+            vals.append(len(rows))
+        elif op == "sum":
+            t = 0
+            for r in rows:
+                t = int(np.asarray(t, acc_t) + np.asarray(v[r], acc_t)
+                        .astype(acc_t))  # wrap like the kernel
+            vals.append(np.asarray(t % (1 << 64) if acc_t == np.uint64
+                                   else t, acc_t))
+        elif op == "min":
+            vals.append(min((v[r] for r in rows),
+                            default=vkernels._dtype_max(v.dtype)))
+        else:
+            vals.append(max((v[r] for r in rows),
+                            default=vkernels._dtype_min(v.dtype)))
+    out_t = np.int64 if op == "count" else (
+        acc_t if op == "sum" else v.dtype)
+    return (np.array(vals, dtype=out_t) if vals else np.empty(0, out_t),
+            np.array(counts, dtype=np.int64))
+
+
+def assert_bits(got, want, msg=""):
+    gv, gc = got if isinstance(got, tuple) else (got, None)
+    wv, wc = want if isinstance(want, tuple) else (want, None)
+    assert gv.dtype == wv.dtype, f"{msg}: dtype {gv.dtype} != {wv.dtype}"
+    assert np.array_equal(gv, wv, equal_nan=gv.dtype.kind == "f"), \
+        f"{msg}: values diverge"
+    if gc is not None:
+        assert gc.dtype == wc.dtype and np.array_equal(gc, wc), \
+            f"{msg}: counts diverge"
+
+
+# ---------------------------------------------------------------------------
+# hashing: pallas-interpret == numpy == per-row python
+# ---------------------------------------------------------------------------
+
+_HASH_ARRAYS = {
+    "int32": np.array([0, -1, 5, 2**31 - 1, -2**31], np.int32),
+    "int64": np.array([0, -1, 2**62, -2**62, 7], np.int64),
+    "uint64": np.array([0, 1, 2**63, 2**64 - 1], np.uint64),
+    "float64": np.array([0.0, -0.0, 1.5, -1.5, np.nan, np.inf,
+                         -np.inf, 1e-300], np.float64),
+    "float32": np.array([0.0, -0.0, 2.5, np.nan], np.float32),
+    "empty": np.empty(0, np.int64),
+}
+
+
+@pytest.mark.parametrize("name", sorted(_HASH_ARRAYS))
+def test_hash_fixed_triple_identical(name):
+    v = _HASH_ARRAYS[name]
+    ref = vkernels.hash_fixed(v)
+    assert_bits(rel.hash_fixed(v), ref, f"pallas hash_fixed[{name}]")
+    assert_bits(ref, py_hash_fixed(v), f"numpy hash_fixed[{name}]")
+
+
+def test_hash_fixed_large_blocked():
+    # spans multiple kernel blocks, with -0.0/NaN sprinkled in
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(5001)
+    v[rng.random(5001) < 0.1] = -0.0
+    v[rng.random(5001) < 0.05] = np.nan
+    assert_bits(rel.hash_fixed(v), vkernels.hash_fixed(v))
+
+
+def test_combine_hashes_triple_identical():
+    rng = np.random.default_rng(1)
+    n = 700
+    hs = [rng.integers(0, 1 << 64, n, dtype=np.uint64) for _ in range(3)]
+    ref = vkernels.combine_hashes(hs, n)
+    assert_bits(rel.combine_hashes(hs, n), ref)
+    assert_bits(ref, py_combine(hs, n))
+    # order-sensitive: reversing the columns must change the bits
+    assert not np.array_equal(ref, rel.combine_hashes(hs[::-1], n))
+    # zero-column and zero-row edges match numpy exactly
+    assert_bits(rel.combine_hashes([], 4), vkernels.combine_hashes([], 4))
+    zero = [np.empty(0, np.uint64)] * 3
+    assert_bits(rel.combine_hashes(zero, 0),
+                vkernels.combine_hashes(zero, 0))
+
+
+def test_hash_keys_fused_matches_composition():
+    rng = np.random.default_rng(2)
+    n = 3000
+    keys = [rng.integers(-9, 9, n).astype(np.int64),
+            (rng.integers(0, 5, n).astype(np.float64) / 2),
+            rng.integers(0, 1 << 64, n, dtype=np.uint64)]
+    keys[1][rng.random(n) < 0.2] = -0.0
+    assert_bits(rel.hash_keys(keys, n), vkernels.hash_keys(keys, n))
+    # var-length keys are structurally numpy-only: the fused kernel
+    # refuses them, the dispatcher routes them
+    c = Column.from_strings(["a", "bb", ""])
+    with pytest.raises(TypeError):
+        rel.hash_keys([(c.offsets, c.values)], 3)
+
+
+def test_dispatch_hash_keys_var_length_routes_to_numpy(pallas_backend):
+    c = Column.from_strings(["a", "bb", "", "a"])
+    want = vkernels.hash_keys([(c.offsets, c.values)], 4)
+    assert_bits(kd.hash_keys([(c.offsets, c.values)], 4), want)
+
+
+# ---------------------------------------------------------------------------
+# gathers
+# ---------------------------------------------------------------------------
+
+def test_filter_join_gather_triple_identical():
+    rng = np.random.default_rng(3)
+    sel = np.nonzero(rng.random(400) < 0.5)[0]
+    idx = rng.integers(-1, len(sel), 900).astype(np.int64)
+    ref = vkernels.filter_join_gather(sel, idx)
+    assert_bits(rel.filter_join_gather(sel, idx), ref)
+    naive = np.array([-1 if i < 0 else sel[i] for i in idx], np.int64)
+    assert_bits(ref, naive)
+    # no-sentinel fast path and empty edges
+    pos = np.abs(idx[idx >= 0])
+    assert_bits(rel.filter_join_gather(sel, pos),
+                vkernels.filter_join_gather(sel, pos))
+    empty = np.empty(0, np.int64)
+    assert_bits(rel.filter_join_gather(sel, empty),
+                vkernels.filter_join_gather(sel, empty))
+    all_miss = np.full(5, -1, np.int64)
+    assert_bits(rel.filter_join_gather(empty, all_miss),
+                vkernels.filter_join_gather(empty, all_miss))
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.int64, np.float64])
+def test_gather_payload_matches_naive(dtype):
+    rng = np.random.default_rng(4)
+    src = rng.integers(-99, 99, 300).astype(dtype)
+    idx = rng.integers(-1, 300, 700).astype(np.int64)
+    got = rel.gather_payload(src, idx, 0)
+    naive = np.array([src[i] if i >= 0 else 0 for i in idx], dtype)
+    assert_bits(got, naive)
+    assert_bits(kd.gather_payload(src, idx, 0), naive)  # numpy arm
+    assert rel.gather_payload(src, np.empty(0, np.int64)).shape == (0,)
+    assert_bits(rel.gather_payload(np.empty(0, dtype),
+                                   np.full(3, -1, np.int64), 0),
+                np.zeros(3, dtype))
+
+
+# ---------------------------------------------------------------------------
+# segment reducers: dtype sweep x null fraction x group shape
+# ---------------------------------------------------------------------------
+
+def _values(rng, n, dtype):
+    if dtype == "bool":
+        return rng.random(n) < 0.5
+    if dtype == "uint64":
+        return rng.integers(0, 1 << 64, n, dtype=np.uint64)
+    return rng.integers(-100, 100, n).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", ["int32", "int64", "uint64", "bool"])
+@pytest.mark.parametrize("null_frac", [0.0, 0.3, 1.0])
+@pytest.mark.parametrize("shape", ["spread", "dup_heavy", "empty"])
+def test_grouped_reducers_triple_identical(dtype, null_frac, shape):
+    rng = np.random.default_rng(hash((dtype, null_frac, shape)) % 2**32)
+    n = 0 if shape == "empty" else 1500
+    card = 3 if shape == "dup_heavy" else 200
+    codes = rng.integers(0, card, n)
+    order, starts = vkernels.group_ranges([codes])
+    v = _values(rng, n, dtype)
+    valid = None if null_frac == 0.0 else rng.random(n) >= null_frac
+    for op, pf, nf in (("count", rel.grouped_count, vkernels.grouped_count),
+                       ("sum", rel.grouped_sum, vkernels.grouped_sum),
+                       ("min", rel.grouped_min, vkernels.grouped_min),
+                       ("max", rel.grouped_max, vkernels.grouped_max)):
+        ref = nf(v, order, starts, valid)
+        assert_bits(pf(v, order, starts, valid), ref,
+                    f"pallas grouped_{op}[{dtype},{null_frac},{shape}]")
+        assert_bits(ref, py_segreduce(op, v, order, starts, valid),
+                    f"numpy grouped_{op}[{dtype},{null_frac},{shape}]")
+
+
+def test_grouped_sum_uint64_wraps_like_numpy():
+    # a group total past 2**64 wraps mod 2**64 on both backends
+    v = np.array([2**63, 2**63, 5], np.uint64)
+    order, starts = vkernels.group_ranges([np.zeros(3, np.int64)])
+    assert_bits(rel.grouped_sum(v, order, starts),
+                vkernels.grouped_sum(v, order, starts))
+
+
+def test_grouped_reducers_many_groups_blocked():
+    # group count spans multiple output blocks of the kernel grid
+    rng = np.random.default_rng(11)
+    n, card = 4000, 1300
+    codes = rng.integers(0, card, n)
+    order, starts = vkernels.group_ranges([codes])
+    v = rng.integers(-1000, 1000, n).astype(np.int64)
+    valid = rng.random(n) >= 0.2
+    for pf, nf in ((rel.grouped_sum, vkernels.grouped_sum),
+                   (rel.grouped_min, vkernels.grouped_min),
+                   (rel.grouped_max, vkernels.grouped_max),
+                   (rel.grouped_count, vkernels.grouped_count)):
+        assert_bits(pf(v, order, starts, valid),
+                    nf(v, order, starts, valid))
+
+
+# ---------------------------------------------------------------------------
+# ineligible kernels stay on numpy; the registry documents why
+# ---------------------------------------------------------------------------
+
+def test_float_reducers_are_registry_ineligible():
+    for key in ("grouped_sum:float", "grouped_min:float",
+                "grouped_max:float", "grouped_mean"):
+        e = kd.REGISTRY[key]
+        assert not e.eligible and e.reason
+    assert "order" in kd.REGISTRY["grouped_sum:float"].reason
+    assert not kd.eligible("grouped_sum", np.float64)
+    assert kd.eligible("grouped_sum", np.int64)
+    assert not kd.eligible("no_such_kernel")    # unknown => numpy
+
+
+def test_float_sum_dispatch_stays_numpy(pallas_backend):
+    """With the pallas backend active, a float grouped_sum must serve
+    the numpy bits — the sequential np.bincount accumulation — and the
+    pallas port must refuse float input outright (it cannot honor the
+    order contract)."""
+    rng = np.random.default_rng(5)
+    n = 2000
+    # adversarial magnitudes: parallel reordering WOULD change the bits
+    v = rng.standard_normal(n) * 10.0 ** rng.integers(-12, 12, n)
+    codes = rng.integers(0, 7, n)
+    order, starts = vkernels.group_ranges([codes])
+    valid = rng.random(n) >= 0.2
+    want = vkernels.grouped_sum(v, order, starts, valid)
+    assert_bits(kd.GROUPED_REDUCERS["sum"](v, order, starts, valid), want)
+    assert_bits(kd.GROUPED_REDUCERS["mean"](v, order, starts, valid),
+                vkernels.grouped_mean(v, order, starts, valid))
+    with pytest.raises(TypeError):
+        rel.grouped_sum(v, order, starts, valid)
+    with pytest.raises(TypeError):
+        rel.grouped_min(v, order, starts, valid)
+    with pytest.raises(TypeError):
+        rel.grouped_max(v, order, starts, valid)
+
+
+def test_self_check_admits_current_kernels(pallas_backend):
+    res = kd.self_check()
+    demoted = {k: v for k, v in res.items() if v.startswith("demoted")}
+    assert not demoted, demoted
+    assert not kd.demoted()
+    assert res["hash_fixed"] == "ok"
+    assert res["grouped_sum:int"] == "ok"
+    assert res["grouped_sum:float"].startswith("ineligible")
+
+
+def test_self_check_demotes_bit_regressions(pallas_backend, monkeypatch):
+    """The registry rejects a kernel whose differential fails: corrupt
+    the pallas grouped_sum, prove self_check demotes it, dispatch falls
+    back to numpy bits, and the demotion changes the group_by cone
+    fingerprint (a demoted backend must not serve stale cones)."""
+    fp_before = code_fingerprint(ops.group_by)
+
+    def bad_grouped_sum(values, order, starts, valid=None, **kw):
+        vals, counts = vkernels.grouped_sum(values, order, starts, valid)
+        return vals + vals.dtype.type(1), counts       # off by one
+
+    monkeypatch.setattr(rel, "grouped_sum", bad_grouped_sum)
+    fp_patched = code_fingerprint(ops.group_by)
+    assert fp_patched != fp_before, "kernel edit must change the cone"
+    res = kd.self_check()
+    assert res["grouped_sum:int"].startswith("demoted")
+    assert "grouped_sum:int" in kd.demoted()
+    assert not kd.eligible("grouped_sum", np.int64)
+    # dispatch now serves numpy bits despite the corrupted kernel
+    rng = np.random.default_rng(6)
+    v = rng.integers(-50, 50, 500).astype(np.int64)
+    order, starts = vkernels.group_ranges([rng.integers(0, 9, 500)])
+    assert_bits(kd.GROUPED_REDUCERS["sum"](v, order, starts),
+                vkernels.grouped_sum(v, order, starts))
+    assert code_fingerprint(ops.group_by) != fp_patched, \
+        "a demotion must change the cone (numpy now computes it)"
+    kd.reset_demotions()
+    assert kd.eligible("grouped_sum", np.int64)
+    assert code_fingerprint(ops.group_by) == fp_patched
+
+
+def test_unavailable_pallas_warns_once_and_serves_numpy(monkeypatch):
+    monkeypatch.setenv("ZERROW_KERNEL_BACKEND", "pallas")
+    monkeypatch.setattr(kd, "_pallas_mod", None)
+    monkeypatch.setattr(kd, "_pallas_error",
+                        ImportError("jax not installed"))
+    monkeypatch.setattr(kd, "_warned_fallback", False)
+    v = np.arange(10, dtype=np.int64)
+    with pytest.warns(RuntimeWarning, match="ZERROW_KERNEL_BACKEND"):
+        assert kd.active_backend() == "numpy"
+    assert_bits(kd.hash_fixed(v), vkernels.hash_fixed(v))
+    # loud once, not per call
+    import warnings as w
+    with w.catch_warnings():
+        w.simplefilter("error")
+        assert kd.active_backend() == "numpy"
+
+
+def test_unknown_backend_name_raises(monkeypatch):
+    monkeypatch.setenv("ZERROW_KERNEL_BACKEND", "cuda")
+    with pytest.raises(ValueError, match="ZERROW_KERNEL_BACKEND"):
+        kd.requested_backend()
+
+
+# ---------------------------------------------------------------------------
+# fingerprint pinning: backend flips + kernel edits invalidate the cones
+# ---------------------------------------------------------------------------
+
+def test_backend_flip_changes_only_relational_fingerprints(monkeypatch):
+    relational_ops = (ops.join, ops.group_by, ops.filter_join,
+                      ops.join_node, ops.group_by_node,
+                      ops.filter_join_node)
+    unrelated = (ops.filter_rows, ops.select_columns, ops.sort_by,
+                 ops.add_column)
+    monkeypatch.setenv("ZERROW_KERNEL_BACKEND", "numpy")
+    fp_np = [code_fingerprint(f) for f in relational_ops + unrelated]
+    assert all(fp_np)
+    monkeypatch.setenv("ZERROW_KERNEL_BACKEND", "pallas")
+    fp_pl = [code_fingerprint(f) for f in relational_ops + unrelated]
+    assert all(fp_pl)
+    k = len(relational_ops)
+    assert all(a != b for a, b in zip(fp_np[:k], fp_pl[:k])), \
+        "backend flip did not invalidate a relational op"
+    assert fp_np[k:] == fp_pl[k:], \
+        "backend flip leaked into non-relational ops"
+
+
+def test_pallas_kernel_edit_invalidates_join_cone(monkeypatch):
+    monkeypatch.setenv("ZERROW_KERNEL_BACKEND", "pallas")
+    fp1 = code_fingerprint(ops.join)
+    gb1 = code_fingerprint(ops.group_by)
+
+    def other_hash_fixed(values, *, interpret=None):
+        return vkernels.hash_fixed(values)
+
+    monkeypatch.setattr(rel, "hash_fixed", other_hash_fixed)
+    assert code_fingerprint(ops.join) != fp1, \
+        "editing a pallas hash kernel must invalidate join cones"
+    assert code_fingerprint(ops.group_by) == gb1, \
+        "the hash kernel is not a group_by dependency"
+
+
+def _select_amount(tables):
+    return ops.select_columns(tables[0], ["amount"])
+
+
+def test_backend_flip_recomputes_exactly_join_groupby_cone(
+        tmp_path, monkeypatch):
+    """Manifest adoption across a backend flip: sources and the
+    non-relational node adopt from the cache, the join + group_by cone
+    re-executes — and both backends' outputs are bit-identical, so the
+    recompute converges back to the same aggregates."""
+    data = str(tmp_path / "data")
+    cache_root = str(tmp_path / "cache")
+    os.makedirs(data)
+    rng = np.random.default_rng(7)
+    zarquet.write_table(os.path.join(data, "cust.zq"), Table.from_pydict({
+        "cust": np.arange(64, dtype=np.int64),
+        "country": [f"c{i % 5}" for i in range(64)]}))
+    zarquet.write_table(os.path.join(data, "orders.zq"),
+                        Table.from_pydict({
+        "cust": rng.integers(0, 72, 400).astype(np.int64),
+        "amount": rng.integers(0, 10_000, 400).astype(np.int64)}))
+
+    def dag():
+        est = 1 << 22
+        return DAG([
+            NodeSpec("orders", source=os.path.join(data, "orders.zq"),
+                     est_mem=est),
+            NodeSpec("cust", source=os.path.join(data, "cust.zq"),
+                     est_mem=est, dict_columns=("country",)),
+            NodeSpec("amounts", fn=_select_amount, deps=["orders"],
+                     est_mem=est, keep_output=True),
+            NodeSpec("join", fn=functools.partial(
+                ops.join_node, on="cust", how="left"),
+                deps=["orders", "cust"], est_mem=est),
+            NodeSpec("agg", fn=functools.partial(
+                ops.group_by_node, keys="country",
+                aggs={"total": ("amount", "sum"),
+                      "hi": ("amount", "max"),
+                      "n": ("amount", "count")}),
+                deps=["join"], est_mem=est, keep_output=True),
+        ], name="star")
+
+    def run(backend):
+        monkeypatch.setenv("ZERROW_KERNEL_BACKEND", backend)
+        fingerprint.reset_caches()
+        store = BufferStore(backing="file", root=cache_root,
+                            swap_dir=os.path.join(data, "swap"))
+        rm = ResourceManager(store, RMConfig(policy="adaptive",
+                                             cache_root=cache_root))
+        ex = Executor(store, rm)
+        d = dag()
+        ex.run([d])
+        out = SipcReader(store).read_table(
+            d.nodes["agg"].output).to_pydict()
+        counts = (ex.node_runs, ex.cache_hits,
+                  {n: s.status for n, s in d.nodes.items()})
+        store.close()
+        return out, counts
+
+    out1, (runs1, hits1, _) = run("numpy")
+    assert (runs1, hits1) == (5, 0)
+    out2, (runs2, hits2, _) = run("numpy")         # warm, same backend
+    assert out2 == out1
+    assert (runs2, hits2) == (0, 5)
+    out3, (runs3, hits3, states) = run("pallas")   # flip backend
+    assert out3 == out1, "pallas cone diverged from the numpy bits"
+    assert (runs3, hits3) == (2, 3), \
+        f"backend flip should re-run exactly join+agg, got {states}"
+    assert states["orders"] == states["cust"] == states["amounts"] \
+        == "cached"
+    out4, (runs4, hits4, _) = run("numpy")         # old manifests live on
+    assert out4 == out1
+    assert (runs4, hits4) == (0, 5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: join+group_by tables bit-identical across backends
+# ---------------------------------------------------------------------------
+
+def test_join_group_by_tables_bit_identical_across_backends(monkeypatch):
+    rng = np.random.default_rng(8)
+    n, m = 3000, 150
+    lvalid = pack_validity(rng.random(n) >= 0.1)
+    left = Table.from_pydict({
+        "cust": Column.primitive(
+            rng.integers(0, m + 20, n).astype(np.int64), lvalid),
+        "amount": rng.integers(-500, 500, n).astype(np.int64),
+        "f": np.where(rng.random(n) < 0.1, -0.0, rng.standard_normal(n)),
+        "flag": rng.random(n) < 0.5})
+    right = Table.from_pydict({
+        "cust": np.arange(m, dtype=np.int64),
+        "country": [f"c{i % 7}" for i in range(m)]})
+    aggs = {"total": ("amount", "sum"), "lo": ("amount", "min"),
+            "hi": ("amount", "max"), "n": ("amount", "count"),
+            "fmean": ("f", "mean"), "fsum": ("f", "sum"),
+            "any": ("flag", "max")}
+
+    outs, raw = {}, {}
+    for backend in ("numpy", "pallas"):
+        monkeypatch.setenv("ZERROW_KERNEL_BACKEND", backend)
+        j = ops.join(left, right, on="cust", how="left")
+        g = ops.group_by(j, "country", aggs)
+        outs[backend] = g.to_pydict()
+        raw[backend] = {
+            f.name: c._logical()
+            for f, c in zip(g.batches[0].schema.fields,
+                            g.batches[0].columns)
+            if c.type.is_primitive}
+    assert outs["numpy"] == outs["pallas"]
+    for name, va in raw["numpy"].items():        # raw buffer bits too
+        vb = raw["pallas"][name]
+        assert va.dtype == vb.dtype, name
+        assert np.array_equal(va, vb, equal_nan=va.dtype.kind == "f"), \
+            name
+
+
+# ---------------------------------------------------------------------------
+# hypothesis stress lane: widen the differential's input space
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.stress
+    @settings(max_examples=int(os.environ.get("ZERROW_HYP_EXAMPLES",
+                                              "25")), deadline=None)
+    @given(st.integers(0, 2**31 - 1),
+           st.sampled_from(["int32", "int64", "uint64", "bool"]),
+           st.integers(0, 60), st.floats(0.0, 1.0), st.integers(1, 9))
+    def test_grouped_reducers_match_hypothesis(seed, dtype, n, null_frac,
+                                               card):
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(0, card, n)
+        order, starts = vkernels.group_ranges([codes]) if n else \
+            (np.empty(0, np.int64), np.empty(0, np.int64))
+        v = _values(rng, n, dtype)
+        valid = None if null_frac == 0 else rng.random(n) >= null_frac
+        for pf, nf in ((rel.grouped_count, vkernels.grouped_count),
+                       (rel.grouped_sum, vkernels.grouped_sum),
+                       (rel.grouped_min, vkernels.grouped_min),
+                       (rel.grouped_max, vkernels.grouped_max)):
+            assert_bits(pf(v, order, starts, valid),
+                        nf(v, order, starts, valid))
+
+    @pytest.mark.stress
+    @settings(max_examples=int(os.environ.get("ZERROW_HYP_EXAMPLES",
+                                              "25")), deadline=None)
+    @given(st.integers(0, 2**31 - 1),
+           st.sampled_from(["int32", "int64", "uint64", "float64"]),
+           st.integers(0, 80))
+    def test_hash_and_gather_match_hypothesis(seed, dtype, n):
+        rng = np.random.default_rng(seed)
+        v = _values(rng, n, dtype) if dtype != "float64" else \
+            np.where(rng.random(n) < 0.2, -0.0, rng.standard_normal(n))
+        assert_bits(rel.hash_fixed(v), vkernels.hash_fixed(v))
+        sel = np.nonzero(rng.random(n) < 0.5)[0]
+        idx = rng.integers(-1, max(len(sel), 1), n).astype(np.int64) \
+            if len(sel) else np.full(n, -1, np.int64)
+        assert_bits(rel.filter_join_gather(sel, idx),
+                    vkernels.filter_join_gather(sel, idx))
